@@ -1,0 +1,69 @@
+"""Wave-engine benchmarks: device-step latency, wave-size/learning
+tradeoff, and kernel microbenchmarks (Pallas vs jnp reference)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import pack_bitmap
+from repro.core.vectorized import match_vectorized
+from repro.data.graph_gen import trap_graph, yeast_like_graph, query_set
+from repro.kernels.ops import bitmap_spmm_op, flash_attention_op, refine_bitmap_op
+
+
+def _time_call(fn, *args, reps=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(csv_rows: list, budget_s: float = 90.0) -> None:
+    t0 = time.time()
+    # --- wave-size / learning-latency tradeoff ---------------------------
+    q, g = trap_graph(n_b=80, n_c=80, n_good=2, tail_len=2, seed=0)
+    for ws, kpr in ((16, 4), (64, 8), (256, 16)):
+        r = match_vectorized(q, g, limit=None, wave_size=ws, kpr=kpr)
+        csv_rows.append((f"engine_trap80_ws{ws}",
+                         r.stats.wall_time_s * 1e6,
+                         f"rows={r.stats.rows_created};"
+                         f"waves={r.stats.waves};"
+                         f"prunes={r.stats.deadend_prunes}"))
+    # --- engine on matched-statistics workload ---------------------------
+    data = yeast_like_graph(0)
+    queries = query_set(data, 8, 3, seed=77)
+    tot = 0.0
+    rows = 0
+    for qq in queries:
+        r = match_vectorized(qq, data, limit=1000, wave_size=256, kpr=16)
+        tot += r.stats.wall_time_s
+        rows += r.stats.rows_created
+    csv_rows.append(("engine_yeastlike_q8", tot * 1e6 / len(queries),
+                     f"rows={rows}"))
+
+    # --- kernel microbenchmarks (interpret mode vs jnp oracle) -----------
+    rng = np.random.default_rng(0)
+    v = 2048
+    dense = rng.random((v, v)) < 0.01
+    adj = jnp.asarray(pack_bitmap(dense))
+    cand = jnp.asarray(pack_bitmap(rng.random((1, v)) < 0.5)[0])
+    frontier = jnp.asarray(rng.integers(0, v, (256, 16)).astype(np.int32))
+    active = jnp.asarray((rng.random(16) < 0.5).astype(np.int32))
+    us = _time_call(lambda *a: refine_bitmap_op(*a, backend="jnp"),
+                    adj, cand, frontier, active)
+    csv_rows.append(("kernel_refine_jnp_v2048_f256", us, "backend=jnp"))
+    if time.time() - t0 < budget_s:
+        x = jnp.asarray(rng.standard_normal((v, 128)), jnp.float32)
+        us = _time_call(lambda *a: bitmap_spmm_op(*a, backend="jnp"),
+                        adj, x)
+        csv_rows.append(("kernel_spmm_jnp_v2048_d128", us, "backend=jnp"))
+        qkv = jnp.asarray(rng.standard_normal((1, 4, 512, 64)),
+                          jnp.float32)
+        us = _time_call(
+            lambda a: flash_attention_op(a, a, a, backend="jnp"), qkv)
+        csv_rows.append(("kernel_flashattn_jnp_s512", us, "backend=jnp"))

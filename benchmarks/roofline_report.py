@@ -1,0 +1,46 @@
+"""Aggregate the dry-run JSONs into the §Roofline table
+(experiments/roofline.csv + CSV rows for the harness)."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+
+def run(csv_rows: list, dryrun_dir: str = "experiments/dryrun") -> None:
+    d = pathlib.Path(dryrun_dir)
+    if not d.exists():
+        csv_rows.append(("roofline_missing", 0.0,
+                         "run repro.launch.dryrun first"))
+        return
+    recs = []
+    for p in sorted(d.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") != "ok":
+            csv_rows.append((f"roofline_{p.stem}", 0.0,
+                             f"status={r.get('status')}"))
+            continue
+        recs.append(r)
+        dom = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        csv_rows.append((
+            f"roofline_{r['arch']}__{r['shape']}__{r['mesh']}",
+            dom * 1e6,
+            f"bottleneck={r['bottleneck']};"
+            f"tc={r['t_compute_s']:.3e};tm={r['t_memory_s']:.3e};"
+            f"tx={r['t_collective_s']:.3e};"
+            f"useful={r['useful_flops_frac'] if r['useful_flops_frac'] else ''}"))
+    lines = ["arch,shape,mesh,t_compute_s,t_memory_s,t_collective_s,"
+             "bottleneck,useful_flops_frac,mem_temp_bytes"]
+    for r in recs:
+        mem = ""
+        if r.get("memory_analysis"):
+            import re
+            m = re.search(r"temp_size_in_bytes=(\d+)",
+                          r["memory_analysis"])
+            mem = m.group(1) if m else ""
+        lines.append(
+            f"{r['arch']},{r['shape']},{r['mesh']},"
+            f"{r['t_compute_s']:.6e},{r['t_memory_s']:.6e},"
+            f"{r['t_collective_s']:.6e},{r['bottleneck']},"
+            f"{r['useful_flops_frac'] or ''},{mem}")
+    pathlib.Path("experiments/roofline.csv").write_text(
+        "\n".join(lines) + "\n")

@@ -1,0 +1,83 @@
+"""Where the paper's engine plugs into the model zoo: subgraph-motif
+counting as structural features for a GCN node classifier.
+
+For every vertex, count how many triangle / path-motif embeddings touch
+it (computed exactly by the matcher), append these as node features, and
+train the gcn-cora smoke config on a synthetic citation-like graph.
+
+    PYTHONPATH=src python examples/motif_features_gnn.py
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "src"))
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.backtrack import backtrack_deadend
+from repro.core.graph import Graph
+from repro.data.graph_gen import ba_labeled_graph
+from repro.models import gnn
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+def motif_counts(data: Graph, motifs: list[Graph]) -> np.ndarray:
+    counts = np.zeros((data.n, len(motifs)), np.float32)
+    for mi, motif in enumerate(motifs):
+        res = backtrack_deadend(motif, data, limit=20000)
+        for emb in res.embeddings:
+            for v in emb:
+                counts[v, mi] += 1.0
+    return counts / np.maximum(counts.max(axis=0, keepdims=True), 1.0)
+
+
+def main():
+    data = ba_labeled_graph(200, 3, 3, extra_edges=150, seed=1)
+    # motifs over the same label alphabet: triangle and 3-path
+    tri = Graph.from_edges(3, [(0, 1), (1, 2), (2, 0)], [0, 0, 0], 3)
+    path = Graph.from_edges(3, [(0, 1), (1, 2)], [0, 1, 0], 3)
+    feats = motif_counts(data, [tri, path])
+    print(f"motif features: {feats.shape}, "
+          f"triangles touch {int((feats[:, 0] > 0).sum())} vertices")
+
+    # labels: whether the vertex participates in a triangle (learnable
+    # from structure) — train GCN with and without motif features
+    labels = jnp.asarray((feats[:, 0] > 0).astype(np.int32))
+    deg = np.asarray(data.degrees, np.float32)[:, None]
+    base_x = np.concatenate([deg / deg.max(),
+                             np.eye(3, dtype=np.float32)[data.labels]], 1)
+    ei = np.stack([np.concatenate([data.indices,
+                                   np.repeat(np.arange(data.n),
+                                             data.degrees)]),
+                   np.concatenate([np.repeat(np.arange(data.n),
+                                             data.degrees),
+                                   data.indices])]).astype(np.int32)
+    for name, x in (("plain", base_x),
+                    ("plain+motif", np.concatenate([base_x, feats], 1))):
+        import dataclasses
+        cfg = gnn.GNNConfig(name="demo", kind="gcn", n_layers=2,
+                            d_in=x.shape[1], d_hidden=16, n_classes=2)
+        params = gnn.gnn_init(jax.random.key(0), cfg)
+        ocfg = AdamWConfig(lr=1e-2, warmup_steps=5, total_steps=100)
+        opt = adamw_init(params, ocfg)
+        xj, eij = jnp.asarray(x), jnp.asarray(ei)
+
+        @jax.jit
+        def step(params, opt):
+            loss, g = jax.value_and_grad(
+                lambda p: gnn.gnn_loss(p, cfg, xj, eij, labels))(params)
+            params, opt = adamw_update(params, g, opt, ocfg)
+            return params, opt, loss
+
+        for _ in range(100):
+            params, opt, loss = step(params, opt)
+        pred = gnn.gnn_forward_full(params, cfg, xj, eij).argmax(1)
+        acc = float((pred == labels).mean())
+        print(f"{name:13s}: final loss {float(loss):.4f} acc {acc:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Train a reduced qwen3-family LM for a few hundred steps with
+checkpoint/restart (thin wrapper over the production driver).
+
+    PYTHONPATH=src python examples/train_lm.py
+"""
+import pathlib
+import sys
+import tempfile
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "src"))
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ckpt = tempfile.mkdtemp(prefix="repro_lm_")
+    train_main(["--arch", "qwen3-0.6b", "--scale", "smoke",
+                "--steps", "200", "--batch", "8", "--seq", "128",
+                "--ckpt-dir", ckpt, "--ckpt-every", "50",
+                "--log-every", "20"])
+    print(f"checkpoints in {ckpt}")
+
+
+if __name__ == "__main__":
+    main()

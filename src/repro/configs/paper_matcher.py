@@ -1,0 +1,40 @@
+"""The paper's own workload as an 'architecture': the wave-engine device
+program over production-scale matching instances.
+
+Shape cells size the device arrays of ``core.engine_step.expand_wave``:
+the data-graph bitmap, wave width, and dead-end table. These are the
+dry-run/roofline cells for the paper's technique itself.
+"""
+import dataclasses
+
+from .common import ArchSpec, ShapeCell
+
+
+@dataclasses.dataclass(frozen=True)
+class MatcherConfig:
+    name: str
+    n_vertices: int          # data graph |V|
+    wave_size: int
+    kpr: int
+    n_query_max: int = 64
+
+
+FULL = MatcherConfig(name="paper-matcher", n_vertices=1_048_576,
+                     wave_size=8192, kpr=16)
+
+SMOKE = MatcherConfig(name="matcher-smoke", n_vertices=512,
+                      wave_size=64, kpr=4)
+
+
+def spec() -> ArchSpec:
+    shapes = (
+        ShapeCell("yeast_scale", "matcher",
+                  dict(n_vertices=4096, wave_size=4096, kpr=16)),
+        ShapeCell("web_scale", "matcher",
+                  dict(n_vertices=1_048_576, wave_size=8192, kpr=16)),
+    )
+    return ArchSpec(arch_id="paper-matcher", family="matcher", config=FULL,
+                    smoke_config=SMOKE, shapes=shapes,
+                    notes="expand_wave lowered on the production mesh; "
+                          "frontier sharded over data axis, graph bitmap "
+                          "+ dead-end table sharded over model axis")

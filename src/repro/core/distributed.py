@@ -1,0 +1,207 @@
+"""Distributed subgraph matching: search-tree partitioning, pattern
+sharing, work stealing, checkpoint/restart, elastic repartitioning.
+
+Parallel model (DESIGN.md §3):
+  * the root-candidate space of one query is range-partitioned into
+    shards (mesh "model" axis / workers);
+  * each shard runs its own :class:`WaveEngine` waves with a local
+    dead-end table — correctness never depends on other shards (patterns
+    only prune);
+  * periodically, shards exchange their most recently learned patterns —
+    a *lossy but sound* compressed collective (the analogue of gradient
+    compression: pruning power degrades gracefully with compression);
+  * a shard that finishes early steals unprocessed root ranges from the
+    most-loaded shard (straggler mitigation);
+  * shard progress (done ranges, found embeddings, pattern tables) is
+    checkpointable; restore may change the shard count (elasticity).
+
+This container has one physical device, so shards execute as a
+round-robin cooperative schedule on it — the scheduling, stealing, merge,
+and checkpoint logic is exactly what a multi-host launcher drives, and is
+what the tests validate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+
+import numpy as np
+
+from .backtrack import MatchResult, SearchStats, _prepare
+from .graph import Graph
+from .vectorized import WaveEngine
+
+
+@dataclasses.dataclass
+class ShardState:
+    shard_id: int
+    pending_ranges: list[tuple[int, int]]   # root-candidate index ranges
+    found: list[np.ndarray]
+    done: bool = False
+
+
+class DistributedMatcher:
+    """Search-tree-partitioned matching with pattern sharing."""
+
+    def __init__(self, data: Graph, n_shards: int = 4,
+                 wave_size: int = 256, kpr: int = 16,
+                 share_patterns: bool = True,
+                 share_top_k: int = 4096):
+        self.data = data
+        self.n_shards = n_shards
+        self.share_patterns = share_patterns
+        self.share_top_k = share_top_k
+        self.engines = [WaveEngine(data, wave_size=wave_size, kpr=kpr)
+                        for _ in range(n_shards)]
+
+    # -- pattern exchange -------------------------------------------------
+    def _merge_tables(self, tables):
+        """Union the shards' *transferable* dead-end patterns.
+
+        The numeric representation's embedding ids (φ) are engine-local,
+        so only μ == 0 patterns — whose match condition Φ[0] == 0 holds in
+        every engine, i.e. 'mapping (pos, v) is dead regardless of
+        ancestors' — may cross shards (soundness; see DESIGN.md §3). On a
+        real mesh this is a hierarchical all-gather (intra-pod ring, then
+        inter-pod) capped at ``share_top_k`` entries per shard: a lossy
+        but sound compressed collective.
+        """
+        import jax.numpy as jnp
+        from .engine_step import TableArrays, store_patterns
+        merged = TableArrays.empty(self.data.n)
+        for t in tables:
+            valid = np.asarray(t.valid) & (np.asarray(t.mu) == 0)
+            pos, vert = np.nonzero(valid)
+            if len(pos) == 0:
+                continue
+            if len(pos) > self.share_top_k:
+                sel = np.random.default_rng(0).choice(
+                    len(pos), self.share_top_k, replace=False)
+                pos, vert = pos[sel], vert[sel]
+            merged = store_patterns(
+                merged,
+                jnp.asarray(pos.astype(np.int32)),
+                jnp.asarray(vert.astype(np.int32)),
+                jnp.asarray(np.asarray(t.phi)[pos, vert]),
+                jnp.asarray(np.asarray(t.mu)[pos, vert]),
+                jnp.asarray(np.asarray(t.mask)[pos, vert]),
+                jnp.ones(len(pos), bool))
+        return merged
+
+    # -- main entry ---------------------------------------------------------
+    def match(self, query: Graph, limit: int | None = 1000,
+              rounds: int = 8, checkpoint_dir: str | None = None
+              ) -> MatchResult:
+        cand_by_pos, order, _, _ = _prepare(query, self.data, None, None)
+        roots = cand_by_pos[0]
+        n = len(roots)
+        stats = SearchStats()
+        if n == 0:
+            return MatchResult([], stats)
+        # range partition of the root candidates
+        bounds = np.linspace(0, n, self.n_shards + 1).astype(int)
+        shards = [ShardState(i, [(int(bounds[i]), int(bounds[i + 1]))], [])
+                  for i in range(self.n_shards)]
+        chunk = max(1, n // (self.n_shards * max(rounds, 1)))
+        embeddings: list[np.ndarray] = []
+        shared_table = None
+
+        def shard_step(sh: ShardState, eng: WaveEngine) -> bool:
+            """Process one stolen-or-own root chunk; True if worked."""
+            if not sh.pending_ranges:
+                return False
+            lo, hi = sh.pending_ranges.pop()
+            take = min(chunk, hi - lo)
+            if hi - lo > take:
+                sh.pending_ranges.append((lo + take, hi))
+            sub_roots = roots[lo:lo + take]
+            # rebuild a query-vertex-indexed candidate list with the
+            # restricted root range (cand_by_pos is position-indexed)
+            sub_cand: list[np.ndarray] = [None] * query.n
+            for d in range(query.n):
+                sub_cand[int(order[d])] = (sub_roots if d == 0
+                                           else cand_by_pos[d])
+            res = eng.match(query, limit=None, cand=sub_cand, order=order,
+                            seed_table=shared_table)
+            sh.found.extend(res.embeddings)
+            stats.recursions += res.stats.recursions
+            stats.deadend_prunes += res.stats.deadend_prunes
+            return True
+
+        round_i = 0
+        while any(sh.pending_ranges for sh in shards):
+            round_i += 1
+            for sh, eng in zip(shards, self.engines):
+                shard_step(sh, eng)
+            # work stealing: idle shards take from the most loaded
+            loads = [sum(hi - lo for lo, hi in sh.pending_ranges)
+                     for sh in shards]
+            for i, sh in enumerate(shards):
+                if not sh.pending_ranges and max(loads) > chunk:
+                    donor = shards[int(np.argmax(loads))]
+                    lo, hi = donor.pending_ranges.pop()
+                    mid = (lo + hi) // 2
+                    if mid > lo:
+                        donor.pending_ranges.append((lo, mid))
+                    sh.pending_ranges.append((mid, hi))
+                    loads = [sum(h - l for l, h in s.pending_ranges)
+                             for s in shards]
+            # pattern exchange
+            if self.share_patterns:
+                tables = [getattr(e, "_table", None) for e in self.engines]
+                tables = [t for t in tables if t is not None]
+                if tables:
+                    shared_table = self._merge_tables(tables)
+            total_found = sum(len(sh.found) for sh in shards)
+            if limit is not None and total_found >= limit:
+                break
+            if checkpoint_dir:
+                self.save_state(checkpoint_dir, query, shards)
+
+        for sh in shards:
+            embeddings.extend(sh.found)
+        # global dedup (ranges are disjoint so this is a no-op safety net)
+        seen = set()
+        uniq = []
+        for e in embeddings:
+            key = e.tobytes()
+            if key not in seen:
+                seen.add(key)
+                uniq.append(e)
+        if limit is not None:
+            uniq = uniq[:limit]
+        stats.found = len(uniq)
+        return MatchResult(uniq, stats)
+
+    # -- checkpoint / elastic restore ---------------------------------------
+    @staticmethod
+    def save_state(path: str, query: Graph, shards: list[ShardState]):
+        p = pathlib.Path(path)
+        p.mkdir(parents=True, exist_ok=True)
+        state = {
+            "shards": [
+                {"shard_id": s.shard_id,
+                 "pending": s.pending_ranges,
+                 "found": [e.tolist() for e in s.found]}
+                for s in shards],
+        }
+        tmp = p / "state.json.tmp"
+        tmp.write_text(json.dumps(state))
+        tmp.rename(p / "state.json")
+
+    @staticmethod
+    def load_state(path: str, n_shards: int) -> list[ShardState]:
+        """Elastic restore: redistribute pending ranges over ``n_shards``
+        (which may differ from the saved shard count)."""
+        state = json.loads((pathlib.Path(path) / "state.json").read_text())
+        pending = []
+        found: list[np.ndarray] = []
+        for s in state["shards"]:
+            pending.extend([tuple(r) for r in s["pending"]])
+            found.extend(np.asarray(e, np.int32) for e in s["found"])
+        shards = [ShardState(i, [], []) for i in range(n_shards)]
+        for i, r in enumerate(pending):
+            shards[i % n_shards].pending_ranges.append(r)
+        shards[0].found = found
+        return shards

@@ -1,0 +1,331 @@
+"""Device-side programs of the TPU wave engine.
+
+This module contains the *pure JAX* (jit-able, shard_map-able) functions
+executed per wave step. The host scheduler in ``vectorized.py`` owns the
+segment stack and resolution bookkeeping; every array-heavy operation —
+Eq. 2 bitmap refinement, injectivity masking, O(1) dead-end lookups over a
+whole wave, child extraction, pattern scatter — happens here on fixed
+shapes so a single compiled program serves every query.
+
+Design notes (see DESIGN.md §2):
+  * adjacency and candidate sets are packed uint32 bitmaps; Eq. 2 becomes
+    a gather + AND-reduction over mapped-neighbor rows (the Pallas kernel
+    ``kernels/bitmap_refine.py`` implements the same contraction with
+    explicit VMEM tiling; this file keeps the jnp reference path which
+    XLA fuses well on CPU and is what the dry-run lowers by default).
+  * dead-end masks are bitmasks over query order positions, two uint32
+    words (supports |V_Q| <= 64).
+  * the numeric pattern check Φ[μ] == φ (paper Eq. 7) is a double gather
+    and a compare, evaluated for every (row, candidate-vertex) pair of the
+    wave in one shot.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+MASK_WORDS = 2          # dead-end masks cover up to 64 query positions
+N_PAD = 64              # padded query size
+FULL = jnp.uint32(0xFFFFFFFF)
+
+
+class GraphArrays(NamedTuple):
+    """Device view of the data graph."""
+    adj_bitmap: jax.Array    # uint32 [V, W] packed adjacency
+    n_vertices: jax.Array    # int32 scalar
+
+
+class QueryArrays(NamedTuple):
+    """Device view of one query (already permuted to matching order)."""
+    cand_bitmap: jax.Array   # uint32 [N_PAD, W] candidates per position
+    nbr_mask: jax.Array      # bool [N_PAD, N_PAD] query adjacency (by pos)
+    n_query: jax.Array       # int32 scalar
+
+
+class TableArrays(NamedTuple):
+    """The dead-end pattern table Δ, keyed by (order position, vertex)."""
+    phi: jax.Array           # int32 [N_PAD, V]  stored prefix id φ
+    mu: jax.Array            # int32 [N_PAD, V]  prefix length μ
+    mask: jax.Array          # uint32 [N_PAD, V, MASK_WORDS] mask Γ
+    valid: jax.Array         # bool [N_PAD, V]
+
+    @staticmethod
+    def empty(n_vertices: int) -> "TableArrays":
+        v = n_vertices
+        return TableArrays(
+            phi=jnp.zeros((N_PAD, v), jnp.int32),
+            mu=jnp.zeros((N_PAD, v), jnp.int32),
+            mask=jnp.zeros((N_PAD, v, MASK_WORDS), jnp.uint32),
+            valid=jnp.zeros((N_PAD, v), bool),
+        )
+
+
+class WaveResult(NamedTuple):
+    refined_empty: jax.Array     # bool [F]   Eq.2 candidate set empty
+    n_children: jax.Array        # int32 [F]  surviving children this pass
+    n_leftover: jax.Array        # int32 [F]  children beyond the per-row cap
+    partial_mask: jax.Array      # uint32 [F, MASK_WORDS] inj+prune Γ* terms
+    child_v: jax.Array           # int32 [F, KPR] child vertices (-1 pad)
+    child_valid: jax.Array       # bool [F, KPR]
+    leftover: jax.Array          # uint32 [F, W] unexpanded survivor bits
+    n_pruned: jax.Array          # int32 [] dead-end prunes in this wave
+    n_inj: jax.Array             # int32 [] injectivity kills in this wave
+
+
+def _popcount_rows(words: jax.Array) -> jax.Array:
+    """Sum of set bits per row of a uint32 [..., W] array -> int32 [...]."""
+    return lax.population_count(words).astype(jnp.int32).sum(axis=-1)
+
+
+def _unpack_bits(words: jax.Array, v: int) -> jax.Array:
+    """uint32 [F, W] -> bool [F, v]."""
+    f, w = words.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+    return bits.reshape(f, w * 32)[:, :v].astype(bool)
+
+
+def _pack_bits(bits: jax.Array, w: int) -> jax.Array:
+    """bool [F, v] -> uint32 [F, W] (zero-padded)."""
+    f, v = bits.shape
+    padded = jnp.zeros((f, w * 32), bool).at[:, :v].set(bits)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return (padded.reshape(f, w, 32).astype(jnp.uint32) * weights
+            ).sum(axis=-1, dtype=jnp.uint32)
+
+
+def _position_bit(p: jax.Array) -> jax.Array:
+    """Order position -> uint32 [MASK_WORDS] one-hot-bit mask."""
+    word = p // 32
+    bit = jnp.uint32(1) << (p % 32).astype(jnp.uint32)
+    return jnp.where(jnp.arange(MASK_WORDS) == word, bit, jnp.uint32(0))
+
+
+def _below_bits(d: jax.Array) -> jax.Array:
+    """Bitmask of all positions strictly below d, uint32 [MASK_WORDS]."""
+    idx = jnp.arange(MASK_WORDS * 32)
+    bits = idx < d
+    return (bits.reshape(MASK_WORDS, 32).astype(jnp.uint32)
+            * (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+            ).sum(axis=-1, dtype=jnp.uint32)
+
+
+def refine_eq2(g: GraphArrays, q: QueryArrays, frontier: jax.Array,
+               depth: jax.Array) -> jax.Array:
+    """Eq. 2 candidate refinement for a whole wave.
+
+    C'(row) = cand[depth] ∩ ⋂_{p < depth, p ~q depth} N(frontier[row, p]).
+    Returns the packed candidate bitmap uint32 [F, W].
+    """
+    f = frontier.shape[0]
+    w = g.adj_bitmap.shape[1]
+    acc0 = jnp.broadcast_to(q.cand_bitmap[depth], (f, w))
+
+    def body(p, acc):
+        active = q.nbr_mask[depth, p] & (p < depth)
+        rows = g.adj_bitmap[frontier[:, p].clip(0)]          # [F, W]
+        return jnp.where(active, acc & rows, acc)
+
+    return lax.fori_loop(0, N_PAD, body, acc0)
+
+
+def deadend_lookup_children(t: TableArrays, phi: jax.Array,
+                            depth: jax.Array, child_v: jax.Array
+                            ) -> tuple[jax.Array, jax.Array]:
+    """Paper-Eq.7 check for extracted children only (§Perf iteration 2:
+    O(F·kpr) gathers instead of the O(F·V) dense sweep).
+
+    child_v: int32 [F, KPR] candidate vertices (-1 = empty slot).
+    Returns (prune bool [F, KPR], Γ* contribution uint32 [F, MASK_WORDS]).
+    """
+    f, kpr = child_v.shape
+    cv = child_v.clip(0)
+    mu_g = t.mu[depth][cv]                   # [F, KPR]
+    phi_g = t.phi[depth][cv]
+    valid_g = t.valid[depth][cv] & (child_v >= 0)
+    my_phi = jnp.take_along_axis(phi, mu_g, axis=1)
+    prune = valid_g & (my_phi == phi_g)
+    masks = t.mask[depth][cv]                # [F, KPR, MASK_WORDS]
+    masks = jnp.where(prune[:, :, None],
+                      masks | _position_bit(depth)[None, None, :],
+                      jnp.uint32(0))
+    # OR over the (small) child axis via unpack -> any -> repack
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = ((masks[:, :, :, None] >> shifts) & jnp.uint32(1)) > 0
+    got = bits.any(axis=1)                   # [F, MASK_WORDS, 32]
+    weights = jnp.uint32(1) << shifts
+    contrib = (got.astype(jnp.uint32) * weights).sum(
+        axis=-1, dtype=jnp.uint32)           # [F, MASK_WORDS]
+    return prune, contrib
+
+
+@functools.partial(jax.jit, static_argnames=("kpr",))
+def expand_wave(g: GraphArrays, q: QueryArrays, t: TableArrays,
+                frontier: jax.Array, used: jax.Array, phi: jax.Array,
+                row_valid: jax.Array, depth: jax.Array,
+                kpr: int = 16) -> WaveResult:
+    """Expand every row of a wave by one query position.
+
+    Args:
+      frontier:  int32 [F, N_PAD] mapped data vertex per order position
+                 (-1 where unmapped); all rows share the same depth.
+      used:      uint32 [F, W] bitmap of data vertices used by the row.
+      phi:       int32 [F, N_PAD + 1] ancestor embedding ids (Φ array).
+      row_valid: bool [F] padding mask.
+      depth:     int32 scalar — number of mapped positions in each row.
+      kpr:       static per-row child cap for this pass (leftovers are
+                 re-expanded by the host in later passes).
+    """
+    f = frontier.shape[0]
+    v = g.adj_bitmap.shape[0]
+    w = g.adj_bitmap.shape[1]
+
+    refined = refine_eq2(g, q, frontier, depth)              # [F, W]
+    refined = jnp.where(row_valid[:, None], refined, jnp.uint32(0))
+    refined_empty = (_popcount_rows(refined) == 0) & row_valid
+
+    # ---- injectivity: candidates already used by the row ---------------
+    inj_words = refined & used                               # [F, W]
+    n_inj_per_row = _popcount_rows(inj_words)
+
+    # injectivity Γ* contribution (Lemma 2): for every mapped position p
+    # whose vertex is a refined candidate, add bit(p) | bit(depth).
+    def inj_body(p, acc):
+        vert = frontier[:, p].clip(0)                        # [F]
+        word = jnp.take_along_axis(refined, (vert // 32)[:, None],
+                                   axis=1)[:, 0]
+        hit = ((word >> (vert % 32).astype(jnp.uint32)) & 1).astype(bool)
+        hit &= (p < depth) & row_valid
+        contrib = _position_bit(p)[None, :] | _position_bit(depth)[None, :]
+        return jnp.where(hit[:, None], acc | contrib, acc)
+
+    inj_mask = lax.fori_loop(
+        0, N_PAD, inj_body,
+        jnp.zeros((f, MASK_WORDS), jnp.uint32))
+
+    # ---- extract candidate children (per-row cap) -----------------------
+    live = refined & ~used                                   # [F, W]
+    live_bits = _unpack_bits(live, v)                        # [F, V]
+    rank = jnp.cumsum(live_bits, axis=1)                     # [F, V]
+    take_bits = live_bits & (rank <= kpr)
+    left_bits = live_bits & (rank > kpr)
+    n_leftover = left_bits.sum(axis=1).astype(jnp.int32)
+
+    def row_nonzero(row):
+        return jnp.nonzero(row, size=kpr, fill_value=-1)[0]
+
+    child_v = jax.vmap(row_nonzero)(take_bits).astype(jnp.int32)
+    leftover = _pack_bits(left_bits, w)
+
+    # ---- dead-end pruning on extracted children (Lemma 3 / Eq. 7) -------
+    # Perf iteration 2 (see EXPERIMENTS.md): checking only extracted
+    # children turns the O(F*V) dense sweep into O(F*kpr) gathers;
+    # prunable candidates still in `leftover` are checked when a later
+    # pass extracts them.
+    prune, prune_mask = deadend_lookup_children(t, phi, depth, child_v)
+    child_valid = (child_v >= 0) & ~prune
+    n_children = child_valid.sum(axis=1).astype(jnp.int32)
+    partial_mask = inj_mask | prune_mask
+
+    return WaveResult(
+        refined_empty=refined_empty,
+        n_children=n_children,
+        n_leftover=n_leftover,
+        partial_mask=partial_mask,
+        child_v=jnp.where(child_valid, child_v, -1),
+        child_valid=child_valid,
+        leftover=leftover,
+        n_pruned=jnp.where(row_valid, prune.sum(axis=1), 0).sum(),
+        n_inj=jnp.where(row_valid, n_inj_per_row, 0).sum(),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("kpr",))
+def extract_more(t: TableArrays, phi: jax.Array, depth: jax.Array,
+                 leftover: jax.Array, kpr: int = 64
+                 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array,
+                            jax.Array, jax.Array]:
+    """Extract up to ``kpr`` more children per row from leftover bitmaps.
+
+    Leftover bits already survived refinement and injectivity in their
+    fresh pass; the dead-end check runs here at extraction time (and may
+    see *newer* patterns than the fresh pass did — strictly more pruning).
+    Returns (child_v, child_valid, new_leftover, n_leftover,
+             partial_mask, n_pruned).
+    """
+    f, w = leftover.shape
+    v_pad = w * 32
+    bits = _unpack_bits(leftover, v_pad)
+    rank = jnp.cumsum(bits, axis=1)
+    take_bits = bits & (rank <= kpr)
+    left_bits = bits & (rank > kpr)
+
+    def row_nonzero(row):
+        return jnp.nonzero(row, size=kpr, fill_value=-1)[0]
+
+    child_v = jax.vmap(row_nonzero)(take_bits).astype(jnp.int32)
+    prune, prune_mask = deadend_lookup_children(t, phi, depth, child_v)
+    child_valid = (child_v >= 0) & ~prune
+    return (jnp.where(child_valid, child_v, -1), child_valid,
+            _pack_bits(left_bits, w),
+            left_bits.sum(axis=1).astype(jnp.int32),
+            prune_mask, prune.sum())
+
+
+@jax.jit
+def assemble_children(frontier: jax.Array, used: jax.Array, phi: jax.Array,
+                      child_v: jax.Array, child_valid: jax.Array,
+                      depth: jax.Array, id_base: jax.Array
+                      ) -> tuple[jax.Array, jax.Array, jax.Array,
+                                 jax.Array, jax.Array]:
+    """Materialize child rows [F*KPR, ...] from an expand_wave result.
+
+    Returns (child_frontier, child_used, child_phi, parent_row, valid) —
+    padded flat arrays; the host compacts them into new segments.
+    """
+    f, kpr = child_v.shape
+    flat_v = child_v.reshape(-1)                              # [F*KPR]
+    valid = child_valid.reshape(-1)
+    parent = jnp.repeat(jnp.arange(f, dtype=jnp.int32), kpr)
+    cf = frontier[parent]                                     # [F*KPR, NP]
+    cf = jnp.where(
+        (jnp.arange(cf.shape[1])[None, :] == depth) & valid[:, None],
+        flat_v[:, None], cf)
+    vv = flat_v.clip(0)
+    word = (vv // 32).astype(jnp.int32)
+    bit = jnp.uint32(1) << (vv % 32).astype(jnp.uint32)
+    cu = used[parent]
+    add = jnp.zeros_like(cu).at[jnp.arange(cu.shape[0]), word].set(
+        jnp.where(valid, bit, jnp.uint32(0)))
+    cu = cu | add
+    new_ids = id_base + jnp.cumsum(valid.astype(jnp.int32)) - 1
+    cp = phi[parent]
+    cp = jnp.where(
+        (jnp.arange(cp.shape[1])[None, :] == depth + 1) & valid[:, None],
+        new_ids[:, None], cp)
+    return cf, cu, cp, parent, valid
+
+
+@jax.jit
+def store_patterns(t: TableArrays, key_pos: jax.Array, key_v: jax.Array,
+                   phis: jax.Array, mus: jax.Array, masks: jax.Array,
+                   valid: jax.Array) -> TableArrays:
+    """Batched Δ[u_k, v] <- (φ, μ, Γ) scatter (paper Eq. 6).
+
+    Invalid (padding) entries are routed out of bounds and dropped by the
+    scatter, so they can never clobber a real pattern.
+    """
+    v_dim = t.phi.shape[1]
+    kp = jnp.where(valid, key_pos, 0)
+    kv = jnp.where(valid, key_v, v_dim)      # OOB -> dropped
+    phi_new = t.phi.at[kp, kv].set(phis, mode="drop")
+    mu_new = t.mu.at[kp, kv].set(mus, mode="drop")
+    mask_new = t.mask.at[kp, kv].set(masks, mode="drop")
+    valid_new = t.valid.at[kp, kv].set(True, mode="drop")
+    return TableArrays(phi=phi_new, mu=mu_new, mask=mask_new,
+                       valid=valid_new)

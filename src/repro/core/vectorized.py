@@ -1,0 +1,424 @@
+"""Host-side wave scheduler for the TPU matching engine.
+
+The scheduler owns a DFS stack of *segments* (fixed-shape batches of
+partial embeddings, all at one depth) and the resolution bookkeeping that
+implements the paper's Lemma-4 mask aggregation across waves. All dense
+work — Eq. 2 refinement, injectivity, dead-end lookup, child extraction,
+pattern scatter — runs in the jitted device programs of ``engine_step``.
+
+Learning happens *across* waves: patterns extracted from failures in
+earlier-expanded subtrees prune later waves (DESIGN.md §2). Matching is
+exact for any schedule because stored patterns are true dead-ends.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from .backtrack import MatchResult, SearchStats, _prepare
+from .candidates import build_candidates
+from .engine_step import (MASK_WORDS, N_PAD, GraphArrays, QueryArrays,
+                          TableArrays, assemble_children, expand_wave,
+                          extract_more, store_patterns)
+from .graph import Graph, pack_bitmap
+from .ordering import connected_min_candidate_order
+
+_ID_LIMIT = 2**31 - 2**22
+
+
+def _mask64(words: np.ndarray) -> np.ndarray:
+    """uint32 [..., 2] -> uint64 [...]."""
+    w = words.astype(np.uint64)
+    return w[..., 0] | (w[..., 1] << np.uint64(32))
+
+
+def _words_from64(m: np.ndarray) -> np.ndarray:
+    out = np.zeros(m.shape + (MASK_WORDS,), np.uint32)
+    out[..., 0] = (m & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    out[..., 1] = (m >> np.uint64(32)).astype(np.uint32)
+    return out
+
+
+def _bit(p) -> np.uint64:
+    return np.uint64(1) << np.uint64(p)
+
+
+def _below(d: int) -> np.uint64:
+    return (np.uint64(1) << np.uint64(d)) - np.uint64(1) if d < 64 \
+        else np.uint64(0xFFFFFFFFFFFFFFFF)
+
+
+@dataclasses.dataclass
+class _Segment:
+    seg_id: int
+    depth: int                      # mapped positions per row
+    frontier: np.ndarray            # int32 [R, N_PAD]
+    used: np.ndarray                # uint32 [R, W]
+    phi: np.ndarray                 # int32 [R, N_PAD + 1]
+    parent_seg: np.ndarray          # int32 [R] (-1 for roots)
+    parent_row: np.ndarray          # int32 [R]
+    # resolution state (filled lazily at expansion time)
+    outstanding: np.ndarray | None = None   # int64 [R]
+    gamma: np.ndarray | None = None         # uint64 [R] accumulated Γ*
+    reported: np.ndarray | None = None      # bool [R]
+    expanded: np.ndarray | None = None      # bool [R] first pass done
+    pending_leftover: np.ndarray | None = None  # uint32 [R, W]
+    resolved: np.ndarray | None = None      # bool [R]
+    n_unresolved: int = 0
+
+    def init_state(self, w: int) -> None:
+        r = len(self.frontier)
+        self.outstanding = np.zeros(r, np.int64)
+        self.gamma = np.zeros(r, np.uint64)
+        self.reported = np.zeros(r, bool)
+        self.expanded = np.zeros(r, bool)
+        self.pending_leftover = np.zeros((r, w), np.uint32)
+        self.resolved = np.zeros(r, bool)
+        self.n_unresolved = r
+
+
+@dataclasses.dataclass
+class EngineStats(SearchStats):
+    waves: int = 0
+    rows_created: int = 0
+    patterns_stored: int = 0
+
+
+class WaveEngine:
+    """Vectorized subgraph matching over one data graph.
+
+    Usage::
+
+        eng = WaveEngine(data_graph)
+        res = eng.match(query_graph, limit=1000)
+    """
+
+    def __init__(self, data: Graph, wave_size: int = 512, kpr: int = 16,
+                 use_pruning: bool = True):
+        self.data = data
+        self.wave_size = int(wave_size)
+        self.kpr = int(kpr)
+        self.use_pruning = use_pruning
+        self.w = (data.n + 31) // 32
+        self.g = GraphArrays(
+            adj_bitmap=jnp.asarray(data.adj_bitmap),
+            n_vertices=jnp.int32(data.n))
+
+    # ------------------------------------------------------------------
+    def match(self, query: Graph, limit: int | None = 1000,
+              cand: list[np.ndarray] | None = None,
+              order: np.ndarray | None = None,
+              max_rows: int | None = None,
+              seed_table=None) -> MatchResult:
+        """``seed_table``: a TableArrays of *transferable* (mu == 0)
+        patterns from other shards — see core.distributed. Patterns with
+        mu > 0 reference foreign embedding-id numbering and MUST NOT be
+        seeded (soundness)."""
+        import time as _time
+        _t0 = _time.perf_counter()
+        if query.n > N_PAD:
+            raise ValueError(f"query too large for mask width: {query.n}")
+        cand_by_pos, order, pos_of, nbr_pos = _prepare(
+            query, self.data, cand, order)
+        n = query.n
+        v, w = self.data.n, self.w
+
+        # --- device query arrays -------------------------------------
+        cand_dense = np.zeros((N_PAD, v), bool)
+        for d in range(n):
+            cand_dense[d, cand_by_pos[d]] = True
+        nbr_mask = np.zeros((N_PAD, N_PAD), bool)
+        for d in range(n):
+            for p in nbr_pos[d]:
+                nbr_mask[d, int(p)] = True
+        q = QueryArrays(cand_bitmap=jnp.asarray(pack_bitmap(cand_dense)),
+                        nbr_mask=jnp.asarray(nbr_mask),
+                        n_query=jnp.int32(n))
+        qnbr_bits = np.zeros(N_PAD, np.uint64)
+        for d in range(n):
+            bits = np.uint64(0)
+            for p in nbr_pos[d]:
+                bits |= _bit(int(p))
+            qnbr_bits[d] = bits
+
+        table = seed_table if seed_table is not None \
+            else TableArrays.empty(v)
+        no_table = TableArrays.empty(v) if not self.use_pruning else None
+        stats = EngineStats()
+        stats.table_stats = None
+        embeddings: list[np.ndarray] = []
+        segments: dict[int, _Segment] = {}
+        store_buf: list[tuple[int, int, int, int, np.uint64]] = []
+        id_counter = 1
+        learning = self.use_pruning
+        next_seg = 0
+
+        # --- helpers ---------------------------------------------------
+        def new_segment(depth, frontier, used, phi, pseg, prow) -> _Segment:
+            nonlocal next_seg
+            seg = _Segment(next_seg, depth, frontier, used, phi, pseg, prow)
+            seg.init_state(w)
+            segments[next_seg] = seg
+            next_seg += 1
+            return seg
+
+        def flush_stores():
+            nonlocal table
+            if not store_buf or not learning:
+                store_buf.clear()
+                return
+            kpos = np.array([s[0] for s in store_buf], np.int32)
+            kv = np.array([s[1] for s in store_buf], np.int32)
+            phis = np.array([s[2] for s in store_buf], np.int32)
+            mus = np.array([s[3] for s in store_buf], np.int32)
+            masks = _words_from64(np.array([s[4] for s in store_buf],
+                                           np.uint64))
+            table = store_patterns(table, jnp.asarray(kpos), jnp.asarray(kv),
+                                   jnp.asarray(phis), jnp.asarray(mus),
+                                   jnp.asarray(masks),
+                                   jnp.ones(len(kpos), bool))
+            stats.patterns_stored += len(store_buf)
+            store_buf.clear()
+
+        def queue_store(seg: _Segment, row: int, gamma: np.uint64):
+            """Record the dead-end pattern of a resolved-dead row."""
+            if not learning or stats.aborted:
+                return
+            d = seg.depth
+            if d == 0:
+                return
+            key_pos = d - 1
+            key_v = int(seg.frontier[row, key_pos])
+            below = gamma & _below(key_pos)
+            if below:
+                mu_len = int(below).bit_length()   # highest set bit + 1
+            else:
+                mu_len = 0
+            phi_id = int(seg.phi[row, mu_len])
+            store_buf.append((key_pos, key_v, phi_id, mu_len, gamma))
+
+        # worklist of (seg_id, row, reported, gamma) resolutions
+        def resolve_rows(items: list[tuple[int, int, bool, np.uint64]]):
+            while items:
+                sid, row, reported, gamma = items.pop()
+                seg = segments[sid]
+                if seg.resolved[row]:
+                    continue
+                seg.resolved[row] = True
+                seg.n_unresolved -= 1
+                if not reported:
+                    queue_store(seg, row, gamma)
+                ps, pr = int(seg.parent_seg[row]), int(seg.parent_row[row])
+                if ps >= 0:
+                    pseg = segments[ps]
+                    if reported:
+                        pseg.reported[pr] = True
+                    else:
+                        pseg.gamma[pr] |= gamma
+                    pseg.outstanding[pr] -= 1
+                    if (pseg.outstanding[pr] == 0 and pseg.expanded[pr]
+                            and not _has_leftover(pseg, pr)):
+                        items.append(_finalize_row(pseg, pr))
+                if seg.n_unresolved == 0:
+                    del segments[sid]
+
+        def _has_leftover(seg: _Segment, row: int) -> bool:
+            return bool(seg.pending_leftover[row].any())
+
+        def _finalize_row(seg: _Segment, row: int
+                          ) -> tuple[int, int, bool, np.uint64]:
+            """All children of this row are resolved: Lemma 4 conversion."""
+            if seg.reported[row]:
+                return (seg.seg_id, row, True, np.uint64(0))
+            d = seg.depth
+            gamma = seg.gamma[row]
+            if gamma & _bit(d):
+                gamma = (gamma | qnbr_bits[d]) & _below(d)
+            return (seg.seg_id, row, False, gamma)
+
+        # --- root segment ----------------------------------------------
+        roots = cand_by_pos[0]
+        if len(roots) == 0:
+            stats.wall_time_s = 0.0
+            return MatchResult([], stats)
+        r = len(roots)
+        frontier = np.full((r, N_PAD), -1, np.int32)
+        frontier[:, 0] = roots
+        used = np.zeros((r, w), np.uint32)
+        used[np.arange(r), roots // 32] = (
+            np.uint32(1) << (roots.astype(np.uint32) % np.uint32(32)))
+        phi = np.zeros((r, N_PAD + 1), np.int32)
+        phi[:, 1] = np.arange(id_counter, id_counter + r)
+        id_counter += r
+        stats.rows_created += r
+        if n == 1:
+            for v0 in roots:
+                emb = np.empty(1, np.int32)
+                emb[order[0]] = v0
+                embeddings.append(emb)
+            if limit is not None:
+                embeddings = embeddings[:limit]
+            stats.found = len(embeddings)
+            stats.recursions = stats.rows_created
+            return MatchResult(embeddings, stats)
+        root_seg = new_segment(1, frontier, used, phi,
+                               np.full(r, -1, np.int32),
+                               np.zeros(r, np.int32))
+
+        # stack items: (seg_id, row_start, 'fresh' | 'leftover')
+        stack: list[tuple[int, int, str]] = []
+        for s in range(0, r, self.wave_size):
+            stack.append((root_seg.seg_id, s, "fresh"))
+        stack.reverse()
+
+        # --- main loop ---------------------------------------------------
+        while stack and not stats.aborted:
+            sid, start, kind = stack.pop()
+            if sid not in segments:
+                continue
+            seg = segments[sid]
+            rows = slice(start, min(start + self.wave_size,
+                                    len(seg.frontier)))
+            nrows = rows.stop - rows.start
+            if kind == "leftover":
+                active = seg.pending_leftover[rows].any(axis=1)
+                if not active.any():
+                    continue
+            flush_stores()
+            stats.waves += 1
+            f_pad = self.wave_size
+            fr = _pad(seg.frontier[rows], f_pad, -1)
+            us = _pad(seg.used[rows], f_pad, 0)
+            ph = _pad(seg.phi[rows], f_pad, 0)
+            valid = np.zeros(f_pad, bool)
+            valid[:nrows] = ~seg.resolved[rows]
+            depth = seg.depth
+            last_level = depth + 1 == n
+
+            if kind == "fresh":
+                res = expand_wave(
+                    self.g, q, table if no_table is None else no_table,
+                    jnp.asarray(fr), jnp.asarray(us), jnp.asarray(ph),
+                    jnp.asarray(valid), jnp.int32(depth), kpr=self.kpr)
+                refined_empty = np.asarray(res.refined_empty)[:nrows]
+                n_children = np.asarray(res.n_children)[:nrows]
+                n_leftover = np.asarray(res.n_leftover)[:nrows]
+                partial = _mask64(np.asarray(res.partial_mask))[:nrows]
+                child_v = np.asarray(res.child_v)[:nrows]
+                child_valid = np.asarray(res.child_valid)[:nrows]
+                leftover = np.asarray(res.leftover)[:nrows]
+                stats.deadend_prunes += int(np.asarray(res.n_pruned))
+                stats.injectivity_fails += int(np.asarray(res.n_inj))
+                seg.expanded[rows] = True
+                seg.gamma[rows] |= partial
+                seg.pending_leftover[rows] = leftover
+            else:
+                lo = _pad(seg.pending_leftover[rows], f_pad, 0)
+                res = extract_more(
+                    table if no_table is None else no_table,
+                    jnp.asarray(ph), jnp.int32(depth), jnp.asarray(lo),
+                    kpr=4 * self.kpr)
+                child_v = np.asarray(res[0])[:nrows]
+                child_valid = np.asarray(res[1])[:nrows]
+                leftover = np.asarray(res[2])[:nrows]
+                n_children = child_valid.sum(axis=1)
+                n_leftover = np.asarray(res[3])[:nrows]
+                seg.gamma[rows] |= _mask64(np.asarray(res[4]))[:nrows]
+                stats.deadend_prunes += int(np.asarray(res[5]))
+                refined_empty = np.zeros(nrows, bool)
+                seg.pending_leftover[rows] = leftover
+
+            # re-queue leftover before children (LIFO: children first)
+            if (n_leftover > 0).any():
+                stack.append((sid, start, "leftover"))
+
+            # ---- complete embeddings at the last level -------------------
+            if last_level:
+                emb_rows, emb_cols = np.nonzero(child_valid)
+                for i, j in zip(emb_rows.tolist(), emb_cols.tolist()):
+                    if limit is not None and stats.found >= limit:
+                        stats.aborted = True
+                        break
+                    mrow = seg.frontier[rows.start + i].copy()
+                    mrow[depth] = child_v[i, j]
+                    emb = np.empty(n, np.int32)
+                    emb[order] = mrow[:n]
+                    embeddings.append(emb)
+                    stats.found += 1
+                    seg.reported[rows.start + i] = True
+                if stats.aborted:
+                    break
+                n_children_eff = np.zeros_like(n_children)
+            else:
+                n_children_eff = n_children
+
+            seg.outstanding[rows] += n_children_eff
+
+            # ---- push child segment --------------------------------------
+            if not last_level and (n_children > 0).any():
+                cf, cu, cp, par, cvalid = assemble_children(
+                    jnp.asarray(fr), jnp.asarray(us), jnp.asarray(ph),
+                    jnp.asarray(_pad(child_v, f_pad, -1)),
+                    jnp.asarray(_pad(child_valid, f_pad, False)),
+                    jnp.int32(depth), jnp.int32(id_counter))
+                cvalid = np.asarray(cvalid)
+                sel = np.nonzero(cvalid)[0]
+                n_new = len(sel)
+                id_counter += n_new
+                stats.rows_created += n_new
+                if id_counter > _ID_LIMIT and learning:
+                    # id overflow: clear the table, stop learning (sound)
+                    table = TableArrays.empty(v)
+                    learning = False
+                cseg = new_segment(
+                    depth + 1,
+                    np.asarray(cf)[sel], np.asarray(cu)[sel],
+                    np.asarray(cp)[sel],
+                    np.full(n_new, sid, np.int32),
+                    (np.asarray(par)[sel] + rows.start).astype(np.int32))
+                for s in range(0, n_new, self.wave_size):
+                    stack.append((cseg.seg_id, s, "fresh"))
+
+            # ---- immediate resolutions -----------------------------------
+            items = []
+            for i in range(nrows):
+                row = rows.start + i
+                if seg.resolved[row]:
+                    continue
+                if refined_empty[i]:
+                    # Lemma 1: Γ = N(u_d) ∩ dom(M̂)
+                    gam = qnbr_bits[depth] & _below(depth)
+                    items.append((sid, row, False, gam))
+                elif (seg.outstanding[row] == 0 and seg.expanded[row]
+                      and not seg.pending_leftover[row].any()):
+                    if seg.reported[row]:
+                        items.append((sid, row, True, np.uint64(0)))
+                    else:
+                        items.append(_finalize_row(seg, row))
+            resolve_rows(items)
+            if max_rows is not None and stats.rows_created > max_rows:
+                stats.aborted = True
+
+        stats.recursions = stats.rows_created
+        stats.wall_time_s = _time.perf_counter() - _t0
+        self._table = table  # expose for distributed pattern merging
+        return MatchResult(embeddings, stats)
+
+
+def _pad(arr: np.ndarray, rows: int, fill) -> np.ndarray:
+    if len(arr) == rows:
+        return arr
+    out = np.full((rows,) + arr.shape[1:], fill, arr.dtype)
+    out[:len(arr)] = arr
+    return out
+
+
+def match_vectorized(query: Graph, data: Graph, limit: int | None = 1000,
+                     use_pruning: bool = True, wave_size: int = 512,
+                     kpr: int = 16, **kw) -> MatchResult:
+    """One-shot convenience wrapper around :class:`WaveEngine`."""
+    return WaveEngine(data, wave_size=wave_size, kpr=kpr,
+                      use_pruning=use_pruning).match(query, limit=limit,
+                                                     **kw)

@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: Eq. 2 candidate refinement over packed bitmaps.
+
+The matcher's hot loop. For every partial embedding (frontier row) the
+refined candidate set of the next query position is
+
+    refined[i] = cand ∧ ⋀_{p active} adj[frontier[i, p]]
+
+an AND-reduction over dynamically gathered adjacency bitmap rows. On TPU
+the dynamic row gather is expressed with *scalar prefetch*: the frontier
+matrix and the active-position vector are prefetched into SMEM, and the
+``index_map`` of the adjacency operand picks the HBM block to stream into
+VMEM for each (row, position) grid step. The output block is revisited
+across the position dimension and accumulated in place (VMEM), so each
+refined row is written to HBM once.
+
+Block geometry: one grid step loads one adjacency row block of
+``(1, W_pad)`` words. ``W_pad`` is padded to a multiple of 128 lanes; the
+single-sublane block wastes sublanes on real hardware — measured as
+acceptable because the kernel is gather-bound, see EXPERIMENTS.md §Perf.
+All words are int32 (bitwise ops are sign-agnostic; uint32<->int32 is a
+bitcast at the wrapper).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+def _refine_kernel(frontier_ref, active_ref, adj_ref, cand_ref, out_ref):
+    """Grid (F, NP): AND-accumulate adjacency rows into the output row."""
+    p = pl.program_id(1)
+    i = pl.program_id(0)
+
+    @pl.when(p == 0)
+    def _init():
+        out_ref[...] = cand_ref[...]
+
+    act = (active_ref[p] != 0) & (frontier_ref[i, p] >= 0)
+    row = jnp.where(act, adj_ref[...], -1)   # -1 == all bits set
+    out_ref[...] &= row
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def refine_bitmap(adj_bitmap: jax.Array, cand_row: jax.Array,
+                  frontier: jax.Array, active: jax.Array,
+                  interpret: bool = True) -> jax.Array:
+    """Pallas-backed Eq. 2 refinement.
+
+    Args:
+      adj_bitmap: int32/uint32 [V, W] packed adjacency rows.
+      cand_row:   int32/uint32 [W] packed candidates of the position.
+      frontier:   int32 [F, NP] mapped vertex per position (-1 unmapped).
+      active:     int32 [NP] nonzero for mapped neighbor positions.
+      interpret:  run the kernel body in interpret mode (CPU container);
+                  on real TPU pass False.
+
+    Returns int32 [F, W_pad>=W] refined packed bitmaps (caller slices W).
+    """
+    v, w = adj_bitmap.shape
+    f, np_ = frontier.shape
+    w_pad = max(128, ((w + 127) // 128) * 128)
+    adj = jnp.zeros((v, w_pad), jnp.int32).at[:, :w].set(
+        adj_bitmap.astype(jnp.int32))
+    cand = jnp.zeros((1, w_pad), jnp.int32).at[0, :w].set(
+        cand_row.astype(jnp.int32))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(f, np_),
+        in_specs=[
+            pl.BlockSpec(
+                (1, w_pad),
+                lambda i, p, frontier_ref, active_ref: (
+                    jnp.where(active_ref[p] != 0,
+                              frontier_ref[i, p], 0).clip(0, v - 1),
+                    0)),
+            pl.BlockSpec((1, w_pad), lambda i, p, *_: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, w_pad), lambda i, p, *_: (i, 0)),
+    )
+    return pl.pallas_call(
+        _refine_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((f, w_pad), jnp.int32),
+        interpret=interpret,
+    )(frontier, active.astype(jnp.int32), adj, cand)

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: FlashAttention-style fused attention forward.
+
+Beyond-paper kernel for the LM architectures' hot spot. Classic online-
+softmax tiling adapted to TPU: the query tile stays resident in VMEM
+while key/value tiles stream in along the innermost grid dimension; the
+running (max, sum, accumulator) state lives in VMEM scratch, so the
+[S, S] score matrix never materializes in HBM.
+
+Supports causal masking and GQA is handled by the wrapper (K/V heads are
+repeated logically via indexing, never materialized).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, bq: int, bk: int,
+                  kv_steps: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    run = True
+    if causal:
+        # skip key blocks strictly above the causal diagonal
+        run = kj * bk <= qi * bq + (bq - 1)
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0].astype(jnp.float32)            # [bq, d]
+        k = k_ref[0].astype(jnp.float32)            # [bk, d]
+        v = v_ref[0].astype(jnp.float32)            # [bk, d]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [bq, bk]
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_scr[...]                          # [bq, 1]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                       # [bq, bk]
+        corr = jnp.exp(m_prev - m_new)               # [bq, 1]
+        l_scr[...] = corr * l_scr[...] + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = corr * acc_scr[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(kj == kv_steps - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True) -> jax.Array:
+    """Fused attention forward, [B, H, S, D] layout.
+
+    K/V may have fewer heads than Q (GQA): H_kv must divide H, and the
+    wrapper maps query head h to kv head h // (H // H_kv) via an index
+    transform (no repetition in HBM).
+    """
+    b, h, s, d = q.shape
+    _, h_kv, s_kv, _ = k.shape
+    assert h % h_kv == 0
+    group = h // h_kv
+    scale = d ** -0.5
+    bq = min(block_q, s)
+    bk = min(block_k, s_kv)
+    assert s % bq == 0 and s_kv % bk == 0, (s, bq, s_kv, bk)
+    d_pad = max(128, ((d + 127) // 128) * 128)
+    if d_pad != d:
+        pad = [(0, 0)] * 3 + [(0, d_pad - d)]
+        q, k, v = (jnp.pad(t, pad) for t in (q, k, v))
+
+    qr = q.reshape(b * h, s, d_pad)
+    kr = k.reshape(b * h_kv, s_kv, d_pad)
+    vr = v.reshape(b * h_kv, s_kv, d_pad)
+    kv_steps = s_kv // bk
+
+    grid = (b * h, s // bq, kv_steps)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          bq=bq, bk=bk, kv_steps=kv_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d_pad), lambda bh, qi, kj: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, d_pad),
+                         lambda bh, qi, kj, g=group: (bh // g, kj, 0)),
+            pl.BlockSpec((1, bk, d_pad),
+                         lambda bh, qi, kj, g=group: (bh // g, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d_pad),
+                               lambda bh, qi, kj: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d_pad), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, s, d_pad)[..., :d]

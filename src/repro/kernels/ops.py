@@ -1,0 +1,56 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Every op takes ``backend`` in {"pallas", "pallas_interpret", "jnp"}:
+  * ``pallas``           — compiled TPU kernel (target hardware),
+  * ``pallas_interpret`` — kernel body interpreted on CPU (what tests and
+                           this container use to validate the kernels),
+  * ``jnp``              — the pure-jnp oracle from ``ref.py`` (fastest on
+                           CPU; also the lowering used by the dry-run).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import ref
+from .bitmap_refine import refine_bitmap as _refine_pallas
+from .bitmap_spmm import bitmap_spmm as _spmm_pallas
+from .flash_attention import flash_attention as _flash_pallas
+
+DEFAULT_BACKEND = "jnp"
+
+
+def refine_bitmap_op(adj_bitmap, cand_row, frontier, active,
+                     backend: str = DEFAULT_BACKEND):
+    """Eq. 2 packed-bitmap refinement. Returns uint32 [F, W]."""
+    w = adj_bitmap.shape[1]
+    if backend == "jnp":
+        return ref.refine_bitmap_ref(adj_bitmap, cand_row, frontier, active)
+    out = _refine_pallas(adj_bitmap, cand_row, frontier, active,
+                         interpret=(backend == "pallas_interpret"))
+    return out[:, :w].astype(jnp.uint32)
+
+
+def bitmap_spmm_op(adj_words, x, backend: str = DEFAULT_BACKEND,
+                   block_i: int = 256, block_j: int = 256):
+    """Packed-bitmap SpMM ``A @ x``. Returns [N, D] in x.dtype."""
+    if backend == "jnp":
+        return ref.bitmap_spmm_ref(adj_words, x)
+    return _spmm_pallas(adj_words, x, block_i=block_i, block_j=block_j,
+                        interpret=(backend == "pallas_interpret"))
+
+
+def flash_attention_op(q, k, v, causal: bool = True,
+                       backend: str = DEFAULT_BACKEND,
+                       block_q: int = 128, block_k: int = 128):
+    """Fused attention forward [B, H, S, D] (GQA-aware)."""
+    if backend == "jnp":
+        # oracle handles equal-head layout; expand kv heads for GQA
+        h, h_kv = q.shape[1], k.shape[1]
+        if h != h_kv:
+            rep = h // h_kv
+            k = jnp.repeat(k, rep, axis=1)
+            v = jnp.repeat(v, rep, axis=1)
+        return ref.flash_attention_ref(q, k, v, causal=causal)
+    return _flash_pallas(q, k, v, causal=causal, block_q=block_q,
+                         block_k=block_k,
+                         interpret=(backend == "pallas_interpret"))

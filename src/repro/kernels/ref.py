@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+FULL_U32 = jnp.uint32(0xFFFFFFFF)
+
+
+def refine_bitmap_ref(adj_bitmap: jax.Array, cand_row: jax.Array,
+                      frontier: jax.Array, active: jax.Array) -> jax.Array:
+    """Eq. 2 refinement oracle: cand ∧ ⋀_{p active} adj[frontier[:, p]].
+
+    Same signature/semantics as kernels.bitmap_refine.refine_bitmap but
+    returns uint32 [F, W] (unpadded).
+    """
+    f, np_ = frontier.shape
+    adj = adj_bitmap.astype(jnp.uint32)
+    acc = jnp.broadcast_to(cand_row.astype(jnp.uint32)[None, :],
+                           (f, adj.shape[1]))
+
+    def body(p, acc):
+        act = (active[p] != 0)
+        rows = adj[frontier[:, p].clip(0)]
+        rows = jnp.where((frontier[:, p] >= 0)[:, None], rows, FULL_U32)
+        return jnp.where(act, acc & rows, acc)
+
+    return jax.lax.fori_loop(0, np_, body, acc)
+
+
+def bitmap_spmm_ref(adj_words: jax.Array, x: jax.Array) -> jax.Array:
+    """Unpack the bitmap densely and matmul in f32."""
+    n, w = adj_words.shape
+    words = adj_words.astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+    dense = bits.reshape(n, w * 32).astype(jnp.float32)
+    return (dense @ x.astype(jnp.float32)).astype(x.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True,
+                        scale: float | None = None) -> jax.Array:
+    """Plain softmax attention oracle, [B, H, S, D] layout, f32 math."""
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    logits = jnp.einsum("bhsd,bhtd->bhst", qf, kf) * scale
+    if causal:
+        s, t = logits.shape[-2:]
+        mask = jnp.tril(jnp.ones((s, t), bool), k=t - s)
+        logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", probs, vf).astype(q.dtype)

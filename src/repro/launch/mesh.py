@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+A function, not a module-level constant: importing this module must never
+touch jax device state (smoke tests see 1 device; only the dry-run forces
+512 host devices via XLA_FLAGS before any jax import).
+
+Topology: TPU v5e pods of 16x16 = 256 chips; ``multi_pod`` adds a leading
+pod axis (2 pods = 512 chips). Axis roles:
+  * pod   — data-parallel replica sets with hierarchical cross-pod
+            gradient reduction (DCI-aware ordering).
+  * data  — batch / FSDP-weight sharding inside a pod (ICI-fast).
+  * model — tensor/expert/sequence parallel dimension.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_test_mesh(shape=(1, 1), axes=("data", "model")):
+    """Tiny mesh over however many devices the test process has."""
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """The data-parallel axes of a mesh (pod-aware)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

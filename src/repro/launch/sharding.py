@@ -1,0 +1,116 @@
+"""PartitionSpec rules: parameter and input sharding per family.
+
+Scheme (DESIGN.md §5): Megatron-style tensor parallel over the mesh
+``model`` axis + ZeRO-3-ish FSDP weight sharding over ``data``; batch
+over (pod, data). Experts shard over ``model`` (EP); long-context KV
+caches shard the sequence. Every rule passes through :func:`_sanitize`,
+which drops assignments that do not divide the dimension — so one rule
+set serves all ten architectures.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def dp(mesh) -> Any:
+    axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _sanitize(spec: P, shape, mesh) -> P:
+    """Drop axis assignments that don't divide the dimension."""
+    out = []
+    for i, ax in enumerate(spec):
+        if ax is None or i >= len(shape):
+            out.append(None if i >= len(shape) else ax)
+            continue
+        out.append(ax if shape[i] % _axis_size(mesh, ax) == 0 else None)
+    return P(*out[:len(shape)])
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+# (regex, spec builder taking ndim) — first match wins. ``L`` means the
+# leading stacked-layer axis; rules are written for the stacked form and
+# un-stacked leaves (mtp block) are handled by ndim.
+def _lm_rules(fsdp, tp):
+    def mat(*axes):
+        return lambda nd: P(*( (None,) * (nd - len(axes)) + axes ))
+    return [
+        # vocab-sharded only: the shard_map vocab-parallel lookup owns it
+        (r"embed$", lambda nd: P(tp, None)),
+        (r"lm_head/w$", mat(fsdp, tp)),
+        (r"(wq|wk|wv|wg|wu|wi)/w$", mat(fsdp, tp)),
+        (r"(wo|wd)/w$", mat(tp, fsdp)),
+        (r"(wq|wk|wv|wg|wu|wi)/b$", mat(tp)),
+        (r"experts/(wg|wu)/w$",
+         lambda nd: P(*((None,) * (nd - 3) + (tp, fsdp, None)))),
+        (r"experts/wd/w$",
+         lambda nd: P(*((None,) * (nd - 3) + (tp, None, fsdp)))),
+        (r"router/w$", mat()),
+        (r"(w_uq|w_uk|w_uv)/w$", mat(None, tp)),
+        (r"(w_dq|w_dkv|w_kr)/w$", mat(fsdp, None)),
+        (r"w_o/w$", mat(tp, fsdp)),
+        (r"mtp/proj/w$", mat(fsdp, None)),
+    ]
+
+
+def param_specs(params_shape, mesh, family: str):
+    """ShapeDtypeStruct tree -> PartitionSpec tree."""
+    fsdp = "data"
+    tp = "model"
+    if family in ("lm",):
+        rules = _lm_rules(fsdp, tp)
+    elif family == "recsys":
+        all_axes = tuple(a for a in mesh.axis_names)
+        rules = [(r"(item_table|cat_table)$",
+                  lambda nd: P(all_axes, None))]
+    else:   # gnn / equiv / matcher: tiny params -> replicate
+        rules = []
+
+    def rule(path, leaf):
+        ps = _path_str(path)
+        nd = len(leaf.shape)
+        for pat, builder in rules:
+            if re.search(pat, ps):
+                return _sanitize(builder(nd), leaf.shape, mesh)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def opt_specs(opt_shape, pspecs):
+    """Optimizer state shards exactly like its parameters."""
+    return {"m": pspecs, "v": pspecs,
+            "step": P()}
+
+
+def to_named(tree_specs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,510 @@
+"""Per-(arch × shape) step builders for the multi-pod dry-run and the
+real drivers.
+
+``build_cell(arch_id, shape_name, mesh)`` returns a :class:`Cell` with the
+step function, ShapeDtypeStruct inputs (never allocated), input/output
+shardings, and donation info — everything ``jax.jit(...).lower()`` needs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.common import ArchSpec, ShapeCell
+from ..configs.registry import get_arch
+from ..models import gnn, recsys, transformer
+from ..models.equivariant import equiv_batched_loss, equiv_energy_loss, equiv_init
+from ..models.gnn import gnn_init
+from ..models.recsys import din_init
+from ..models.transformer import (init_decode_state, lm_decode_step,
+                                  lm_init, lm_logits, lm_loss)
+from ..training.optimizer import AdamWConfig, adamw_init, adamw_update
+from .sharding import dp, opt_specs, param_specs, _sanitize
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    fn: Callable
+    args: tuple                  # ShapeDtypeStruct pytrees
+    in_specs: tuple              # PartitionSpec pytrees
+    out_specs: Any
+    donate: tuple = ()
+    static: dict | None = None
+
+    def lower(self, mesh):
+        to_sh = lambda t: jax.tree.map(
+            lambda s: NamedSharding(mesh, s), t,
+            is_leaf=lambda x: isinstance(x, P))
+        jf = jax.jit(self.fn,
+                     in_shardings=tuple(to_sh(s) for s in self.in_specs),
+                     out_shardings=to_sh(self.out_specs),
+                     donate_argnums=self.donate)
+        with mesh:
+            return jf.lower(*self.args)
+
+
+def _opt_cfg(spec: ArchSpec) -> AdamWConfig:
+    big = spec.family == "lm" and spec.config.n_params() > 1e11
+    return AdamWConfig(state_dtype=jnp.bfloat16 if big else jnp.float32)
+
+
+# ====================================================================== LM
+def _lm_param_trees(spec: ArchSpec, mesh, batch_div: bool = True,
+                    seq_axis: str | None = "model"):
+    import dataclasses as dc
+    cfg = spec.config
+    if batch_div:
+        dpa = dp(mesh)
+        tp = "model" if seq_axis else None
+        moe = dc.replace(
+            cfg.moe, ep_axis="model", mesh=mesh, dp_axes=dpa,
+            seq_axis=seq_axis) if cfg.moe else None
+        mla = dc.replace(cfg.mla, dp_axis=dpa, tp_axis=tp) \
+            if cfg.mla else None
+        cfg = dc.replace(cfg, dp_axis=dpa, tp_axis=tp, moe=moe, mla=mla,
+                         mesh=mesh)
+    pshape = jax.eval_shape(lambda k: lm_init(k, cfg), jax.random.key(0))
+    pspec = param_specs(pshape, mesh, "lm")
+    ocfg = _opt_cfg(spec)
+    oshape = jax.eval_shape(functools.partial(adamw_init, cfg=ocfg), pshape)
+    ospec = opt_specs(oshape, pspec)
+    return cfg, pshape, pspec, oshape, ospec, ocfg
+
+
+def _lm_train_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
+    cfg, pshape, pspec, oshape, ospec, ocfg = _lm_param_trees(spec, mesh)
+    b = cell.dims["global_batch"]
+    s = cell.dims["seq_len"]
+    batch = {"tokens": sds((b, s), jnp.int32),
+             "targets": sds((b, s), jnp.int32)}
+    bspec = {"tokens": P(dp(mesh), None), "targets": P(dp(mesh), None)}
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: lm_loss(p, cfg, batch))(params)
+        params, opt_state = adamw_update(params, grads, opt_state, ocfg)
+        return params, opt_state, loss
+
+    return Cell(spec.arch_id, cell.name, train_step,
+                (pshape, oshape, batch), (pspec, ospec, bspec),
+                (pspec, ospec, P()), donate=(0, 1))
+
+
+def _lm_prefill_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
+    cfg, pshape, pspec, *_ = _lm_param_trees(spec, mesh)
+    b = cell.dims["global_batch"]
+    s = cell.dims["seq_len"]
+    tokens = sds((b, s), jnp.int32)
+
+    def prefill(params, tokens):
+        return lm_logits(params, cfg, tokens)
+
+    return Cell(spec.arch_id, cell.name, prefill,
+                (pshape, tokens), (pspec, P(dp(mesh), None)),
+                P(dp(mesh), None, "model"))
+
+
+def _lm_decode_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
+    import dataclasses as dc
+    b = cell.dims["global_batch"]
+    kv = cell.dims["kv_len"]
+    batch_div = b % _size(mesh, dp(mesh)) == 0
+    cfg, pshape, pspec, *_ = _lm_param_trees(spec, mesh,
+                                             batch_div=batch_div,
+                                             seq_axis=None)
+    # §Perf hillclimb A iter 2: flash-decoding for MLA archs — the latent
+    # cache shards over the sequence; shards combine via log-sum-exp psum
+    flash = (cfg.mla is not None and batch_div
+             and kv % mesh.shape["model"] == 0)
+    if flash:
+        cfg = dc.replace(cfg, mla=dc.replace(
+            cfg.mla, mesh=mesh, decode_flash=True,
+            dp_axis=dp(mesh), tp_axis="model"))
+    state_shape = jax.eval_shape(
+        functools.partial(init_decode_state, cfg, b, kv))
+    dpa = dp(mesh)
+    b_div = b % _size(mesh, dpa) == 0
+
+    def cache_spec(leaf):
+        nd = len(leaf.shape)
+        if nd >= 4:  # [L, B, S, ...] kv or latent cache
+            if b_div:
+                if flash and nd == 4:
+                    # MLA flash-decoding: latent cache seq-sharded; the
+                    # shard_map owns the DUS + log-sum-exp combine
+                    return _sanitize(P(None, dpa, "model", None),
+                                     leaf.shape, mesh)
+                # GQA path: batch over data; the TRAILING head_dim over
+                # model. Sharding the sequence instead puts the per-token
+                # dynamic-update-slice astride shard boundaries and the
+                # partitioner all-gathers the whole cache every layer.
+                return _sanitize(
+                    P(*((None, dpa) + (None,) * (nd - 3) + ("model",))),
+                    leaf.shape, mesh)
+            seq_axes = (dpa, "model") if isinstance(dpa, str) \
+                else tuple(dpa) + ("model",)
+            return _sanitize(
+                P(*((None, None, seq_axes) + (None,) * (nd - 3))),
+                leaf.shape, mesh)
+        return P(*([None] * nd))
+
+    sspec = jax.tree.map(cache_spec, state_shape)
+    tokens = sds((b, 1), jnp.int32)
+    tspec = P(dpa, None) if b_div else P(None, None)
+
+    def serve_step(params, state, tokens):
+        return lm_decode_step(params, cfg, tokens, state)
+
+    return Cell(spec.arch_id, cell.name, serve_step,
+                (pshape, state_shape, tokens), (pspec, sspec, tspec),
+                (_sanitize(P(dpa, None, "model"),
+                           (b, 1, cfg.vocab), mesh), sspec),
+                donate=(1,))
+
+
+def _size(mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+# ===================================================================== GNN
+def _gnn_param_trees(spec: ArchSpec, mesh, d_in, n_classes):
+    import dataclasses as dc
+    cfg = dc.replace(spec.config, d_in=d_in, n_classes=n_classes)
+    pshape = jax.eval_shape(lambda k: gnn_init(k, cfg), jax.random.key(0))
+    pspec = param_specs(pshape, mesh, "gnn")
+    ocfg = _opt_cfg(spec)
+    oshape = jax.eval_shape(functools.partial(adamw_init, cfg=ocfg), pshape)
+    return cfg, pshape, pspec, oshape, opt_specs(oshape, pspec), ocfg
+
+
+def _gnn_full_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
+    d = cell.dims
+    cfg, pshape, pspec, oshape, ospec, ocfg = _gnn_param_trees(
+        spec, mesh, d["d_feat"], d["n_classes"])
+    n, e2 = d["n_nodes"], 2 * d["n_edges"]
+    dpa = dp(mesh)
+    batch = {"x": sds((n, d["d_feat"]), jnp.float32),
+             "edge_index": sds((2, e2), jnp.int32),
+             "labels": sds((n,), jnp.int32),
+             "mask": sds((n,), jnp.float32)}
+    bspec = {"x": _sanitize(P(dpa, None), (n, d["d_feat"]), mesh),
+             "edge_index": _sanitize(P(None, dpa), (2, e2), mesh),
+             "labels": _sanitize(P(dpa), (n,), mesh),
+             "mask": _sanitize(P(dpa), (n,), mesh)}
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: gnn.gnn_loss(p, cfg, batch["x"], batch["edge_index"],
+                                   batch["labels"], batch["mask"]))(params)
+        params, opt_state = adamw_update(params, grads, opt_state, ocfg)
+        return params, opt_state, loss
+
+    return Cell(spec.arch_id, cell.name, train_step,
+                (pshape, oshape, batch), (pspec, ospec, bspec),
+                (pspec, ospec, P()), donate=(0, 1))
+
+
+def _gnn_sampled_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
+    d = cell.dims
+    import dataclasses as dc
+    cfg, pshape, pspec, oshape, ospec, ocfg = _gnn_param_trees(
+        spec, mesh, d["d_feat"], d["n_classes"])
+    cfg = dc.replace(cfg, n_layers=2)       # 2-hop fanout 15-10
+    pshape = jax.eval_shape(lambda k: gnn_init(k, cfg), jax.random.key(0))
+    pspec = param_specs(pshape, mesh, "gnn")
+    oshape = jax.eval_shape(functools.partial(adamw_init, cfg=ocfg), pshape)
+    ospec = opt_specs(oshape, pspec)
+    b, f0, f1 = d["batch_nodes"], d["fanout0"], d["fanout1"]
+    n1, n2 = b * f0, b * f0 * f1
+    dpa = dp(mesh)
+    batch = {
+        "feats": [sds((m, d["d_feat"]), jnp.float32) for m in (b, n1, n2)],
+        "nbr_idx": [sds((b, f0), jnp.int32), sds((n1, f1), jnp.int32)],
+        "nbr_valid": [sds((b, f0), bool), sds((n1, f1), bool)],
+        "labels": sds((b,), jnp.int32),
+    }
+    bspec = {
+        "feats": [_sanitize(P(dpa, None), (m, d["d_feat"]), mesh)
+                  for m in (b, n1, n2)],
+        "nbr_idx": [_sanitize(P(dpa, None), (b, f0), mesh),
+                    _sanitize(P(dpa, None), (n1, f1), mesh)],
+        "nbr_valid": [_sanitize(P(dpa, None), (b, f0), mesh),
+                      _sanitize(P(dpa, None), (n1, f1), mesh)],
+        "labels": _sanitize(P(dpa), (b,), mesh),
+    }
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            logits = gnn.gnn_forward_sampled(
+                p, cfg, batch["feats"], batch["nbr_idx"],
+                batch["nbr_valid"])
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+            return -jnp.take_along_axis(
+                logp, batch["labels"][:, None], axis=1).mean()
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state = adamw_update(params, grads, opt_state, ocfg)
+        return params, opt_state, loss
+
+    return Cell(spec.arch_id, cell.name, train_step,
+                (pshape, oshape, batch), (pspec, ospec, bspec),
+                (pspec, ospec, P()), donate=(0, 1))
+
+
+def _gnn_mol_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
+    d = cell.dims
+    nb = d["batch"]
+    n_tot = nb * d["n_nodes"]
+    e_tot = nb * d["n_edges"] * 2
+    cfg, pshape, pspec, oshape, ospec, ocfg = _gnn_param_trees(
+        spec, mesh, d["n_species"], 2)
+    dpa = dp(mesh)
+    batch = {"x": sds((n_tot, d["n_species"]), jnp.float32),
+             "edge_index": sds((2, e_tot), jnp.int32),
+             "graph_id": sds((n_tot,), jnp.int32),
+             "labels": sds((nb,), jnp.int32)}
+    bspec = {"x": _sanitize(P(dpa, None), (n_tot, d["n_species"]), mesh),
+             "edge_index": _sanitize(P(None, dpa), (2, e_tot), mesh),
+             "graph_id": _sanitize(P(dpa), (n_tot,), mesh),
+             "labels": _sanitize(P(dpa), (nb,), mesh)}
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            logits = gnn.gnn_forward_batched(
+                p, cfg, batch["x"], batch["edge_index"],
+                batch["graph_id"], nb)
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+            return -jnp.take_along_axis(
+                logp, batch["labels"][:, None], axis=1).mean()
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state = adamw_update(params, grads, opt_state, ocfg)
+        return params, opt_state, loss
+
+    return Cell(spec.arch_id, cell.name, train_step,
+                (pshape, oshape, batch), (pspec, ospec, bspec),
+                (pspec, ospec, P()), donate=(0, 1))
+
+
+# =================================================================== equiv
+def _equiv_cells(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
+    import dataclasses as dc
+    d = cell.dims
+    cfg = spec.config
+    # §Perf: edge-chunked message streaming for full-batch-large cells
+    if d.get("n_edges", 0) > 4_000_000:
+        cfg = dc.replace(cfg, edge_chunk=1 << 20)
+    pshape = jax.eval_shape(lambda k: equiv_init(k, cfg),
+                            jax.random.key(0))
+    pspec = param_specs(pshape, mesh, "equiv")
+    ocfg = _opt_cfg(spec)
+    oshape = jax.eval_shape(functools.partial(adamw_init, cfg=ocfg), pshape)
+    ospec = opt_specs(oshape, pspec)
+    dpa = dp(mesh)
+
+    if cell.kind == "batched_graphs":
+        nb = d["batch"]
+        n_tot, e_tot = nb * d["n_nodes"], nb * d["n_edges"] * 2
+        batch = {"species": sds((n_tot,), jnp.int32),
+                 "positions": sds((n_tot, 3), jnp.float32),
+                 "edge_index": sds((2, e_tot), jnp.int32),
+                 "graph_id": sds((n_tot,), jnp.int32),
+                 "energy": sds((nb,), jnp.float32)}
+        loss_of = lambda p, b: equiv_batched_loss(p, cfg, b, nb)
+    else:
+        if cell.kind == "sampled":
+            n = d["batch_nodes"] * (1 + d["fanout0"]
+                                    + d["fanout0"] * d["fanout1"])
+            e2 = 2 * d["batch_nodes"] * (d["fanout0"]
+                                         + d["fanout0"] * d["fanout1"])
+        else:
+            n, e2 = d["n_nodes"], 2 * d["n_edges"]
+        batch = {"species": sds((n,), jnp.int32),
+                 "positions": sds((n, 3), jnp.float32),
+                 "edge_index": sds((2, e2), jnp.int32),
+                 "energy": sds((), jnp.float32)}
+        loss_of = lambda p, b: equiv_energy_loss(p, cfg, b)
+
+    bspec = jax.tree.map(
+        lambda s: _sanitize(
+            P(*((dpa,) + (None,) * (len(s.shape) - 1)))
+            if len(s.shape) >= 1 and s.shape[0] not in (2,)
+            else P(*((None, dpa) + (None,) * (len(s.shape) - 2))),
+            s.shape, mesh),
+        batch)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_of(p, batch))(params)
+        params, opt_state = adamw_update(params, grads, opt_state, ocfg)
+        return params, opt_state, loss
+
+    return Cell(spec.arch_id, cell.name, train_step,
+                (pshape, oshape, batch), (pspec, ospec, bspec),
+                (pspec, ospec, P()), donate=(0, 1))
+
+
+# ================================================================== recsys
+def _din_cells(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
+    cfg = spec.config
+    pshape = jax.eval_shape(lambda k: din_init(k, cfg), jax.random.key(0))
+    pspec = param_specs(pshape, mesh, "recsys")
+    ocfg = _opt_cfg(spec)
+    oshape = jax.eval_shape(functools.partial(adamw_init, cfg=ocfg), pshape)
+    ospec = opt_specs(oshape, pspec)
+    dpa = dp(mesh)
+    L = cfg.seq_len
+
+    def batch_of(b):
+        return ({"target_item": sds((b,), jnp.int32),
+                 "target_cat": sds((b,), jnp.int32),
+                 "hist_items": sds((b, L), jnp.int32),
+                 "hist_cats": sds((b, L), jnp.int32),
+                 "hist_mask": sds((b, L), jnp.float32),
+                 "dense_feats": sds((b, cfg.n_dense_feats), jnp.float32),
+                 "labels": sds((b,), jnp.int32)})
+
+    def spec_of(b):
+        return jax.tree.map(
+            lambda s: _sanitize(
+                P(*((dpa,) + (None,) * (len(s.shape) - 1))), s.shape, mesh),
+            batch_of(b))
+
+    if cell.kind == "recsys_train":
+        b = cell.dims["batch"]
+        batch, bspec = batch_of(b), spec_of(b)
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: recsys.din_loss(p, cfg, batch))(params)
+            params, opt_state = adamw_update(params, grads, opt_state, ocfg)
+            return params, opt_state, loss
+
+        return Cell(spec.arch_id, cell.name, train_step,
+                    (pshape, oshape, batch), (pspec, ospec, bspec),
+                    (pspec, ospec, P()), donate=(0, 1))
+
+    if cell.kind == "recsys_serve":
+        b = cell.dims["batch"]
+        batch, bspec = batch_of(b), spec_of(b)
+        batch.pop("labels"); bspec.pop("labels")
+
+        def serve(params, batch):
+            return recsys.din_forward(params, cfg, batch)
+
+        return Cell(spec.arch_id, cell.name, serve, (pshape, batch),
+                    (pspec, bspec), _sanitize(P(dpa), (b,), mesh))
+
+    # retrieval: 1 user x n_candidates
+    n = cell.dims["n_candidates"]
+    user = {"hist_items": sds((L,), jnp.int32),
+            "hist_cats": sds((L,), jnp.int32),
+            "hist_mask": sds((L,), jnp.float32),
+            "dense_feats": sds((cfg.n_dense_feats,), jnp.float32)}
+    uspec = jax.tree.map(lambda s: P(*([None] * len(s.shape))), user)
+    cands = (sds((n,), jnp.int32), sds((n,), jnp.int32))
+    cspec = (_sanitize(P(dpa), (n,), mesh), _sanitize(P(dpa), (n,), mesh))
+
+    def retrieve(params, user, cand_items, cand_cats):
+        return recsys.din_score_candidates(params, cfg, user, cand_items,
+                                           cand_cats)
+
+    return Cell(spec.arch_id, cell.name, retrieve,
+                (pshape, user) + cands, (pspec, uspec) + cspec,
+                _sanitize(P(dpa), (n,), mesh))
+
+
+# ================================================================= matcher
+def _matcher_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
+    from ..core.engine_step import (MASK_WORDS, N_PAD, GraphArrays,
+                                    QueryArrays, TableArrays, expand_wave)
+    d = cell.dims
+    v = d["n_vertices"]
+    w = (v + 31) // 32
+    f = d["wave_size"]
+    kpr = d["kpr"]
+    dpa = dp(mesh)
+    g = GraphArrays(adj_bitmap=sds((v, w), jnp.uint32),
+                    n_vertices=sds((), jnp.int32))
+    q = QueryArrays(cand_bitmap=sds((N_PAD, w), jnp.uint32),
+                    nbr_mask=sds((N_PAD, N_PAD), bool),
+                    n_query=sds((), jnp.int32))
+    t = TableArrays(phi=sds((N_PAD, v), jnp.int32),
+                    mu=sds((N_PAD, v), jnp.int32),
+                    mask=sds((N_PAD, v, MASK_WORDS), jnp.uint32),
+                    valid=sds((N_PAD, v), bool))
+    frontier = sds((f, N_PAD), jnp.int32)
+    used = sds((f, w), jnp.uint32)
+    phi = sds((f, N_PAD + 1), jnp.int32)
+    row_valid = sds((f,), bool)
+    depth = sds((), jnp.int32)
+
+    gspec = GraphArrays(adj_bitmap=P("model", None), n_vertices=P())
+    qspec = QueryArrays(cand_bitmap=P(None, None), nbr_mask=P(None, None),
+                        n_query=P())
+    tspec = TableArrays(phi=P(None, "model"), mu=P(None, "model"),
+                        mask=P(None, "model", None), valid=P(None, "model"))
+    fspec = (_sanitize(P(dpa, None), (f, N_PAD), mesh),
+             _sanitize(P(dpa, None), (f, w), mesh),
+             _sanitize(P(dpa, None), (f, N_PAD + 1), mesh),
+             _sanitize(P(dpa), (f,), mesh))
+
+    def step(g, q, t, frontier, used, phi, row_valid, depth):
+        return expand_wave(g, q, t, frontier, used, phi, row_valid,
+                           depth, kpr=kpr)
+
+    out_spec = jax.tree.map(lambda _: P(), jax.eval_shape(
+        step, g, q, t, frontier, used, phi, row_valid, depth))
+    # children arrays follow the frontier's data sharding
+    out_spec = out_spec._replace(
+        child_v=_sanitize(P(dpa, None), (f, kpr), mesh),
+        child_valid=_sanitize(P(dpa, None), (f, kpr), mesh),
+        leftover=_sanitize(P(dpa, None), (f, w), mesh),
+        partial_mask=_sanitize(P(dpa, None), (f, MASK_WORDS), mesh),
+        refined_empty=_sanitize(P(dpa), (f,), mesh),
+        n_children=_sanitize(P(dpa), (f,), mesh),
+        n_leftover=_sanitize(P(dpa), (f,), mesh))
+
+    return Cell(spec.arch_id, cell.name, step,
+                (g, q, t, frontier, used, phi, row_valid, depth),
+                (gspec, qspec, tspec) + fspec + (P(),),
+                out_spec)
+
+
+# ================================================================ dispatch
+def build_cell(arch_id: str, shape_name: str, mesh) -> Cell:
+    spec = get_arch(arch_id)
+    cell = spec.shape(shape_name)
+    if spec.family == "lm":
+        if cell.kind == "train":
+            return _lm_train_cell(spec, cell, mesh)
+        if cell.kind == "prefill":
+            return _lm_prefill_cell(spec, cell, mesh)
+        return _lm_decode_cell(spec, cell, mesh)
+    if spec.family == "gnn":
+        if cell.kind == "full_graph":
+            return _gnn_full_cell(spec, cell, mesh)
+        if cell.kind == "sampled":
+            return _gnn_sampled_cell(spec, cell, mesh)
+        return _gnn_mol_cell(spec, cell, mesh)
+    if spec.family == "equiv":
+        return _equiv_cells(spec, cell, mesh)
+    if spec.family == "recsys":
+        return _din_cells(spec, cell, mesh)
+    if spec.family == "matcher":
+        return _matcher_cell(spec, cell, mesh)
+    raise ValueError(spec.family)

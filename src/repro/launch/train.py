@@ -1,0 +1,103 @@
+"""End-to-end LM training driver with checkpoint/restart fault tolerance.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+        --steps 300 --batch 8 --seq 256 --ckpt-dir /tmp/run1 --resume auto
+
+Runs on whatever devices exist (1 CPU here; the production mesh via the
+same sharding rules when launched on real pods). Features exercised:
+  * config-driven model/optimizer construction (--arch picks the smoke or
+    full config; --scale smoke|full),
+  * resumable deterministic data pipeline,
+  * atomic checkpointing every --ckpt-every steps + auto-resume,
+  * simulated failure injection (--fail-at-step) proving restart works,
+  * MoE router-bias load balancing (aux-free) when the arch is MoE.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.registry import get_arch
+from ..data.lm_data import LMStreamConfig, TokenStream
+from ..models import transformer
+from ..training import checkpoint
+from ..training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--scale", choices=["smoke", "full"], default="smoke")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", choices=["auto", "never"], default="auto")
+    ap.add_argument("--fail-at-step", type=int, default=None,
+                    help="inject a crash once (restart with --resume auto)")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    spec = get_arch(args.arch)
+    assert spec.family == "lm", "train.py drives LM archs; see gnn example"
+    cfg = spec.smoke_config if args.scale == "smoke" else spec.config
+    ocfg = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                       warmup_steps=max(10, args.steps // 20))
+
+    key = jax.random.key(0)
+    params = transformer.lm_init(key, cfg)
+    opt = adamw_init(params, ocfg)
+    stream = TokenStream(LMStreamConfig(vocab=cfg.vocab, batch=args.batch,
+                                        seq_len=args.seq))
+    start = 0
+    if args.ckpt_dir and args.resume == "auto":
+        last = checkpoint.latest_step(args.ckpt_dir)
+        if last is not None:
+            (params, opt), start, extra = checkpoint.restore(
+                args.ckpt_dir, (params, opt))
+            stream = TokenStream.from_state(stream.cfg,
+                                            extra["stream"])
+            print(f"[resume] restored step {start}")
+
+    @jax.jit
+    def train_step(params, opt, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: transformer.lm_loss(p, cfg, batch))(params)
+        params, opt = adamw_update(params, grads, opt, ocfg)
+        return params, opt, loss
+
+    t0 = time.time()
+    losses = []
+    for step in range(start, args.steps):
+        if args.fail_at_step is not None and step == args.fail_at_step:
+            raise RuntimeError(f"injected failure at step {step}")
+        batch = stream.next_batch()
+        params, opt, loss = train_step(
+            params, opt, {k: jnp.asarray(v) for k, v in batch.items()})
+        losses.append(float(loss))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            tok_s = (args.batch * args.seq * (step - start + 1)
+                     / max(time.time() - t0, 1e-9))
+            print(f"step {step:5d} loss {float(loss):.4f} "
+                  f"tok/s {tok_s:,.0f}")
+        if args.ckpt_dir and ((step + 1) % args.ckpt_every == 0
+                              or step == args.steps - 1):
+            checkpoint.save(args.ckpt_dir, step + 1, (params, opt),
+                            extra={"stream": stream.state(),
+                                   "loss": float(loss)})
+    first = np.mean(losses[:10]) if len(losses) >= 10 else losses[0]
+    last = np.mean(losses[-10:])
+    print(f"[done] loss {first:.4f} -> {last:.4f} "
+          f"({'improved' if last < first else 'NO IMPROVEMENT'})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,163 @@
+"""GCN and GIN message-passing layers (SpMM regime).
+
+JAX has no CSR SpMM — message passing is built from ``jnp.take`` +
+``jax.ops.segment_sum`` over an edge index, exactly as the assignment
+requires. Three execution modes:
+
+  * full-batch  — one segment-sum over all edges (Cora, ogb_products);
+    node/edge arrays shard over the mesh data axis, GSPMD turns the
+    boundary gathers into all-to-alls (§Dry-run).
+  * sampled     — fanout-bounded neighbor blocks [B, fanout] from
+    ``data.sampler`` (Reddit-scale minibatch training).
+  * batched-small-graphs — molecules packed into one disjoint union graph
+    with a graph-id segment vector.
+
+The packed-bitmap Pallas SpMM (``kernels/bitmap_spmm``) is a drop-in for
+the full-batch path on graphs whose bitmap fits HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, dense_init
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    kind: str                  # "gcn" | "gin"
+    n_layers: int
+    d_in: int
+    d_hidden: int
+    n_classes: int
+    aggregator: str = "mean"   # gcn: sym-norm handled separately
+    sym_norm: bool = True      # GCN D^-1/2 A D^-1/2
+    learnable_eps: bool = True  # GIN
+    dropout: float = 0.0
+    param_dtype: Any = jnp.float32
+
+
+def gnn_init(key, cfg: GNNConfig) -> Params:
+    dims = ([cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1)
+            + [cfg.n_classes])
+    keys = jax.random.split(key, cfg.n_layers)
+    layers = []
+    for i in range(cfg.n_layers):
+        if cfg.kind == "gcn":
+            layers.append({"lin": dense_init(keys[i], dims[i], dims[i + 1],
+                                             cfg.param_dtype, bias=True)})
+        else:  # GIN: 2-layer MLP per layer
+            k1, k2 = jax.random.split(keys[i])
+            layers.append({
+                "mlp1": dense_init(k1, dims[i], dims[i + 1],
+                                   cfg.param_dtype, bias=True),
+                "mlp2": dense_init(k2, dims[i + 1], dims[i + 1],
+                                   cfg.param_dtype, bias=True),
+                "eps": jnp.zeros((), cfg.param_dtype),
+            })
+    return {"layers": layers}
+
+
+def _aggregate(x: jax.Array, src: jax.Array, dst: jax.Array, n: int,
+               deg: jax.Array, cfg: GNNConfig) -> jax.Array:
+    """Segment-sum message passing: out[i] = reduce_{j->i} x[j] * coef."""
+    msgs = jnp.take(x, src, axis=0)
+    if cfg.kind == "gcn" and cfg.sym_norm:
+        coef = jax.lax.rsqrt(jnp.maximum(deg[src], 1.0)) \
+            * jax.lax.rsqrt(jnp.maximum(deg[dst], 1.0))
+        msgs = msgs * coef[:, None]
+    agg = jax.ops.segment_sum(msgs, dst, num_segments=n)
+    if cfg.kind == "gcn" and not cfg.sym_norm and cfg.aggregator == "mean":
+        agg = agg / jnp.maximum(deg[:, None], 1.0)
+    return agg
+
+
+def _layer_apply(layer: Params, cfg: GNNConfig, h: jax.Array,
+                 agg: jax.Array, last: bool) -> jax.Array:
+    if cfg.kind == "gcn":
+        # self loop folded in: (agg + h/deg-normish) @ W — standard GCN
+        # uses A+I; we add the normalized self term explicitly
+        out = dense(layer["lin"], agg)
+    else:
+        out = dense(layer["mlp2"],
+                    jax.nn.relu(dense(layer["mlp1"],
+                                      (1.0 + layer["eps"]) * h + agg)))
+    return out if last else jax.nn.relu(out)
+
+
+def gnn_forward_full(params: Params, cfg: GNNConfig, x: jax.Array,
+                     edge_index: jax.Array) -> jax.Array:
+    """Full-batch forward. x: [N, d_in]; edge_index: int32 [2, E]
+    (directed pairs; undirected graphs list both directions).
+    Self-loops are added internally for GCN."""
+    n = x.shape[0]
+    src, dst = edge_index[0], edge_index[1]
+    if cfg.kind == "gcn":
+        loops = jnp.arange(n, dtype=src.dtype)
+        src = jnp.concatenate([src, loops])
+        dst = jnp.concatenate([dst, loops])
+    deg = jax.ops.segment_sum(jnp.ones_like(src, jnp.float32), dst,
+                              num_segments=n)
+    h = x
+    for i, layer in enumerate(params["layers"]):
+        agg = _aggregate(h, src, dst, n, deg, cfg)
+        h = _layer_apply(layer, cfg, h, agg, last=(i == cfg.n_layers - 1))
+    return h
+
+
+def gnn_forward_sampled(params: Params, cfg: GNNConfig,
+                        feats: list[jax.Array],
+                        nbr_idx: list[jax.Array],
+                        nbr_valid: list[jax.Array]) -> jax.Array:
+    """Fanout-sampled forward (GraphSAGE-style blocks).
+
+    feats[k]:     [N_k, d_in] features of layer-k nodes (N_0 = seeds).
+    nbr_idx[k]:   int32 [N_k, fanout_k] indices into feats[k+1].
+    nbr_valid[k]: bool  [N_k, fanout_k].
+    """
+    h = [f for f in feats]
+    for i, layer in enumerate(params["layers"]):
+        new_h = []
+        depth = cfg.n_layers - i  # layers of h still needed
+        for kk in range(depth):
+            nbrs = jnp.take(h[kk + 1], nbr_idx[kk], axis=0)  # [N,f,d]
+            valid = nbr_valid[kk][..., None]
+            if cfg.kind == "gcn":
+                # include self in the normalized mean (A+I semantics)
+                agg = ((nbrs * valid).sum(axis=1) + h[kk]) / \
+                    (valid.sum(axis=1) + 1.0)
+            elif cfg.aggregator == "mean":
+                agg = (nbrs * valid).sum(axis=1) / \
+                    jnp.maximum(valid.sum(axis=1), 1.0)
+            else:
+                agg = (nbrs * valid).sum(axis=1)
+            new_h.append(_layer_apply(layer, cfg, h[kk], agg,
+                                      last=(i == cfg.n_layers - 1)))
+        h = new_h
+    return h[0]
+
+
+def gnn_forward_batched(params: Params, cfg: GNNConfig, x: jax.Array,
+                        edge_index: jax.Array, graph_id: jax.Array,
+                        n_graphs: int) -> jax.Array:
+    """Disjoint-union batched small graphs -> per-graph logits via
+    sum-pool readout (GIN-style)."""
+    node_logits = gnn_forward_full(params, cfg, x, edge_index)
+    return jax.ops.segment_sum(node_logits, graph_id,
+                               num_segments=n_graphs)
+
+
+def gnn_loss(params: Params, cfg: GNNConfig, x, edge_index, labels,
+             mask=None) -> jax.Array:
+    logits = gnn_forward_full(params, cfg, x, edge_index)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()

@@ -1,0 +1,266 @@
+"""Shared neural-network layers (pure-function style, pytree params).
+
+No framework dependency: a layer is an ``init(key, cfg) -> params`` plus an
+``apply(params, x, ...) -> y`` pair. All big models stack layer params on a
+leading layer axis and scan, keeping HLO size O(1) in depth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Params = Any
+
+
+# --------------------------------------------------------------- norms
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, max_pos: int, theta: float = 1e4) -> jax.Array:
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                      dtype=jnp.float32) / head_dim))
+    pos = jnp.arange(max_pos, dtype=jnp.float32)
+    return jnp.outer(pos, inv)                       # [max_pos, head_dim/2]
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 1e4) -> jax.Array:
+    """Rotary embedding. x: [B, S, H, D] or [B, S, D]; positions: [S]
+    absolute positions shared across the batch. Rotates (even, odd) pairs.
+    """
+    d = x.shape[-1]
+    inv = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = positions.astype(jnp.float32)[:, None] * inv      # [S, D/2]
+    if x.ndim == 4:
+        ang = ang[None, :, None, :]                          # [1,S,1,D/2]
+    elif x.ndim == 3:
+        ang = ang[None, :, :]                                # [1,S,D/2]
+    else:
+        raise ValueError(f"unsupported rope input rank {x.ndim}")
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+# --------------------------------------------------------------- linear
+def dense_init(key, d_in: int, d_out: int, dtype, bias: bool = False,
+               scale: float | None = None) -> Params:
+    std = scale if scale is not None else d_in ** -0.5
+    w = (jax.random.normal(key, (d_in, d_out), jnp.float32) * std
+         ).astype(dtype)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# --------------------------------------------------------------- attention
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    attn_chunk: int = 1024      # kv-chunk size of the online-softmax scan
+
+
+def attn_init(key, cfg: AttnConfig, dtype) -> Params:
+    ks = jax.random.split(key, 6)
+    h, hk, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, h * d, dtype, cfg.qkv_bias),
+        "wk": dense_init(ks[1], cfg.d_model, hk * d, dtype, cfg.qkv_bias),
+        "wv": dense_init(ks[2], cfg.d_model, hk * d, dtype, cfg.qkv_bias),
+        "wo": dense_init(ks[3], h * d, cfg.d_model, dtype,
+                         scale=(h * d) ** -0.5),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((d,), dtype)
+        p["k_norm"] = jnp.ones((d,), dtype)
+    return p
+
+
+def chunked_sdpa(q, k, v, *, causal: bool = True, q_offset: int | jax.Array = 0,
+                 chunk: int = 1024, valid_len=None) -> jax.Array:
+    """Memory-efficient attention: lax.scan over key/value chunks with an
+    online softmax (the pure-JAX counterpart of kernels/flash_attention).
+
+    q: [B, S, H, D]; k/v: [B, T, Hkv, D]. Never materializes [S, T];
+    per-step temp is [B, S, H, chunk]. The chunk body is rematerialized in
+    the backward pass, so training memory is O(S·D), not O(S·T).
+
+    ``q_offset``: absolute position of q[0] (causal masking for chunked
+    prefill); ``valid_len``: mask key positions >= valid_len (KV caches).
+    """
+    b, s, h, d = q.shape
+    t, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    scale = d ** -0.5
+    n_chunks = -(-t // chunk)
+    t_pad = n_chunks * chunk
+    if t_pad != t:
+        pad = [(0, 0), (0, t_pad - t), (0, 0), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    t_valid = valid_len if valid_len is not None else t
+    qf = q.reshape(b, s, hk, g, d).astype(jnp.float32)
+    kc = k.reshape(b, n_chunks, chunk, hk, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, hk, d).transpose(1, 0, 2, 3, 4)
+    bases = jnp.arange(n_chunks) * chunk
+    qpos = jnp.arange(s) + q_offset
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kblk, vblk, base = xs
+        logits = jnp.einsum("bshgd,bchd->bshgc", qf,
+                            kblk.astype(jnp.float32)) * scale
+        kpos = base + jnp.arange(chunk)
+        mask = kpos[None, :] < t_valid
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        logits = jnp.where(mask[None, :, None, None, :], logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bshgc,bchd->bshgd", p, vblk.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    init = (jnp.full((b, s, hk, g), -1e30, jnp.float32),
+            jnp.zeros((b, s, hk, g), jnp.float32),
+            jnp.zeros((b, s, hk, g, d), jnp.float32))
+    (m, l, acc), _ = lax.scan(jax.checkpoint(body), init, (kc, vc, bases))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, s, h, d).astype(q.dtype)
+
+
+def _sdpa(q, k, v, causal: bool, q_offset=None):
+    """q [B,S,H,D], k/v [B,T,Hkv,D] -> [B,S,H,D]; f32 softmax math.
+
+    ``q_offset``: absolute position of the first query (for causal masking
+    of decode/chunked-prefill where S != T).
+    """
+    b, s, h, d = q.shape
+    t, hk = k.shape[1], k.shape[2]
+    group = h // hk
+    qf = q.reshape(b, s, hk, group, d).astype(jnp.float32)
+    logits = jnp.einsum("bshgd,bthd->bhgst", qf,
+                        k.astype(jnp.float32)) * (d ** -0.5)
+    if causal:
+        off = q_offset if q_offset is not None else t - s
+        qpos = jnp.arange(s)[:, None] + off
+        kpos = jnp.arange(t)[None, :]
+        mask = kpos <= qpos
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, d).astype(q.dtype)
+
+
+def attn_apply(p: Params, cfg: AttnConfig, x: jax.Array,
+               positions: jax.Array, kv_cache=None, causal: bool = True):
+    """Returns (y, new_kv_cache). kv_cache = (k, v, length) with k/v
+    [B, S_max, Hkv, D] or None for plain training forward."""
+    b, s, _ = x.shape
+    h, hk, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = dense(p["wq"], x).reshape(b, s, h, d)
+    k = dense(p["wk"], x).reshape(b, s, hk, d)
+    v = dense(p["wv"], x).reshape(b, s, hk, d)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if kv_cache is None:
+        if s > cfg.attn_chunk:
+            y = chunked_sdpa(q, k, v, causal=causal,
+                             chunk=min(cfg.attn_chunk, s))
+        else:
+            y = _sdpa(q, k, v, causal=causal)
+        new_cache = None
+    else:
+        ck, cv, length = kv_cache
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, length, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, length, 0, 0))
+        t = ck.shape[1]
+        kpos = jnp.arange(t)
+        valid = kpos < (length + s)
+        qpos = positions[:s]
+        mask = valid[None, :] & (kpos[None, :] <= qpos[:, None])
+        y = _masked_sdpa(q, ck, cv, mask)
+        new_cache = (ck, cv, length + s)
+    y = y.reshape(b, s, h * d)
+    return dense(p["wo"], y), new_cache
+
+
+def _masked_sdpa(q, k, v, mask):
+    b, s, h, d = q.shape
+    t, hk = k.shape[1], k.shape[2]
+    group = h // hk
+    qf = q.reshape(b, s, hk, group, d).astype(jnp.float32)
+    logits = jnp.einsum("bshgd,bthd->bhgst", qf,
+                        k.astype(jnp.float32)) * (d ** -0.5)
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, d).astype(q.dtype)
+
+
+# --------------------------------------------------------------- mlp
+def swiglu_init(key, d_model: int, d_ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"wg": dense_init(k1, d_model, d_ff, dtype),
+            "wu": dense_init(k2, d_model, d_ff, dtype),
+            "wd": dense_init(k3, d_ff, d_model, dtype,
+                             scale=d_ff ** -0.5)}
+
+
+def swiglu_apply(p: Params, x: jax.Array) -> jax.Array:
+    return dense(p["wd"], jax.nn.silu(dense(p["wg"], x)) * dense(p["wu"], x))
+
+
+def gelu_mlp_init(key, d_model: int, d_ff: int, dtype,
+                  bias: bool = True) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"wi": dense_init(k1, d_model, d_ff, dtype, bias),
+            "wo": dense_init(k2, d_ff, d_model, dtype, bias,
+                             scale=d_ff ** -0.5)}
+
+
+def gelu_mlp_apply(p: Params, x: jax.Array) -> jax.Array:
+    return dense(p["wo"], jax.nn.gelu(dense(p["wi"], x)))

@@ -1,0 +1,257 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+K/V are compressed into a small latent ``c_kv`` (plus a shared RoPE key
+channel); the KV cache stores only ``[B, S, d_c + d_rope]`` — the memory
+win that makes the 500k-token decode cell feasible. Decode uses the
+*absorbed* formulation: ``W_uk`` folds into the query and ``W_uv`` into
+the output projection, so per-step attention works directly on the latent
+cache without rematerializing per-head K/V.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as _P
+
+from .layers import apply_rope, dense, dense_init, rms_norm
+
+
+def _cst(x, cfg: "MLAConfig", *axes):
+    if cfg.dp_axis is None:
+        return x
+    return lax.with_sharding_constraint(x, _P(*axes))
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    d_c: int = 512            # kv compression dim
+    d_cq: int = 1536          # q compression dim
+    d_nope: int = 128         # per-head non-rope dim
+    d_rope: int = 64          # per-head rope dim (shared k channel)
+    d_v: int = 128            # per-head value dim
+    rope_theta: float = 1e4
+    dp_axis: Any = None       # activation sharding (set by launch/steps)
+    tp_axis: Any = None
+    mesh: Any = None          # Mesh + decode_flash => flash-decoding path
+    decode_flash: bool = False
+
+
+def mla_init(key, cfg: MLAConfig, dtype) -> Params:
+    ks = jax.random.split(key, 8)
+    h = cfg.n_heads
+    return {
+        "w_dq": dense_init(ks[0], cfg.d_model, cfg.d_cq, dtype),
+        "q_norm": jnp.ones((cfg.d_cq,), dtype),
+        "w_uq": dense_init(ks[1], cfg.d_cq,
+                           h * (cfg.d_nope + cfg.d_rope), dtype),
+        "w_dkv": dense_init(ks[2], cfg.d_model, cfg.d_c, dtype),
+        "kv_norm": jnp.ones((cfg.d_c,), dtype),
+        "w_kr": dense_init(ks[3], cfg.d_model, cfg.d_rope, dtype),
+        "w_uk": dense_init(ks[4], cfg.d_c, h * cfg.d_nope, dtype),
+        "w_uv": dense_init(ks[5], cfg.d_c, h * cfg.d_v, dtype),
+        "w_o": dense_init(ks[6], h * cfg.d_v, cfg.d_model, dtype,
+                          scale=(h * cfg.d_v) ** -0.5),
+    }
+
+
+def _q_proj(p, cfg: MLAConfig, x, positions):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    cq = rms_norm(dense(p["w_dq"], x), p["q_norm"])
+    q = dense(p["w_uq"], cq).reshape(b, s, h, cfg.d_nope + cfg.d_rope)
+    q_nope, q_rope = q[..., :cfg.d_nope], q[..., cfg.d_nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_train_apply(p: Params, cfg: MLAConfig, x: jax.Array,
+                    positions: jax.Array, chunk: int = 1024) -> jax.Array:
+    """Training / prefill forward (no cache), causal. x: [B, S, d].
+
+    Flash-MLA: the online-softmax scan walks *latent* chunks and expands
+    per-head K/V per chunk inside the (rematerialized) body, so neither
+    the [S, S] score matrix nor the full per-head K/V [B, S, H, d] ever
+    materializes — the training-memory analogue of the latent KV cache.
+    """
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope = _q_proj(p, cfg, x, positions)            # [B,S,H,*]
+    # queries (and the softmax state) stay sequence-sharded; only the
+    # small latent K-side is gathered chunk-by-chunk
+    q_nope = _cst(q_nope, cfg, cfg.dp_axis, cfg.tp_axis, None, None)
+    q_rope = _cst(q_rope, cfg, cfg.dp_axis, cfg.tp_axis, None, None)
+    c_kv = rms_norm(dense(p["w_dkv"], x), p["kv_norm"])       # [B, S, d_c]
+    k_rope = apply_rope(dense(p["w_kr"], x), positions,
+                        cfg.rope_theta)                        # [B, S, d_r]
+    scale = (cfg.d_nope + cfg.d_rope) ** -0.5
+    ck = min(chunk, s)
+    n_chunks = -(-s // ck)
+    s_pad = n_chunks * ck
+    if s_pad != s:
+        c_kv = jnp.pad(c_kv, [(0, 0), (0, s_pad - s), (0, 0)])
+        k_rope = jnp.pad(k_rope, [(0, 0), (0, s_pad - s), (0, 0)])
+    cc = c_kv.reshape(b, n_chunks, ck, cfg.d_c).transpose(1, 0, 2, 3)
+    rc = k_rope.reshape(b, n_chunks, ck, cfg.d_rope).transpose(1, 0, 2, 3)
+    bases = jnp.arange(n_chunks) * ck
+    qf_n = q_nope.astype(jnp.float32)
+    qf_r = q_rope.astype(jnp.float32)
+    qpos = positions.astype(jnp.int32)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        c_blk, r_blk, base = xs
+        k_nope = dense(p["w_uk"], c_blk).reshape(b, ck, h, cfg.d_nope)
+        v_blk = dense(p["w_uv"], c_blk).reshape(b, ck, h, cfg.d_v)
+        logits = (jnp.einsum("bshd,bchd->bshc", qf_n,
+                             k_nope.astype(jnp.float32))
+                  + jnp.einsum("bshd,bcd->bshc", qf_r,
+                               r_blk.astype(jnp.float32))
+                  ) * scale                                   # [B,S,H,ck]
+        kpos = base + jnp.arange(ck)
+        mask = (kpos[None, :] <= qpos[:, None]) & (kpos[None, :] < s)
+        logits = jnp.where(mask[None, :, None, :], logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        pr = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + pr.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bshc,bchd->bshd", pr, v_blk.astype(jnp.float32))
+        m_new = _cst(m_new, cfg, cfg.dp_axis, cfg.tp_axis, None)
+        l_new = _cst(l_new, cfg, cfg.dp_axis, cfg.tp_axis, None)
+        acc_new = _cst(acc_new, cfg, cfg.dp_axis, cfg.tp_axis, None, None)
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((b, s, h), -1e30, jnp.float32),
+            jnp.zeros((b, s, h), jnp.float32),
+            jnp.zeros((b, s, h, cfg.d_v), jnp.float32))
+    (m, l, acc), _ = lax.scan(jax.checkpoint(body), init, (cc, rc, bases))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.reshape(b, s, h * cfg.d_v).astype(x.dtype)
+    out = _cst(out, cfg, cfg.dp_axis, cfg.tp_axis, None)
+    return dense(p["w_o"], out)
+
+
+def mla_init_cache(cfg: MLAConfig, batch: int, s_max: int, dtype
+                   ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    return (jnp.zeros((batch, s_max, cfg.d_c), dtype),
+            jnp.zeros((batch, s_max, cfg.d_rope), dtype),
+            jnp.zeros((), jnp.int32))
+
+
+def mla_decode_flash(p: Params, cfg: MLAConfig, x: jax.Array,
+                     cache) -> tuple[jax.Array, tuple]:
+    """Flash-decoding MLA step under shard_map (§Perf hillclimb A iter 2).
+
+    The latent cache is *sequence-sharded* over the model axis; each
+    shard updates only the cache slice it owns (masked DUS — no
+    cross-shard resharding), computes its partial online-softmax state
+    against its local keys, and the shards combine with a max/psum
+    log-sum-exp merge. Collective payload per layer = the [B_l, H, d_c]
+    partial accumulator (~MBs) instead of the all-gathered cache (~GBs).
+    """
+    mesh, dpa, tp = cfg.mesh, cfg.dp_axis, cfg.tp_axis
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    c_cache, r_cache, length = cache
+    s_max = c_cache.shape[1]
+    n_tp = int(mesh.shape[tp])
+    s_shard = s_max // n_tp
+    scale = (cfg.d_nope + cfg.d_rope) ** -0.5
+    w_uk = p["w_uk"]["w"].reshape(cfg.d_c, h, cfg.d_nope)
+
+    def inner(xl, c_l, r_l, length):
+        bl = xl.shape[0]
+        positions = length + jnp.arange(s)
+        q_nope, q_rope = _q_proj(p, cfg, xl, positions)    # [B_l,1,H,*]
+        c_new = rms_norm(dense(p["w_dkv"], xl), p["kv_norm"])
+        r_new = apply_rope(dense(p["w_kr"], xl), positions, cfg.rope_theta)
+        lo = jax.lax.axis_index(tp) * s_shard
+        pos_local = (length - lo).clip(0, s_shard - 1)
+        in_range = (length >= lo) & (length < lo + s_shard)
+        c_upd = jax.lax.dynamic_update_slice(
+            c_l, c_new.astype(c_l.dtype), (0, pos_local, 0))
+        r_upd = jax.lax.dynamic_update_slice(
+            r_l, r_new.astype(r_l.dtype), (0, pos_local, 0))
+        c_l = jnp.where(in_range, c_upd, c_l)
+        r_l = jnp.where(in_range, r_upd, r_l)
+        q_abs = jnp.einsum("bshd,chd->bshc", q_nope.astype(jnp.float32),
+                           w_uk.astype(jnp.float32))       # [B_l,1,H,d_c]
+        logits = (jnp.einsum("bshc,btc->bhst", q_abs,
+                             c_l.astype(jnp.float32))
+                  + jnp.einsum("bshd,btd->bhst",
+                               q_rope.astype(jnp.float32),
+                               r_l.astype(jnp.float32))) * scale
+        kpos = lo + jnp.arange(s_shard)
+        mask = kpos[None, :] <= positions[:, None]
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        m_l = logits.max(axis=-1)                          # [B_l,H,1]
+        m = jax.lax.pmax(m_l, tp)
+        pr = jnp.exp(logits - m[..., None])
+        l_sum = jax.lax.psum(pr.sum(axis=-1), tp)          # [B_l,H,1]
+        acc = jax.lax.psum(
+            jnp.einsum("bhst,btc->bshc", pr, c_l.astype(jnp.float32)),
+            tp)                                            # [B_l,1,H,d_c]
+        lat = acc / jnp.maximum(l_sum, 1e-30).transpose(0, 2, 1)[..., None]
+        return lat, c_l, r_l
+
+    from jax.sharding import PartitionSpec as P
+    lat, c2, r2 = jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(P(dpa, None, None), P(dpa, tp, None), P(dpa, tp, None),
+                  P()),
+        out_specs=(P(dpa, None, None, None), P(dpa, tp, None),
+                   P(dpa, tp, None)),
+        check_vma=False,
+    )(x, c_cache, r_cache, length)
+    w_uv = p["w_uv"]["w"].reshape(cfg.d_c, h, cfg.d_v)
+    out = jnp.einsum("bshc,chd->bshd", lat,
+                     w_uv.astype(jnp.float32))
+    out = out.reshape(b, s, h * cfg.d_v).astype(x.dtype)
+    return dense(p["w_o"], out), (c2, r2, length + s)
+
+
+def mla_decode_apply(p: Params, cfg: MLAConfig, x: jax.Array,
+                     cache) -> tuple[jax.Array, tuple]:
+    """Absorbed-form decode step. x: [B, 1, d]; cache latent-only."""
+    if cfg.decode_flash and cfg.mesh is not None:
+        return mla_decode_flash(p, cfg, x, cache)
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    c_cache, r_cache, length = cache
+    positions = length + jnp.arange(s)
+    q_nope, q_rope = _q_proj(p, cfg, x, positions)             # [B,1,H,*]
+    c_kv = rms_norm(dense(p["w_dkv"], x), p["kv_norm"])
+    k_rope = apply_rope(dense(p["w_kr"], x), positions, cfg.rope_theta)
+    c_cache = jax.lax.dynamic_update_slice(
+        c_cache, c_kv.astype(c_cache.dtype), (0, length, 0))
+    r_cache = jax.lax.dynamic_update_slice(
+        r_cache, k_rope.astype(r_cache.dtype), (0, length, 0))
+    t = c_cache.shape[1]
+    # absorb W_uk into q: q_abs[b,s,h,c] = sum_d q_nope[...,d] W_uk[c, h*d]
+    w_uk = p["w_uk"]["w"].reshape(cfg.d_c, h, cfg.d_nope)
+    q_abs = jnp.einsum("bshd,chd->bshc", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))               # [B,1,H,d_c]
+    scale = (cfg.d_nope + cfg.d_rope) ** -0.5
+    logits = (jnp.einsum("bshc,btc->bhst", q_abs,
+                         c_cache.astype(jnp.float32))
+              + jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
+                           r_cache.astype(jnp.float32))) * scale
+    kpos = jnp.arange(t)
+    mask = kpos[None, :] <= positions[:, None]
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # attend over the latent, then absorb W_uv into the output proj
+    lat = jnp.einsum("bhst,btc->bshc", probs,
+                     c_cache.astype(jnp.float32))              # [B,1,H,d_c]
+    w_uv = p["w_uv"]["w"].reshape(cfg.d_c, h, cfg.d_v)
+    out = jnp.einsum("bshc,chd->bshd", lat, w_uv.astype(jnp.float32))
+    out = out.reshape(b, s, h * cfg.d_v).astype(x.dtype)
+    return dense(p["w_o"], out), (c_cache, r_cache, length + s)

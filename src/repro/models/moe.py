@@ -1,0 +1,272 @@
+"""Mixture-of-Experts FFN (DeepSeek-V3 / Kimi-K2 style).
+
+Shared expert(s) + fine-grained routed experts with sigmoid top-k routing
+(aux-loss-free bias option).
+
+Dispatch is *group-local*: tokens are reshaped to [G, T/G, d] where G is
+the number of token shards (dp × tp on the production mesh), and the
+whole sort-based dispatch (argsort by expert, capacity clipping, scatter
+into per-expert slots) is vmapped over the group axis. Every sort/cumsum
+is therefore shard-local — nothing about routing crosses devices. The
+only cross-device movement is the expert-major regroup
+
+    [G, E, C, d]  --transpose-->  [E, G·C, d]
+
+whose input is sharded over G (token shards) and output over E (expert
+parallelism): GSPMD lowers exactly this into the MoE all-to-all. With
+G=1 (CPU tests) the same code runs unsharded.
+
+Capacity is per (group, expert): C = T_local·k/E · capacity_factor;
+overflow tokens are dropped (drop-and-scale policy, GShard-style),
+counted by ``router_load`` for the aux-free bias update.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as _P
+
+from .layers import dense_init, swiglu_apply, swiglu_init
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int            # routed experts
+    top_k: int
+    d_ff_expert: int          # per-expert hidden dim
+    n_shared: int = 1         # shared experts (always-on)
+    d_ff_shared: int | None = None   # defaults to d_ff_expert * n_shared
+    capacity_factor: float = 1.25
+    router_dtype: Any = jnp.float32
+    bias_update_rate: float = 1e-3   # aux-free load-balance bias (DSv3)
+    # distribution (set by launch/steps.py; None = single-device smoke)
+    ep_axis: Any = None              # expert-parallel mesh axis ("model")
+    token_axes: Any = None           # token-shard axes, e.g. ("data","model")
+    cap_axes: Any = None             # axes for the G*C slot dim (dp)
+    dispatch_groups: int = 1         # G = product of token_axes sizes
+    mesh: Any = None                 # Mesh => use the shard_map EP path
+    dp_axes: Any = None              # data axes of the mesh (shard_map)
+    seq_axis: Any = None             # sequence-parallel axis of activations
+
+
+def moe_init(key, d_model: int, cfg: MoEConfig, dtype) -> Params:
+    k_r, k_e, k_s = jax.random.split(key, 3)
+    expert_keys = jax.random.split(k_e, cfg.n_experts)
+    experts = jax.vmap(
+        lambda k: swiglu_init(k, d_model, cfg.d_ff_expert, dtype))(
+            expert_keys)
+    p = {
+        "router": dense_init(k_r, d_model, cfg.n_experts, jnp.float32),
+        "router_bias": jnp.zeros((cfg.n_experts,), jnp.float32),
+        "experts": experts,
+    }
+    if cfg.n_shared > 0:
+        d_sh = cfg.d_ff_shared or cfg.d_ff_expert * cfg.n_shared
+        p["shared"] = swiglu_init(k_s, d_model, d_sh, dtype)
+    return p
+
+
+def _cst(x, spec):
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _route(p: Params, cfg: MoEConfig, flat: jax.Array):
+    """flat: [T, d] -> (top_idx [T, K], top_w [T, K]); sigmoid + aux-free
+    bias selection, weights from unbiased scores (DSv3 §2.1.2)."""
+    scores = jax.nn.sigmoid(
+        flat.astype(cfg.router_dtype) @ p["router"]["w"])
+    biased = scores + p["router_bias"][None, :]
+    _, top_idx = jax.lax.top_k(biased, cfg.top_k)
+    top_w = jnp.take_along_axis(scores, top_idx, axis=1)
+    top_w = top_w / (top_w.sum(axis=1, keepdims=True) + 1e-9)
+    return top_idx, top_w
+
+
+def _local_sort_dispatch(flat, keys, n_buckets: int, cap: int,
+                         payload_dtype=None):
+    """Sort-based bucketing of [T, d] rows by key into [n_buckets*cap, d].
+
+    Returns (buf, order, slot) where ``slot[i]`` is the destination of the
+    i-th *sorted* row (== n_buckets*cap when dropped) and ``order`` is the
+    sort permutation. All ops are local (intended for shard_map bodies).
+    """
+    t = keys.shape[0]
+    # negative keys mark empty slots: remap past the last bucket so they
+    # sort to the end and never shift real buckets' positions
+    ks_remap = jnp.where(keys < 0, n_buckets, keys)
+    order = jnp.argsort(ks_remap)
+    ks = ks_remap[order]
+    counts = jnp.bincount(ks, length=n_buckets + 1)[:n_buckets]
+    starts = jnp.cumsum(counts) - counts
+    idx = jnp.arange(t) - starts[ks.clip(0, n_buckets - 1)]
+    slot = jnp.where((ks < n_buckets) & (idx < cap),
+                     ks.clip(0, n_buckets - 1) * cap + idx, n_buckets * cap)
+    buf = jnp.zeros((n_buckets * cap, flat.shape[1]), flat.dtype
+                    ).at[slot].set(flat[order], mode="drop")
+    return buf, order, slot
+
+
+def _moe_shard_map(p: Params, cfg: MoEConfig, x: jax.Array) -> jax.Array:
+    """Expert-parallel MoE with explicit all-to-alls under shard_map.
+
+    Layout: x is [B, S, d] sharded (dp_axes, seq_axis, None); routed
+    experts are sharded over ``ep_axis`` (E_l = E / n_ep per shard). Each
+    shard routes its local tokens, packs per-destination send buffers,
+    all-to-alls tokens + expert ids to the owning shards, groups received
+    tokens by local expert, runs the expert MLPs, and reverses the path.
+    Two capacity stages (send and expert) drop overflow tokens
+    (drop-and-scale, GShard-style), both local — the SPMD partitioner
+    never sees the sorts/scatters that it would otherwise replicate.
+    """
+    from jax.sharding import PartitionSpec as P
+    mesh = cfg.mesh
+    ep = cfg.ep_axis
+    n_ep = int(mesh.shape[ep])
+    e, k = cfg.n_experts, cfg.top_k
+    e_l = e // n_ep
+    b, s, d = x.shape
+    x_spec = P(cfg.dp_axes, cfg.seq_axis, None)
+    exp_specs = jax.tree.map(lambda _: P(ep), p["experts"])
+
+    def inner(xl, experts, router_w, router_bias):
+        bl, sl, _ = xl.shape
+        tl = bl * sl
+        flat = xl.reshape(tl, d)
+        scores = jax.nn.sigmoid(flat.astype(cfg.router_dtype) @ router_w)
+        biased = scores + router_bias[None, :]
+        _, top_idx = jax.lax.top_k(biased, k)
+        top_w = jnp.take_along_axis(scores, top_idx, axis=1)
+        top_w = (top_w / (top_w.sum(1, keepdims=True) + 1e-9)
+                 ).astype(flat.dtype)
+        pair_e = top_idx.reshape(-1).astype(jnp.int32)
+        pair_t = jnp.repeat(jnp.arange(tl, dtype=jnp.int32), k)
+        pair_w = top_w.reshape(-1)
+        dest = pair_e // e_l
+        c_send = int(max(1, round(tl * k / n_ep * cfg.capacity_factor)))
+        send_x, order, slot = _local_sort_dispatch(flat[pair_t], dest,
+                                                   n_ep, c_send)
+        send_le = jnp.full((n_ep * c_send,), -1, jnp.int32).at[slot].set(
+            (pair_e % e_l)[order], mode="drop")
+        recv_x = jax.lax.all_to_all(send_x.reshape(n_ep, c_send, d), ep,
+                                    0, 0, tiled=True)
+        recv_le = jax.lax.all_to_all(send_le.reshape(n_ep, c_send), ep,
+                                     0, 0, tiled=True)
+        rx = recv_x.reshape(n_ep * c_send, d)
+        rle = recv_le.reshape(-1)
+        r = n_ep * c_send
+        cap_e = int(max(1, round(r / e_l * cfg.capacity_factor)))
+        buf, order2, slot2 = _local_sort_dispatch(rx, rle, e_l, cap_e)
+        out = jax.vmap(swiglu_apply)(experts, buf.reshape(e_l, cap_e, d))
+        out = out.reshape(e_l * cap_e, d)
+        back = jnp.zeros((r, d), flat.dtype).at[order2].set(
+            jnp.where((slot2 < e_l * cap_e)[:, None],
+                      out[slot2.clip(0, e_l * cap_e - 1)], 0.0),
+            mode="drop")
+        ret = jax.lax.all_to_all(back.reshape(n_ep, c_send, d), ep,
+                                 0, 0, tiled=True).reshape(r, d)
+        got = jnp.where((slot < r)[:, None], ret[slot.clip(0, r - 1)], 0.0)
+        y = jnp.zeros((tl, d), flat.dtype).at[pair_t[order]].add(
+            got * pair_w[order][:, None])
+        return y.reshape(bl, sl, d)
+
+    y = jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(x_spec, exp_specs, P(), P()),
+        out_specs=x_spec, check_vma=False,
+    )(x, p["experts"], p["router"]["w"], p["router_bias"])
+    if "shared" in p:
+        # token-local: operate on [B, S, d] directly (no reshape — a
+        # (dp, tp)-sharded dim merge would force a sequence all-gather)
+        y = y + swiglu_apply(p["shared"], x)
+    return y
+
+
+def moe_apply(p: Params, cfg: MoEConfig, x: jax.Array) -> jax.Array:
+    """x: [B, S, d] -> [B, S, d]."""
+    if cfg.mesh is not None:
+        return _moe_shard_map(p, cfg, x)
+    b, s, d = x.shape
+    t = b * s
+    g = max(1, cfg.dispatch_groups)
+    if t % g != 0:   # ragged fallback (smoke shapes): single group
+        g = 1
+    tl = t // g
+    e, k = cfg.n_experts, cfg.top_k
+    cap = int(max(k, round(tl * k / e * cfg.capacity_factor)))
+
+    sharded = g > 1 and cfg.token_axes is not None
+    tok_spec = _P(cfg.token_axes, None, None) if sharded else None
+    # [E, G, C, d]: experts over EP axis, groups over the dp axes —
+    # pure dim-permutation away from the dispatch layout (GSPMD lowers
+    # the permutation to the MoE all-to-all; no dim merging, which the
+    # SPMD partitioner cannot re-shard without replicating).
+    ep_spec = (_P(cfg.ep_axis, cfg.cap_axes if sharded else None,
+                  None, None)
+               if cfg.ep_axis is not None else None)
+
+    xs = _cst(x.reshape(g, tl, d), tok_spec)
+
+    def dispatch(xg):
+        """[tl, d] -> (buf [E, C, d], pt, pw, slot)."""
+        top_idx, top_w = _route(p, cfg, xg)
+        pair_e = top_idx.reshape(-1)                       # [tl*k]
+        pair_t = jnp.repeat(jnp.arange(tl, dtype=jnp.int32), k)
+        pair_w = top_w.reshape(-1)
+        order = jnp.argsort(pair_e)
+        pe, pt, pw = pair_e[order], pair_t[order], pair_w[order]
+        counts = jnp.bincount(pe, length=e)
+        starts = jnp.cumsum(counts) - counts
+        idx_in_e = jnp.arange(tl * k) - starts[pe]
+        slot = jnp.where(idx_in_e < cap, pe * cap + idx_in_e, e * cap)
+        buf = jnp.zeros((e * cap, d), x.dtype).at[slot].set(
+            xg[pt], mode="drop")
+        return buf.reshape(e, cap, d), pt, pw, slot
+
+    buf_g, pt_g, pw_g, slot_g = jax.vmap(dispatch)(xs)     # [G, E, C, d]
+
+    # ---- expert-major regroup (the all-to-all) --------------------------
+    buf = _cst(buf_g.transpose(1, 0, 2, 3), ep_spec)       # [E, G, C, d]
+    out = jax.vmap(swiglu_apply)(p["experts"], buf)        # [E, G, C, d]
+    out = _cst(out, ep_spec)
+    out_g = _cst(out.transpose(1, 0, 2, 3),
+                 _P(cfg.token_axes, None, None, None) if sharded else None)
+
+    def combine(out_buf, pt, pw, slot):
+        flat_buf = out_buf.reshape(e * cap, d)
+        got = jnp.where((slot < e * cap)[:, None],
+                        flat_buf[slot.clip(0, e * cap - 1)], 0.0)
+        return jnp.zeros((tl, d), x.dtype).at[pt].add(
+            got * pw[:, None].astype(x.dtype))
+
+    comb = jax.vmap(combine)(out_g, pt_g, pw_g, slot_g)    # [G, tl, d]
+    comb = _cst(comb, tok_spec)
+    y = comb.reshape(b, s, d)
+
+    if "shared" in p:
+        y = y + swiglu_apply(p["shared"], x.reshape(t, d)).reshape(b, s, d)
+    return y
+
+
+def router_load(p: Params, cfg: MoEConfig, x: jax.Array) -> jax.Array:
+    """Expert load fractions for the aux-free bias update (train loop)."""
+    b, s, d = x.shape
+    flat = x.reshape(-1, d)
+    top_idx, _ = _route(p, cfg, flat)
+    counts = jnp.bincount(top_idx.reshape(-1), length=cfg.n_experts)
+    return counts / counts.sum()
+
+
+def update_router_bias(p: Params, cfg: MoEConfig,
+                       load: jax.Array) -> Params:
+    """Aux-loss-free balancing: nudge bias against over/under-loaded
+    experts (DeepSeek-V3 eq. 16-17 style sign update)."""
+    target = 1.0 / cfg.n_experts
+    delta = cfg.bias_update_rate * jnp.sign(target - load)
+    return {**p, "router_bias": p["router_bias"] + delta}

@@ -1,0 +1,151 @@
+"""DIN (Deep Interest Network) — target attention over user history.
+
+The huge-sparse-embedding regime: item/category tables are the hot path.
+JAX has no ``nn.EmbeddingBag``; multi-hot bag lookups are built from
+``jnp.take`` + ``jax.ops.segment_sum`` (the assignment's explicit
+requirement) in :func:`embedding_bag`.
+
+Four serving/training shapes are supported by the same parameters:
+  * train/serve  — [B] targets × [B, L] histories -> [B] logits,
+  * retrieval    — 1 user × 1e6 candidates: the target-attention MLP runs
+    over the candidate axis in MXU-friendly batched form (no host loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, dense_init
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class DINConfig:
+    name: str
+    n_items: int
+    n_cats: int
+    embed_dim: int = 18
+    seq_len: int = 100
+    attn_hidden: tuple = (80, 40)
+    mlp_hidden: tuple = (200, 80)
+    n_dense_feats: int = 8
+    param_dtype: Any = jnp.float32
+
+
+def din_init(key, cfg: DINConfig) -> Params:
+    ks = jax.random.split(key, 10)
+    d = cfg.embed_dim
+    feat = 2 * d                 # item + category embedding per position
+    p = {
+        "item_table": (jax.random.normal(ks[0], (cfg.n_items, d),
+                                         jnp.float32) * 0.01
+                       ).astype(cfg.param_dtype),
+        "cat_table": (jax.random.normal(ks[1], (cfg.n_cats, d),
+                                        jnp.float32) * 0.01
+                      ).astype(cfg.param_dtype),
+    }
+    a_in = 4 * feat              # [hist, target, hist-target, hist*target]
+    dims_a = (a_in,) + cfg.attn_hidden + (1,)
+    p["attn"] = [dense_init(ks[2 + i], dims_a[i], dims_a[i + 1],
+                            cfg.param_dtype, bias=True)
+                 for i in range(len(dims_a) - 1)]
+    m_in = 2 * feat + cfg.n_dense_feats   # pooled + target + profile
+    dims_m = (m_in,) + cfg.mlp_hidden + (1,)
+    p["mlp"] = [dense_init(ks[6 + i], dims_m[i], dims_m[i + 1],
+                           cfg.param_dtype, bias=True)
+                for i in range(len(dims_m) - 1)]
+    return p
+
+
+def embedding_bag(table: jax.Array, indices: jax.Array,
+                  segment_ids: jax.Array, n_bags: int,
+                  mode: str = "sum") -> jax.Array:
+    """EmbeddingBag built from take + segment_sum.
+
+    indices: int32 [NNZ] rows of ``table``; segment_ids: int32 [NNZ]
+    bag id per index (sorted not required). Returns [n_bags, d].
+    """
+    rows = jnp.take(table, indices, axis=0)
+    s = jax.ops.segment_sum(rows, segment_ids, num_segments=n_bags)
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones_like(indices, jnp.float32),
+                                  segment_ids, num_segments=n_bags)
+        s = s / jnp.maximum(cnt[:, None], 1.0)
+    return s
+
+
+def _mlp(layers: list[Params], x: jax.Array,
+         act=jax.nn.relu) -> jax.Array:
+    for i, p in enumerate(layers):
+        x = dense(p, x)
+        if i < len(layers) - 1:
+            x = act(x)
+    return x
+
+
+def _embed(p: Params, item_ids: jax.Array, cat_ids: jax.Array) -> jax.Array:
+    return jnp.concatenate([jnp.take(p["item_table"], item_ids, axis=0),
+                            jnp.take(p["cat_table"], cat_ids, axis=0)],
+                           axis=-1)
+
+
+def din_attention_pool(p: Params, hist: jax.Array, target: jax.Array,
+                       mask: jax.Array) -> jax.Array:
+    """hist: [..., L, F], target: [..., F] -> pooled [..., F].
+
+    DIN activation-unit attention: per-position MLP on
+    [hist, target, hist - target, hist * target] -> scalar weight; the
+    weighted sum (no softmax, per the paper) pools the history.
+    """
+    t = jnp.broadcast_to(target[..., None, :], hist.shape)
+    z = jnp.concatenate([hist, t, hist - t, hist * t], axis=-1)
+    w = _mlp(p["attn"], z, act=jax.nn.sigmoid)[..., 0]      # [..., L]
+    w = w * mask
+    return (hist * w[..., None]).sum(axis=-2)
+
+
+def din_forward(p: Params, cfg: DINConfig, batch: dict) -> jax.Array:
+    """Pointwise CTR scoring.
+
+    batch: target_item/target_cat [B], hist_items/hist_cats [B, L],
+           hist_mask [B, L], dense_feats [B, n_dense]. Returns [B] logits.
+    """
+    target = _embed(p, batch["target_item"], batch["target_cat"])  # [B,F]
+    hist = _embed(p, batch["hist_items"], batch["hist_cats"])      # [B,L,F]
+    pooled = din_attention_pool(p, hist, target, batch["hist_mask"])
+    z = jnp.concatenate([pooled, target, batch["dense_feats"]], axis=-1)
+    return _mlp(p["mlp"], z)[..., 0]
+
+
+def din_score_candidates(p: Params, cfg: DINConfig, user: dict,
+                         cand_items: jax.Array, cand_cats: jax.Array
+                         ) -> jax.Array:
+    """Retrieval scoring: one user against N candidates -> [N] logits.
+
+    user: hist_items/hist_cats [L], hist_mask [L], dense_feats [n_dense].
+    The history embedding is computed once; the attention pool runs
+    batched over the candidate axis.
+    """
+    hist = _embed(p, user["hist_items"], user["hist_cats"])   # [L, F]
+    n = cand_items.shape[0]
+    target = _embed(p, cand_items, cand_cats)                 # [N, F]
+    hist_b = jnp.broadcast_to(hist[None], (n,) + hist.shape)  # [N, L, F]
+    pooled = din_attention_pool(p, hist_b, target,
+                                jnp.broadcast_to(user["hist_mask"][None],
+                                                 (n, hist.shape[0])))
+    dense_b = jnp.broadcast_to(user["dense_feats"][None],
+                               (n, user["dense_feats"].shape[0]))
+    z = jnp.concatenate([pooled, target, dense_b], axis=-1)
+    return _mlp(p["mlp"], z)[..., 0]
+
+
+def din_loss(p: Params, cfg: DINConfig, batch: dict) -> jax.Array:
+    logits = din_forward(p, cfg, batch)
+    labels = batch["labels"].astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels
+        + jnp.log1p(jnp.exp(-jnp.abs(logits))))

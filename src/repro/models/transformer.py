@@ -1,0 +1,398 @@
+"""Unified decoder-only transformer LM: dense / GQA / qk-norm / MLA / MoE.
+
+One config covers all five assigned LM architectures. Layer parameters are
+stacked on a leading axis and the forward pass ``lax.scan``s over them
+(with optional per-layer remat), keeping the HLO O(1) in depth — essential
+for 61-layer 671B-parameter dry-runs to compile quickly.
+
+Entry points:
+  * ``lm_init``          — parameter pytree (stacked layers).
+  * ``lm_logits``        — training / prefill forward -> [B, S, V].
+  * ``lm_loss``          — next-token CE loss (+ optional MTP loss).
+  * ``init_decode_state``/``lm_decode_step`` — KV-cached decoding
+    (latent cache when MLA is enabled).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as _P
+
+from .layers import (AttnConfig, attn_apply, attn_init, dense, dense_init,
+                     gelu_mlp_apply, gelu_mlp_init, rms_norm, swiglu_apply,
+                     swiglu_init)
+from .mla import (MLAConfig, mla_decode_apply, mla_init, mla_init_cache,
+                  mla_train_apply)
+from .moe import MoEConfig, moe_apply, moe_init
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    mlp: str = "swiglu"                  # "swiglu" | "gelu"
+    tie_embeddings: bool = False
+    moe: MoEConfig | None = None
+    mla: MLAConfig | None = None
+    mtp: bool = False                    # DeepSeek-V3 multi-token predict
+    mtp_weight: float = 0.3
+    param_dtype: Any = jnp.bfloat16
+    compute_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    # activation-sharding constraint axes (set by launch/steps.py when
+    # running under a mesh; None = no constraints, e.g. CPU smoke tests)
+    dp_axis: Any = None
+    tp_axis: Any = None
+    mesh: Any = None          # Mesh => vocab-parallel embedding lookup
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def attn_cfg(self) -> AttnConfig:
+        return AttnConfig(d_model=self.d_model, n_heads=self.n_heads,
+                          n_kv_heads=self.n_kv_heads, head_dim=self.hd,
+                          qkv_bias=self.qkv_bias, qk_norm=self.qk_norm,
+                          rope_theta=self.rope_theta)
+
+    def n_params(self) -> int:
+        """Total parameter count (used for MODEL_FLOPS in §Roofline)."""
+        d, ff, v = self.d_model, self.d_ff, self.vocab
+        if self.mla is not None:
+            m = self.mla
+            attn = (d * m.d_cq + m.d_cq * m.n_heads * (m.d_nope + m.d_rope)
+                    + d * m.d_c + d * m.d_rope
+                    + m.d_c * m.n_heads * (m.d_nope + m.d_v)
+                    + m.n_heads * m.d_v * d)
+        else:
+            attn = d * self.hd * (self.n_heads + 2 * self.n_kv_heads) \
+                + self.n_heads * self.hd * d
+        if self.moe is not None:
+            e = self.moe
+            ffp = e.n_experts * 3 * d * e.d_ff_expert
+            if e.n_shared:
+                ffp += 3 * d * (e.d_ff_shared or e.d_ff_expert * e.n_shared)
+            ffp += d * e.n_experts
+        else:
+            ffp = 3 * d * ff if self.mlp == "swiglu" else 2 * d * ff
+        return self.n_layers * (attn + ffp) + 2 * v * d
+
+    def n_active_params(self) -> int:
+        """Activated parameters per token (MoE top-k)."""
+        if self.moe is None:
+            return self.n_params()
+        d = self.d_model
+        e = self.moe
+        full = self.n_params()
+        routed_all = self.n_layers * e.n_experts * 3 * d * e.d_ff_expert
+        routed_act = self.n_layers * e.top_k * 3 * d * e.d_ff_expert
+        return full - routed_all + routed_act
+
+
+# ------------------------------------------------------------------ init
+def _layer_init(key, cfg: LMConfig) -> Params:
+    k_attn, k_ffn = jax.random.split(key)
+    dt = cfg.param_dtype
+    p = {"ln_attn": jnp.ones((cfg.d_model,), dt),
+         "ln_ffn": jnp.ones((cfg.d_model,), dt)}
+    if cfg.mla is not None:
+        p["attn"] = mla_init(k_attn, cfg.mla, dt)
+    else:
+        p["attn"] = attn_init(k_attn, cfg.attn_cfg(), dt)
+    if cfg.moe is not None:
+        p["ffn"] = moe_init(k_ffn, cfg.d_model, cfg.moe, dt)
+    elif cfg.mlp == "swiglu":
+        p["ffn"] = swiglu_init(k_ffn, cfg.d_model, cfg.d_ff, dt)
+    else:
+        p["ffn"] = gelu_mlp_init(k_ffn, cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def lm_init(key, cfg: LMConfig) -> Params:
+    k_e, k_l, k_h, k_m = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_l, cfg.n_layers)
+    layers = jax.vmap(lambda k: _layer_init(k, cfg))(layer_keys)
+    p = {
+        "embed": (jax.random.normal(k_e, (cfg.vocab, cfg.d_model),
+                                    jnp.float32) * 0.02
+                  ).astype(cfg.param_dtype),
+        "layers": layers,
+        "ln_final": jnp.ones((cfg.d_model,), cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(k_h, cfg.d_model, cfg.vocab,
+                                  cfg.param_dtype)
+    if cfg.mtp:
+        km1, km2 = jax.random.split(k_m)
+        p["mtp"] = {"proj": dense_init(km1, 2 * cfg.d_model, cfg.d_model,
+                                       cfg.param_dtype),
+                    "block": _layer_init(km2, cfg),
+                    "ln": jnp.ones((cfg.d_model,), cfg.param_dtype)}
+    return p
+
+
+def _cst(x: jax.Array, cfg: LMConfig, *axes) -> jax.Array:
+    """Batch-sharding constraint (ZeRO-3 style: keep activations sharded
+    over data; let GSPMD all-gather FSDP weights instead)."""
+    if cfg.dp_axis is None:
+        return x
+    return lax.with_sharding_constraint(x, _P(*axes))
+
+
+def _embed_lookup(params: Params, cfg: LMConfig,
+                  tokens: jax.Array) -> jax.Array:
+    """Vocab-parallel embedding lookup.
+
+    Plain ``embed[tokens]`` backward is a scatter-add that the SPMD
+    partitioner materializes as a full fp32 [V, d] per device. Under a
+    mesh we shard_map the lookup instead: each model shard resolves its
+    own vocab range and a psum(+scatter over the sequence) assembles the
+    activations — the backward is then a *local* scatter per shard.
+    """
+    emb = params["embed"]
+    v = emb.shape[0]
+    mesh = cfg.mesh
+    tp = cfg.tp_axis if cfg.tp_axis is not None else None
+    if (mesh is None or tp is None or v % mesh.shape[tp] != 0
+            or tokens.shape[1] % mesh.shape[tp] != 0):
+        x = emb.astype(cfg.compute_dtype)[tokens]
+        return _cst(x, cfg, cfg.dp_axis, cfg.tp_axis, None)
+    n_tp = mesh.shape[tp]
+
+    def inner(emb_l, tok_l):
+        vsh = emb_l.shape[0]
+        lo = lax.axis_index(tp) * vsh
+        sel = tok_l - lo
+        ok = (sel >= 0) & (sel < vsh)
+        out = jnp.where(ok[..., None],
+                        emb_l[sel.clip(0, vsh - 1)].astype(
+                            cfg.compute_dtype), 0)
+        return lax.psum_scatter(out, tp, scatter_dimension=1, tiled=True)
+
+    return jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(_P(tp, None), _P(cfg.dp_axis, None)),
+        out_specs=_P(cfg.dp_axis, tp, None), check_vma=False,
+    )(emb, tokens)
+
+
+# --------------------------------------------------------------- forward
+def _block_apply(layer_p: Params, cfg: LMConfig, x: jax.Array,
+                 positions: jax.Array) -> jax.Array:
+    h = rms_norm(x, layer_p["ln_attn"])
+    if cfg.mla is not None:
+        a = mla_train_apply(layer_p["attn"], cfg.mla, h, positions)
+    else:
+        a, _ = attn_apply(layer_p["attn"], cfg.attn_cfg(), h, positions)
+    x = x + a
+    h = rms_norm(x, layer_p["ln_ffn"])
+    if cfg.moe is not None:
+        f = moe_apply(layer_p["ffn"], cfg.moe, h)
+    elif cfg.mlp == "swiglu":
+        f = swiglu_apply(layer_p["ffn"], h)
+    else:
+        f = gelu_mlp_apply(layer_p["ffn"], h)
+    return x + f
+
+
+def _backbone(params: Params, cfg: LMConfig, tokens: jax.Array
+              ) -> jax.Array:
+    b, s = tokens.shape
+    # sequence-parallel activation sharding (Megatron-SP): the remat
+    # boundary (= what backward saves per layer) is sharded over BOTH the
+    # data axis (batch) and the model axis (sequence), so the saved stack
+    # is [L, B/dp, S/tp, d] instead of [L, B/dp, S, d]. Norms and matmuls
+    # are token-local; GSPMD all-gathers K/V inside attention only.
+    x = _embed_lookup(params, cfg, tokens)
+    x = _cst(x, cfg, cfg.dp_axis, cfg.tp_axis, None)
+    positions = jnp.arange(s)
+
+    def body(x, layer_p):
+        y = _block_apply(layer_p, cfg, x, positions)
+        return _cst(y, cfg, cfg.dp_axis, cfg.tp_axis, None), None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = lax.scan(fn, x, params["layers"])
+    return rms_norm(x, params["ln_final"])
+
+
+def _head(params: Params, cfg: LMConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].astype(x.dtype).T
+    else:
+        logits = dense(params["lm_head"], x)
+    return _cst(logits, cfg, cfg.dp_axis, cfg.tp_axis, None)
+
+
+def lm_logits(params: Params, cfg: LMConfig, tokens: jax.Array
+              ) -> jax.Array:
+    return _head(params, cfg, _backbone(params, cfg, tokens))
+
+
+def _xent(logits: jax.Array, targets: jax.Array,
+          mask: jax.Array | None = None) -> jax.Array:
+    """Cross entropy in a GSPMD-friendly form: the gold-logit term is a
+    masked reduction over the (model-sharded) vocab axis instead of a
+    take_along_axis gather, so no vocab all-gather is ever inserted."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    vocab_iota = lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    gold = jnp.where(vocab_iota == targets[..., None], lf, 0.0).sum(-1)
+    nll = lse - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()
+
+
+def _vocab_parallel_nll(params: Params, cfg: LMConfig, h: jax.Array,
+                        targets: jax.Array) -> jax.Array:
+    """Megatron-style vocab-parallel head + cross entropy under shard_map.
+
+    Each model shard holds a [d, V/tp] slice of the head; the sequence is
+    all-gathered once inside the shard, logits/loss are computed in
+    seq-chunks (rematerialized), and only psums of scalars-per-token cross
+    shards. The head gradient stays a *local* [d, V/tp] — without this the
+    partitioner materializes a full fp32 [V, d] per device.
+    """
+    mesh, tp = cfg.mesh, cfg.tp_axis
+    w = params["lm_head"]["w"] if not cfg.tie_embeddings else None
+    v = cfg.vocab
+    if (w is None or mesh is None or tp is None
+            or v % mesh.shape[tp] != 0
+            or h.shape[1] % (mesh.shape[tp] ** 2) != 0):
+        lf = _head(params, cfg, h).astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        viota = lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+        gold = jnp.where(viota == targets[..., None], lf, 0.0).sum(-1)
+        return lse - gold                                    # [B, S]
+
+    def inner(hl, wl, tl):
+        # hl: [B_l, S/tp, d] -> gather the full local sequence once
+        hfull = lax.all_gather(hl, tp, axis=1, tiled=True)   # [B_l, S, d]
+        vsh = wl.shape[1]
+        lo = lax.axis_index(tp) * vsh
+        n_chunks = mesh.shape[tp]
+        bl, s, d = hfull.shape
+        hc = hfull.reshape(bl, n_chunks, s // n_chunks, d).transpose(
+            1, 0, 2, 3)
+        tc = tl.reshape(bl, n_chunks, s // n_chunks).transpose(1, 0, 2)
+
+        def chunk_nll(_, xs):
+            hx, tx = xs
+            logits = (hx @ wl.astype(hx.dtype)).astype(jnp.float32)
+            m_loc = logits.max(axis=-1)
+            # the running max is a numerical-stability shift only
+            m = lax.pmax(lax.stop_gradient(m_loc), tp)
+            se = jnp.exp(logits - m[..., None]).sum(axis=-1)
+            se = lax.psum(se, tp)
+            viota = lax.broadcasted_iota(jnp.int32, logits.shape, 2) + lo
+            gold = jnp.where(viota == tx[..., None], logits, 0.0).sum(-1)
+            gold = lax.psum(gold, tp)
+            return None, jnp.log(se) + m - gold
+
+        _, nll = lax.scan(jax.checkpoint(chunk_nll), None, (hc, tc))
+        return nll.transpose(1, 0, 2).reshape(bl, s)
+
+    nll = jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(_P(cfg.dp_axis, tp, None), _P(None, tp),
+                  _P(cfg.dp_axis, None)),
+        out_specs=_P(cfg.dp_axis, None), check_vma=False,
+    )(h, w, targets)
+    return nll                                               # [B, S]
+
+
+def lm_loss(params: Params, cfg: LMConfig, batch: dict) -> jax.Array:
+    """batch: {"tokens": [B, S], "targets": [B, S]} (targets = next ids).
+
+    With ``cfg.mtp`` adds the DeepSeek-style one-step-ahead MTP loss.
+    """
+    h = _backbone(params, cfg, batch["tokens"])
+    loss = _vocab_parallel_nll(params, cfg, h, batch["targets"]).mean()
+    if cfg.mtp:
+        # predict t+2: combine h_t with the embedding of target t+1
+        def mtp_loss(h):
+            emb_next = _embed_lookup(params, cfg, batch["targets"])
+            z = jnp.concatenate([rms_norm(h, params["mtp"]["ln"]),
+                                 emb_next], axis=-1)
+            z = dense(params["mtp"]["proj"], z)
+            z = _cst(z, cfg, cfg.dp_axis, cfg.tp_axis, None)
+            s = z.shape[1]
+            z = _block_apply(params["mtp"]["block"], cfg, z,
+                             jnp.arange(s))
+            # predict targets shifted one more step; mask the last column
+            t2 = jnp.concatenate([batch["targets"][:, 1:],
+                                  batch["targets"][:, -1:]], axis=1)
+            nll = _vocab_parallel_nll(params, cfg, z, t2)
+            return nll[:, :-1].mean()
+        fn = jax.checkpoint(mtp_loss) if cfg.remat else mtp_loss
+        loss = loss + cfg.mtp_weight * fn(h)
+    return loss
+
+
+# ---------------------------------------------------------------- decode
+def init_decode_state(cfg: LMConfig, batch: int, s_max: int) -> Params:
+    dt = cfg.compute_dtype
+    if cfg.mla is not None:
+        def one(_):
+            return mla_init_cache(cfg.mla, batch, s_max, dt)
+        caches = jax.vmap(one)(jnp.arange(cfg.n_layers))
+    else:
+        hk, hd = cfg.n_kv_heads, cfg.hd
+        caches = (jnp.zeros((cfg.n_layers, batch, s_max, hk, hd), dt),
+                  jnp.zeros((cfg.n_layers, batch, s_max, hk, hd), dt),
+                  jnp.zeros((cfg.n_layers,), jnp.int32))
+    return {"cache": caches, "length": jnp.zeros((), jnp.int32)}
+
+
+def lm_decode_step(params: Params, cfg: LMConfig, tokens: jax.Array,
+                   state: Params) -> tuple[jax.Array, Params]:
+    """One decode step. tokens: [B, S_step] (S_step typically 1)."""
+    b, s = tokens.shape
+    x = _embed_lookup(params, cfg, tokens)
+    length = state["length"]
+    positions = length + jnp.arange(s)
+
+    def body(x, scanned):
+        layer_p, cache = scanned
+        h = rms_norm(x, layer_p["ln_attn"])
+        if cfg.mla is not None:
+            c, r, _ = cache
+            a, (c2, r2, _) = mla_decode_apply(
+                layer_p["attn"], cfg.mla, h, (c, r, length))
+            new_cache = (c2, r2, jnp.zeros((), jnp.int32))
+        else:
+            ck, cv, _ = cache
+            a, (ck2, cv2, _) = attn_apply(
+                layer_p["attn"], cfg.attn_cfg(), h, positions,
+                kv_cache=(ck, cv, length))
+            new_cache = (ck2, cv2, jnp.zeros((), jnp.int32))
+        x = x + a
+        h = rms_norm(x, layer_p["ln_ffn"])
+        if cfg.moe is not None:
+            f = moe_apply(layer_p["ffn"], cfg.moe, h)
+        elif cfg.mlp == "swiglu":
+            f = swiglu_apply(layer_p["ffn"], h)
+        else:
+            f = gelu_mlp_apply(layer_p["ffn"], h)
+        return x + f, new_cache
+
+    x, new_caches = lax.scan(body, x, (params["layers"], state["cache"]))
+    x = rms_norm(x, params["ln_final"])
+    logits = _head(params, cfg, x)
+    return logits, {"cache": new_caches, "length": length + s}

@@ -1,0 +1,270 @@
+"""Loop-aware cost extraction from optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any
+scan-over-layers model is undercounted by the trip count (verified
+empirically in EXPERIMENTS.md §Dry-run notes). This module re-derives the
+three roofline inputs by walking the HLO text:
+
+  * FLOPs       — 2·M·N·K per ``dot`` (shapes resolved via per-computation
+                  symbol tables), plus 1 flop/element for arithmetic
+                  fusions/reduces (documented approximation; dots dominate).
+  * HBM bytes   — per *top-level kernel* (fusion/dot/copy/reduce/...):
+                  operand bytes + result bytes. Fusion internals are
+                  register/VMEM-resident and excluded, which is exactly the
+                  roofline's HBM-traffic model.
+  * collectives — result-shape bytes per all-gather/all-reduce/
+                  reduce-scatter/all-to-all/collective-permute.
+
+``while`` instructions multiply their body cost by the trip count parsed
+from the condition computation (jax scans lower to ``iv < const``); when
+the trip count cannot be resolved the body is counted once and the result
+is flagged as a lower bound.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# ops that move no HBM bytes themselves
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "partition-id", "replica-id",
+             "opt-barrier", "custom-call"}
+
+_SHAPE_TOKEN = re.compile(r"^(\w+)\[([0-9,]*)\]")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*"
+    r"((?:\([^)]*\))|(?:\w+\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+    r"([\w\-]+)\((.*)$")
+_COMP_HEADER = re.compile(r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_PARAM = re.compile(r"([\w.\-]+)\s*:\s*(\([^)]*\)|\w+\[[0-9,]*\](?:\{[^}]*\})?)")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_ATTR_CALL = re.compile(r"(?:calls|to_apply)=%([\w.\-]+)")
+_ATTR_BODY = re.compile(r"body=%([\w.\-]+)")
+_ATTR_COND = re.compile(r"condition=%([\w.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _shape_elems_bytes(shape_str: str) -> tuple[int, int]:
+    """(elements, bytes) of a shape or tuple-shape string."""
+    elems = total = 0
+    for m in re.finditer(r"(\w+)\[([0-9,]*)\]", shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dt]
+    return elems, total
+
+
+def _dims(shape_str: str) -> list[int]:
+    m = _SHAPE_TOKEN.match(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    rest: str
+    operands: list[str]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    shapes: dict         # symbol -> shape string (params + instr results)
+    instrs: list         # [Instr]
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        hm = _COMP_HEADER.match(line)
+        if hm and line.rstrip().endswith("{"):
+            cur = Computation(hm.group(2), {}, [])
+            comps[cur.name] = cur
+            for pm in _PARAM.finditer(hm.group(3)):
+                cur.shapes[pm.group(1)] = pm.group(2)
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        im = _INSTR.match(line)
+        if not im:
+            continue
+        name, shape, op, rest = im.groups()
+        # operand names: inside the first balanced paren region
+        depth = 0
+        end = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    end = i
+                    break
+                depth -= 1
+        oper_str = rest[:end]
+        operands = _OPERAND.findall(oper_str)
+        cur.shapes[name] = shape
+        cur.instrs.append(Instr(name, shape, op, rest, operands))
+    return comps
+
+
+def _trip_count(comps: dict, cond_name: str) -> int | None:
+    cond = comps.get(cond_name)
+    if cond is None:
+        return None
+    consts = []
+    for ins in cond.instrs:
+        if ins.op == "constant" and ins.shape.startswith("s32[]"):
+            m = re.search(r"constant\((\-?\d+)\)", "constant(" + ins.rest)
+            if m:
+                consts.append(int(m.group(1)))
+    if len(consts) == 1:
+        return consts[0]
+    if consts:
+        return max(consts)      # jax scan: bound is the largest constant
+    return None
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: dict = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    unresolved_loops: int = 0
+
+    def add(self, other: "HloCost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+        for k in _COLLECTIVES:
+            self.coll_by_kind[k] += other.coll_by_kind[k] * mult
+        self.unresolved_loops += other.unresolved_loops
+
+
+def _instr_bytes(comp: Computation, ins: Instr) -> float:
+    _, out_b = _shape_elems_bytes(ins.shape)
+    in_b = 0
+    for o in ins.operands:
+        s = comp.shapes.get(o)
+        if s is not None:
+            in_b += _shape_elems_bytes(s)[1]
+    return out_b + in_b
+
+
+def _dot_flops(comp: Computation, ins: Instr) -> float:
+    out_elems, _ = _shape_elems_bytes(ins.shape)
+    k = 1
+    cm = _CONTRACT.search(ins.rest)
+    if cm and ins.operands:
+        lhs = comp.shapes.get(ins.operands[0])
+        if lhs:
+            d = _dims(lhs)
+            for idx in cm.group(1).split(","):
+                if idx and int(idx) < len(d):
+                    k *= d[int(idx)]
+    return 2.0 * out_elems * k
+
+
+def cost_of(comps: dict, name: str, memo: dict,
+            flops_only_comps: bool = False) -> HloCost:
+    """Recursive cost of one computation (memoized)."""
+    if name in memo:
+        return memo[name]
+    comp = comps.get(name)
+    c = HloCost()
+    memo[name] = c
+    if comp is None:
+        return c
+    for ins in comp.instrs:
+        if ins.op == "while":
+            bm = _ATTR_BODY.search(ins.rest)
+            cm = _ATTR_COND.search(ins.rest)
+            if bm:
+                body = cost_of(comps, bm.group(1), memo)
+                trip = _trip_count(comps, cm.group(1)) if cm else None
+                if trip is None:
+                    trip = 1
+                    c.unresolved_loops += 1
+                c.add(body, trip)
+            continue
+        if ins.op in ("call", "conditional", "fusion", "map"):
+            cm2 = _ATTR_CALL.search(ins.rest)
+            if cm2:
+                sub = cost_of(comps, cm2.group(1), memo)
+                # fusion: internals contribute flops but not HBM bytes
+                c.flops += sub.flops
+                c.coll_bytes += sub.coll_bytes
+                for k in _COLLECTIVES:
+                    c.coll_by_kind[k] += sub.coll_by_kind[k]
+                c.unresolved_loops += sub.unresolved_loops
+            if ins.op == "fusion":
+                c.bytes += _instr_bytes(comp, ins)
+            continue
+        if ins.op == "dot":
+            c.flops += _dot_flops(comp, ins)
+            c.bytes += _instr_bytes(comp, ins)
+            continue
+        if ins.op in _COLLECTIVES or any(
+                ins.op == k + "-start" for k in _COLLECTIVES):
+            kind = ins.op.replace("-start", "")
+            _, b = _shape_elems_bytes(ins.shape)
+            c.coll_bytes += b
+            c.coll_by_kind[kind] += b
+            c.bytes += _instr_bytes(comp, ins)
+            continue
+        if ins.op in _FREE_OPS or ins.op.endswith("-done"):
+            continue
+        # generic kernel: elementwise-ish flops + real traffic
+        elems, _ = _shape_elems_bytes(ins.shape)
+        if ins.op in ("add", "multiply", "subtract", "divide", "exponential",
+                      "reduce", "reduce-window", "convert", "compare",
+                      "maximum", "minimum", "select", "rsqrt", "tanh",
+                      "log", "power", "negate", "and", "or", "xor",
+                      "shift-left", "shift-right-logical"):
+            c.flops += elems
+        c.bytes += _instr_bytes(comp, ins)
+    return c
+
+
+def analyze_hlo_text(text: str) -> HloCost:
+    comps = parse_hlo(text)
+    entry = None
+    for line in text.splitlines():
+        if line.strip().startswith("ENTRY"):
+            m = _COMP_HEADER.match(line)
+            if m:
+                entry = m.group(2)
+            break
+    if entry is None:
+        # fall back: computation named main-ish
+        entry = next((n for n in comps if n.startswith("main")),
+                     next(iter(comps), None))
+    memo: dict = {}
+    return cost_of(comps, entry, memo)

@@ -1,0 +1,3 @@
+from .query_server import QueryResult, QueryServer
+
+__all__ = ["QueryResult", "QueryServer"]

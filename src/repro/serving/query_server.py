@@ -1,0 +1,75 @@
+"""Batched subgraph-matching query serving.
+
+The paper's evaluation protocol (10 000-query sets, enumeration capped at
+1000 embeddings, per-query time budget) as a service: queries are
+admitted into a bounded queue, executed on a per-data-graph engine pool
+(compiled programs are shared across queries — one engine instance per
+worker reuses its jitted wave step), with per-query timeouts, result
+caps, and cumulative statistics for SLO reporting (p50/p99 latency).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from ..core.backtrack import backtrack_deadend
+from ..core.graph import Graph
+from ..core.vectorized import WaveEngine
+
+
+@dataclasses.dataclass
+class QueryResult:
+    query_id: int
+    n_found: int
+    embeddings: list
+    latency_s: float
+    recursions: int
+    timed_out: bool
+
+
+class QueryServer:
+    """Serve matching queries against one data graph.
+
+    backend: "engine" (JAX wave engine) or "sequential" (paper Algorithm 2
+    reference — fastest single-core path on this CPU container).
+    """
+
+    def __init__(self, data: Graph, backend: str = "sequential",
+                 limit: int = 1000, time_budget_s: float = 10.0,
+                 wave_size: int = 256, kpr: int = 16):
+        self.data = data
+        self.backend = backend
+        self.limit = limit
+        self.time_budget_s = time_budget_s
+        self.engine = (WaveEngine(data, wave_size=wave_size, kpr=kpr)
+                       if backend == "engine" else None)
+        self.latencies: list[float] = []
+
+    def submit(self, query_id: int, query: Graph) -> QueryResult:
+        t0 = time.perf_counter()
+        if self.backend == "engine":
+            res = self.engine.match(query, limit=self.limit)
+        else:
+            res = backtrack_deadend(query, self.data, limit=self.limit,
+                                    time_budget_s=self.time_budget_s)
+        dt = time.perf_counter() - t0
+        self.latencies.append(dt)
+        return QueryResult(query_id=query_id, n_found=res.stats.found,
+                           embeddings=res.embeddings, latency_s=dt,
+                           recursions=res.stats.recursions,
+                           timed_out=res.stats.aborted
+                           and res.stats.found < self.limit)
+
+    def submit_batch(self, queries: list[Graph]) -> list[QueryResult]:
+        return [self.submit(i, q) for i, q in enumerate(queries)]
+
+    def slo_report(self) -> dict:
+        lat = np.asarray(self.latencies)
+        if len(lat) == 0:
+            return {}
+        return {"n": len(lat),
+                "p50_ms": float(np.percentile(lat, 50) * 1e3),
+                "p99_ms": float(np.percentile(lat, 99) * 1e3),
+                "mean_ms": float(lat.mean() * 1e3)}

@@ -1,0 +1,138 @@
+"""Correctness of the sequential matching algorithms vs a networkx oracle
+plus the paper's core claims (pruning soundness, recursion reduction)."""
+import numpy as np
+import pytest
+
+import networkx as nx
+from networkx.algorithms import isomorphism as nxiso
+
+from repro.core.backtrack import backtrack_deadend, backtrack_naive
+from repro.core.deadend import NumericDeadEndTable, SetDeadEndTable
+from repro.core.graph import Graph
+from repro.data.graph_gen import (er_labeled_graph, ba_labeled_graph,
+                                  random_walk_query)
+
+
+def paper_example():
+    """Figure 1 of the paper: Q (4 vertices) and G (9 vertices)."""
+    # labels: a=0, b=1, c=2
+    q = Graph.from_edges(4, [(0, 1), (1, 2), (2, 3)], [0, 1, 2, 0])
+    # G: v1..v9 -> 0..8; labels from the figure
+    #   v1=a v2=b v3=b v4=b v5=c v6=c v7=c v8=a v9=a (one consistent reading)
+    g = Graph.from_edges(
+        9,
+        [(0, 1), (0, 2), (0, 3),          # v1-b's
+         (1, 4), (1, 5), (2, 5), (2, 6), (3, 6),  # b-c edges
+         (4, 7), (5, 0), (6, 0),          # c-a edges: v5,v6,v7 adjacency
+         (4, 8)],
+        [0, 1, 1, 1, 2, 2, 2, 0, 0])
+    return q, g
+
+
+def nx_oracle_embeddings(query: Graph, data: Graph) -> set:
+    """All monomorphic embeddings as frozensets of (query_v, data_v)."""
+    gq, gd = query.to_networkx(), data.to_networkx()
+    matcher = nxiso.GraphMatcher(
+        gd, gq, node_match=lambda a, b: a["label"] == b["label"])
+    out = set()
+    for m in matcher.subgraph_monomorphisms_iter():
+        # m maps data vertex -> query vertex
+        out.add(frozenset((qv, dv) for dv, qv in m.items()))
+    return out
+
+
+def result_embeddings(res) -> set:
+    return set(frozenset(enumerate(e.tolist())) for e in res.embeddings)
+
+
+def random_case(seed):
+    rng = np.random.default_rng(seed)
+    n_d = int(rng.integers(8, 40))
+    n_e = int(rng.integers(n_d, 4 * n_d))
+    n_labels = int(rng.integers(1, 5))
+    data = er_labeled_graph(n_d, n_e, n_labels, seed=seed)
+    n_q = int(rng.integers(2, 6))
+    try:
+        query = random_walk_query(data, n_q, seed=seed + 1)
+    except RuntimeError:
+        return None
+    return query, data
+
+
+@pytest.mark.parametrize("seed", range(30))
+def test_naive_matches_networkx(seed):
+    case = random_case(seed)
+    if case is None:
+        pytest.skip("no connected query")
+    query, data = case
+    res = backtrack_naive(query, data, limit=None)
+    assert result_embeddings(res) == nx_oracle_embeddings(query, data)
+
+
+@pytest.mark.parametrize("seed", range(30))
+@pytest.mark.parametrize("table_cls", [NumericDeadEndTable, SetDeadEndTable])
+def test_deadend_matches_networkx(seed, table_cls):
+    """Theorem 1: the pruned search reports exactly the same embeddings."""
+    case = random_case(seed)
+    if case is None:
+        pytest.skip("no connected query")
+    query, data = case
+    res = backtrack_deadend(query, data, limit=None, table_cls=table_cls)
+    assert result_embeddings(res) == nx_oracle_embeddings(query, data)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_deadend_no_pruning_identical(seed):
+    case = random_case(seed)
+    if case is None:
+        pytest.skip("no connected query")
+    query, data = case
+    a = backtrack_deadend(query, data, limit=None, use_pruning=True)
+    b = backtrack_deadend(query, data, limit=None, use_pruning=False)
+    assert result_embeddings(a) == result_embeddings(b)
+    assert a.stats.recursions <= b.stats.recursions
+
+
+def test_paper_example_embedding():
+    q, g = paper_example()
+    res = backtrack_deadend(q, g, limit=None)
+    oracle = nx_oracle_embeddings(q, g)
+    assert result_embeddings(res) == oracle
+    assert res.stats.found == len(oracle)
+
+
+def test_recursion_reduction_on_hard_instance():
+    """The paper's headline effect: pruning turns the Theta(n_b*n_c)
+    injectivity-failure blowup into Theta(n_b+n_c) (Fig. 2 mechanism)."""
+    from repro.data.graph_gen import trap_graph
+    query, data = trap_graph(n_b=60, n_c=60, n_good=2, tail_len=2, seed=0)
+    pruned = backtrack_deadend(query, data, limit=None)
+    unpruned = backtrack_deadend(query, data, limit=None, use_pruning=False)
+    assert pruned.stats.found == unpruned.stats.found  # Theorem 1
+    assert result_embeddings(pruned) == result_embeddings(unpruned)
+    assert unpruned.stats.recursions > 5 * pruned.stats.recursions
+    assert pruned.stats.deadend_prunes > 0
+
+
+def test_trap_scaling_is_linear_vs_quadratic():
+    from repro.data.graph_gen import trap_graph
+    rec_p, rec_u = [], []
+    for n in (25, 50, 100):
+        query, data = trap_graph(n_b=n, n_c=n, n_good=2, tail_len=2, seed=0)
+        p = backtrack_deadend(query, data, limit=None)
+        u = backtrack_deadend(query, data, limit=None, use_pruning=False)
+        rec_p.append(p.stats.recursions)
+        rec_u.append(u.stats.recursions)
+    # doubling n roughly doubles pruned recursions but ~4x unpruned ones
+    assert rec_p[2] < 5 * rec_p[0]
+    assert rec_u[2] > 10 * rec_u[0]
+
+
+def test_limit_semantics():
+    data = er_labeled_graph(30, 80, 2, seed=1)
+    query = random_walk_query(data, 3, seed=2)
+    res_all = backtrack_deadend(query, data, limit=None)
+    if res_all.stats.found > 3:
+        res3 = backtrack_deadend(query, data, limit=3)
+        assert res3.stats.found == 3
+        assert res3.stats.aborted

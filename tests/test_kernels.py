@@ -1,0 +1,122 @@
+"""Per-kernel interpret-mode validation against the ref.py oracles,
+swept across shapes and dtypes (the kernel testing contract)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import pack_bitmap
+from repro.kernels import ref
+from repro.kernels.ops import (bitmap_spmm_op, flash_attention_op,
+                               refine_bitmap_op)
+
+
+# ---------------------------------------------------------------- refine
+@pytest.mark.parametrize("v,f,np_,seed", [
+    (33, 4, 5, 0), (128, 16, 8, 1), (300, 32, 12, 2), (64, 1, 3, 3),
+])
+def test_refine_bitmap_vs_ref(v, f, np_, seed):
+    rng = np.random.default_rng(seed)
+    dense = rng.random((v, v)) < 0.2
+    dense |= dense.T
+    adj = jnp.asarray(pack_bitmap(dense))
+    cand = jnp.asarray(pack_bitmap(rng.random((1, v)) < 0.5)[0])
+    frontier = jnp.asarray(
+        rng.integers(-1, v, size=(f, np_)).astype(np.int32))
+    active = jnp.asarray((rng.random(np_) < 0.6).astype(np.int32))
+    got = refine_bitmap_op(adj, cand, frontier, active,
+                           backend="pallas_interpret")
+    want = ref.refine_bitmap_ref(adj, cand, frontier, active)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_refine_bitmap_no_active_positions():
+    v = 70
+    rng = np.random.default_rng(0)
+    adj = jnp.asarray(pack_bitmap(rng.random((v, v)) < 0.3))
+    cand = jnp.asarray(pack_bitmap(rng.random((1, v)) < 0.5)[0])
+    frontier = jnp.full((3, 4), -1, jnp.int32)
+    active = jnp.zeros(4, jnp.int32)
+    got = refine_bitmap_op(adj, cand, frontier, active,
+                           backend="pallas_interpret")
+    np.testing.assert_array_equal(
+        np.asarray(got), np.broadcast_to(np.asarray(cand), got.shape))
+
+
+# ---------------------------------------------------------------- spmm
+@pytest.mark.parametrize("n,m,d,dtype", [
+    (40, 64, 16, jnp.float32), (100, 96, 48, jnp.float32),
+    (256, 256, 128, jnp.float32), (33, 32, 8, jnp.bfloat16),
+])
+def test_bitmap_spmm_vs_ref(n, m, d, dtype):
+    rng = np.random.default_rng(n + m + d)
+    dense = rng.random((n, m)) < 0.15
+    words = jnp.asarray(pack_bitmap(dense))
+    x = jnp.asarray(rng.standard_normal((m, d)), dtype=dtype)
+    got = bitmap_spmm_op(words, x, backend="pallas_interpret",
+                         block_i=32, block_j=32)
+    want = ref.bitmap_spmm_ref(words, x)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5, atol=1e-5)
+
+
+def test_bitmap_spmm_matches_dense_matmul():
+    rng = np.random.default_rng(9)
+    dense = rng.random((50, 64)) < 0.3
+    x = rng.standard_normal((64, 20)).astype(np.float32)
+    got = bitmap_spmm_op(jnp.asarray(pack_bitmap(dense)), jnp.asarray(x),
+                         backend="pallas_interpret", block_i=32, block_j=32)
+    np.testing.assert_allclose(np.asarray(got),
+                               dense.astype(np.float32) @ x,
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- flash
+@pytest.mark.parametrize("b,h,hkv,s,d,causal", [
+    (1, 2, 2, 128, 32, True),
+    (2, 4, 2, 128, 64, True),    # GQA
+    (1, 2, 1, 256, 64, False),
+    (1, 8, 2, 128, 128, True),
+])
+def test_flash_attention_vs_ref(b, h, hkv, s, d, causal):
+    rng = np.random.default_rng(b * 100 + h)
+    q = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
+    got = flash_attention_op(q, k, v, causal=causal,
+                             backend="pallas_interpret",
+                             block_q=64, block_k=64)
+    want = flash_attention_op(q, k, v, causal=causal, backend="jnp")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), dtype)
+    k = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), dtype)
+    v = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), dtype)
+    got = flash_attention_op(q, k, v, backend="pallas_interpret",
+                             block_q=64, block_k=64)
+    want = flash_attention_op(q, k, v, backend="jnp")
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_long_kv_decode_shape():
+    """Decode regime: 1 query token against a long KV history."""
+    rng = np.random.default_rng(4)
+    q = jnp.asarray(rng.standard_normal((2, 4, 128, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 4, 512, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 4, 512, 64)), jnp.float32)
+    got = flash_attention_op(q, k, v, causal=False,
+                             backend="pallas_interpret",
+                             block_q=128, block_k=128)
+    want = flash_attention_op(q, k, v, causal=False, backend="jnp")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)

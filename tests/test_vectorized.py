@@ -1,0 +1,90 @@
+"""The JAX wave engine must enumerate exactly the reference result sets."""
+import numpy as np
+import pytest
+
+from repro.core.backtrack import backtrack_deadend
+from repro.core.vectorized import WaveEngine, match_vectorized
+from repro.data.graph_gen import (er_labeled_graph, random_walk_query,
+                                  trap_graph)
+
+
+def embset(res):
+    return set(frozenset(enumerate(e.tolist())) for e in res.embeddings)
+
+
+def random_case(seed):
+    rng = np.random.default_rng(seed)
+    data = er_labeled_graph(int(rng.integers(10, 40)),
+                            int(rng.integers(20, 90)),
+                            int(rng.integers(1, 4)), seed=seed)
+    try:
+        query = random_walk_query(data, int(rng.integers(2, 7)),
+                                  seed=seed + 1)
+    except RuntimeError:
+        return None
+    return query, data
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_engine_equals_sequential(seed):
+    case = random_case(seed)
+    if case is None:
+        pytest.skip("no connected query")
+    query, data = case
+    a = match_vectorized(query, data, limit=None, wave_size=64, kpr=4)
+    b = backtrack_deadend(query, data, limit=None)
+    assert embset(a) == embset(b)
+
+
+@pytest.mark.parametrize("wave_size,kpr", [(4, 2), (16, 4), (256, 16)])
+def test_engine_wave_config_invariance(wave_size, kpr):
+    """Result sets must not depend on the wave schedule."""
+    query, data = trap_graph(n_b=20, n_c=20, n_good=2, tail_len=2, seed=0)
+    a = match_vectorized(query, data, limit=None,
+                         wave_size=wave_size, kpr=kpr)
+    b = backtrack_deadend(query, data, limit=None)
+    assert embset(a) == embset(b)
+
+
+def test_engine_pruning_reduces_rows():
+    query, data = trap_graph(n_b=50, n_c=50, n_good=2, tail_len=2, seed=0)
+    a = match_vectorized(query, data, limit=None, wave_size=64, kpr=8)
+    b = match_vectorized(query, data, limit=None, wave_size=64, kpr=8,
+                         use_pruning=False)
+    assert embset(a) == embset(b)
+    assert a.stats.deadend_prunes > 0
+    assert a.stats.rows_created < b.stats.rows_created / 2
+
+
+def test_engine_limit():
+    data = er_labeled_graph(30, 90, 2, seed=3)
+    query = random_walk_query(data, 3, seed=4)
+    full = match_vectorized(query, data, limit=None)
+    if full.stats.found > 5:
+        lim = match_vectorized(query, data, limit=5)
+        assert lim.stats.found == 5
+        assert lim.stats.aborted
+        assert embset(lim) <= embset(full)
+
+
+def test_engine_no_candidates():
+    data = er_labeled_graph(20, 40, 2, seed=5)
+    # a query label that does not exist in the data graph
+    from repro.core.graph import Graph
+    query = Graph.from_edges(2, [(0, 1)], [7, 7], n_labels=8)
+    res = match_vectorized(query, data, limit=None)
+    assert res.embeddings == []
+
+
+def test_engine_reuse_across_queries():
+    """One engine instance (one compiled program) serves many queries."""
+    data = er_labeled_graph(40, 120, 3, seed=6)
+    eng = WaveEngine(data, wave_size=64, kpr=8)
+    for s in range(5):
+        try:
+            q = random_walk_query(data, 4, seed=s)
+        except RuntimeError:
+            continue
+        a = eng.match(q, limit=None)
+        b = backtrack_deadend(q, data, limit=None)
+        assert embset(a) == embset(b)
