@@ -18,7 +18,7 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="fig4,fig3,engine,roofline")
+    ap.add_argument("--only", default="fig4,fig3,engine,serving,roofline")
     ap.add_argument("--budget-s", type=float, default=90.0)
     args = ap.parse_args()
     which = set(args.only.split(","))
@@ -34,6 +34,9 @@ def main() -> None:
     if "engine" in which:
         from . import engine_bench
         engine_bench.run(rows, budget_s=args.budget_s)
+    if "serving" in which:
+        from . import serving_bench
+        serving_bench.run(rows, budget_s=args.budget_s)
     if "roofline" in which:
         from . import roofline_report
         roofline_report.run(rows)

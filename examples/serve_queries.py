@@ -1,6 +1,8 @@
 """End-to-end driver (the paper's kind of system = a query engine):
-serve a batched subgraph-matching workload with SLO reporting,
-distributed search-tree partitioning, and pattern sharing.
+serve a batched subgraph-matching workload through the shared-wave
+scheduler — many concurrent queries packed into each device wave — with
+SLO + wave-occupancy reporting, then distributed search-tree
+partitioning with pattern sharing.
 
     PYTHONPATH=src python examples/serve_queries.py [--n-queries 50]
 """
@@ -20,8 +22,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n-queries", type=int, default=50)
     ap.add_argument("--query-size", type=int, default=10)
-    ap.add_argument("--backend", default="sequential",
+    ap.add_argument("--backend", default="engine",
                     choices=["sequential", "engine"])
+    ap.add_argument("--n-slots", type=int, default=32,
+                    help="concurrent queries resident per wave (engine)")
+    ap.add_argument("--wave-size", type=int, default=256)
     args = ap.parse_args()
 
     data = yeast_like_graph(0)
@@ -30,13 +35,24 @@ def main():
     queries = query_set(data, args.query_size, args.n_queries, seed=42)
 
     server = QueryServer(data, backend=args.backend, limit=1000,
-                         time_budget_s=2.0)
+                         time_budget_s=2.0, n_slots=args.n_slots,
+                         wave_size=args.wave_size)
     results = server.submit_batch(queries)
     found = sum(r.n_found for r in results)
     dnf = sum(r.timed_out for r in results)
+    capped = sum(r.status == "limit" for r in results)
     print(f"served {len(results)} queries: {found} embeddings total, "
-          f"{dnf} timed out")
-    print("SLO:", server.slo_report())
+          f"{capped} hit the limit, {dnf} timed out")
+    rep = server.slo_report()
+    line = (f"SLO: p50={rep['p50_ms']:.1f}ms p99={rep['p99_ms']:.1f}ms "
+            f"mean={rep['mean_ms']:.1f}ms")
+    if args.backend == "engine":
+        line += (f" | waves={rep['waves']} "
+                 f"occupancy={rep['mean_occupancy']:.2f} "
+                 f"(steady {rep['steady_occupancy']:.2f}) "
+                 f"peak_concurrent={rep['peak_active']} "
+                 f"prune_rate={rep['prune_rate']:.2f}")
+    print(line)
 
     # distributed matching of one hard query with pattern sharing
     q, g = trap_graph(n_b=120, n_c=120, n_good=2, tail_len=2)

@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 verification in one invocation (see ROADMAP.md):
+#
+#     scripts/ci.sh               # run the full tier-1 suite
+#     scripts/ci.sh tests/test_serving.py -q   # pass-through args
+#
+# Optional dependencies (hypothesis, networkx) are skipped gracefully by
+# the suite when absent — see requirements.txt.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+if [ "$#" -gt 0 ]; then
+    exec python -m pytest -x -q "$@"
+fi
+exec python -m pytest -x -q

@@ -45,6 +45,10 @@ class SearchStats:
     injectivity_fails: int = 0
     empty_candidate_fails: int = 0
     aborted: bool = False
+    # why the search stopped early: None (ran to completion), "limit"
+    # (result cap reached), "recursions"/"rows" (recursion budget), or
+    # "time" (wall-clock budget). Serving layers map this to a status.
+    abort_reason: str | None = None
     wall_time_s: float = 0.0
     table_stats: object | None = None
 
@@ -99,10 +103,12 @@ def backtrack_naive(query: Graph, data: Graph,
             return
         if max_recursions is not None and stats.recursions > max_recursions:
             stats.aborted = True
+            stats.abort_reason = "recursions"
             return
         if time_budget_s is not None and stats.recursions % 4096 == 0 \
                 and time.perf_counter() - t0 > time_budget_s:
             stats.aborted = True
+            stats.abort_reason = "time"
             return
         if depth == n:
             emb = np.empty(n, dtype=np.int32)
@@ -111,6 +117,7 @@ def backtrack_naive(query: Graph, data: Graph,
             stats.found += 1
             if limit is not None and stats.found >= limit:
                 stats.aborted = True
+                stats.abort_reason = "limit"
             return
         # line 7 empty-candidate check over unmapped positions
         for d in range(depth, n):
@@ -183,10 +190,12 @@ def backtrack_deadend(query: Graph, data: Graph,
         phi[depth] = stats.recursions
         if max_recursions is not None and stats.recursions > max_recursions:
             stats.aborted = True
+            stats.abort_reason = "recursions"
             return None
         if time_budget_s is not None and stats.recursions % 4096 == 0 \
                 and time.perf_counter() - t0 > time_budget_s:
             stats.aborted = True
+            stats.abort_reason = "time"
             return None
         if depth == n:
             emb = np.empty(n, dtype=np.int32)
@@ -195,6 +204,7 @@ def backtrack_deadend(query: Graph, data: Graph,
             stats.found += 1
             if limit is not None and stats.found >= limit:
                 stats.aborted = True
+                stats.abort_reason = "limit"
             return None
         # ---- Case 1: empty candidate set (Lemma 1) ----------------------
         for d in range(depth, n):

@@ -2,10 +2,19 @@
 
 This module contains the *pure JAX* (jit-able, shard_map-able) functions
 executed per wave step. The host scheduler in ``vectorized.py`` owns the
-segment stack and resolution bookkeeping; every array-heavy operation —
+segment stacks and resolution bookkeeping; every array-heavy operation —
 Eq. 2 bitmap refinement, injectivity masking, O(1) dead-end lookups over a
 whole wave, child extraction, pattern scatter — happens here on fixed
 shapes so a single compiled program serves every query.
+
+Multi-query waves (DESIGN.md §2): per-query state lives in *banks* stacked
+along a leading slot axis — :class:`QueryBank` ``[S, ...]`` and
+:class:`TableBank` ``[S, ...]`` — and every wave row carries a
+``query_slot`` and a ``depth`` lane, so one jitted program expands a wave
+whose rows belong to many concurrent queries at different depths. The
+single-query entry points (``expand_wave`` &c., used by the launch dry-run
+and the distributed pattern merge) are thin wrappers over the same
+implementation with ``S == 1``.
 
 Design notes (see DESIGN.md §2):
   * adjacency and candidate sets are packed uint32 bitmaps; Eq. 2 becomes
@@ -21,7 +30,6 @@ Design notes (see DESIGN.md §2):
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import NamedTuple
 
@@ -47,6 +55,20 @@ class QueryArrays(NamedTuple):
     n_query: jax.Array       # int32 scalar
 
 
+class QueryBank(NamedTuple):
+    """Per-slot query arrays for multi-query waves (query axis first)."""
+    cand_bitmap: jax.Array   # uint32 [S, N_PAD, W]
+    nbr_mask: jax.Array      # bool [S, N_PAD, N_PAD]
+    n_query: jax.Array       # int32 [S]
+
+    @staticmethod
+    def empty(n_slots: int, w: int) -> "QueryBank":
+        return QueryBank(
+            cand_bitmap=jnp.zeros((n_slots, N_PAD, w), jnp.uint32),
+            nbr_mask=jnp.zeros((n_slots, N_PAD, N_PAD), bool),
+            n_query=jnp.zeros((n_slots,), jnp.int32))
+
+
 class TableArrays(NamedTuple):
     """The dead-end pattern table Δ, keyed by (order position, vertex)."""
     phi: jax.Array           # int32 [N_PAD, V]  stored prefix id φ
@@ -65,6 +87,24 @@ class TableArrays(NamedTuple):
         )
 
 
+class TableBank(NamedTuple):
+    """Per-slot dead-end tables, Δ[slot, order position, vertex]."""
+    phi: jax.Array           # int32 [S, N_PAD, V]
+    mu: jax.Array            # int32 [S, N_PAD, V]
+    mask: jax.Array          # uint32 [S, N_PAD, V, MASK_WORDS]
+    valid: jax.Array         # bool [S, N_PAD, V]
+
+    @staticmethod
+    def empty(n_slots: int, n_vertices: int) -> "TableBank":
+        s, v = n_slots, n_vertices
+        return TableBank(
+            phi=jnp.zeros((s, N_PAD, v), jnp.int32),
+            mu=jnp.zeros((s, N_PAD, v), jnp.int32),
+            mask=jnp.zeros((s, N_PAD, v, MASK_WORDS), jnp.uint32),
+            valid=jnp.zeros((s, N_PAD, v), bool),
+        )
+
+
 class WaveResult(NamedTuple):
     refined_empty: jax.Array     # bool [F]   Eq.2 candidate set empty
     n_children: jax.Array        # int32 [F]  surviving children this pass
@@ -75,6 +115,20 @@ class WaveResult(NamedTuple):
     leftover: jax.Array          # uint32 [F, W] unexpanded survivor bits
     n_pruned: jax.Array          # int32 [] dead-end prunes in this wave
     n_inj: jax.Array             # int32 [] injectivity kills in this wave
+
+
+class WaveResultMQ(NamedTuple):
+    """Multi-query wave result — per-row counters so the host can
+    attribute prune/injectivity statistics to the owning query."""
+    refined_empty: jax.Array     # bool [F]
+    n_children: jax.Array        # int32 [F]
+    n_leftover: jax.Array        # int32 [F]
+    partial_mask: jax.Array      # uint32 [F, MASK_WORDS]
+    child_v: jax.Array           # int32 [F, KPR]
+    child_valid: jax.Array       # bool [F, KPR]
+    leftover: jax.Array          # uint32 [F, W]
+    n_pruned: jax.Array          # int32 [F] dead-end prunes per row
+    n_inj: jax.Array             # int32 [F] injectivity kills per row
 
 
 def _popcount_rows(words: jax.Array) -> jax.Array:
@@ -100,10 +154,18 @@ def _pack_bits(bits: jax.Array, w: int) -> jax.Array:
 
 
 def _position_bit(p: jax.Array) -> jax.Array:
-    """Order position -> uint32 [MASK_WORDS] one-hot-bit mask."""
+    """Order position (scalar) -> uint32 [MASK_WORDS] one-hot-bit mask."""
     word = p // 32
     bit = jnp.uint32(1) << (p % 32).astype(jnp.uint32)
     return jnp.where(jnp.arange(MASK_WORDS) == word, bit, jnp.uint32(0))
+
+
+def _position_bits(p: jax.Array) -> jax.Array:
+    """Order positions int32 [F] -> uint32 [F, MASK_WORDS] one-hot bits."""
+    word = p // 32
+    bit = jnp.uint32(1) << (p % 32).astype(jnp.uint32)
+    return jnp.where(jnp.arange(MASK_WORDS)[None, :] == word[:, None],
+                     bit[:, None], jnp.uint32(0))
 
 
 def _below_bits(d: jax.Array) -> jax.Array:
@@ -115,44 +177,79 @@ def _below_bits(d: jax.Array) -> jax.Array:
             ).sum(axis=-1, dtype=jnp.uint32)
 
 
-def refine_eq2(g: GraphArrays, q: QueryArrays, frontier: jax.Array,
-               depth: jax.Array) -> jax.Array:
-    """Eq. 2 candidate refinement for a whole wave.
+# ===================================================================
+# slot management: load one query (+ its table) into a bank slot
+# ===================================================================
+@jax.jit
+def load_slot(qb: QueryBank, tb: TableBank, slot: jax.Array,
+              cand_bitmap: jax.Array, nbr_mask: jax.Array,
+              n_query: jax.Array, table: TableArrays
+              ) -> tuple[QueryBank, TableBank]:
+    """Install a query in bank slot ``slot`` (admission). ``table`` is the
+    slot's initial dead-end table: empty, or seeded with transferable
+    patterns (see core.distributed)."""
+    qb2 = QueryBank(
+        cand_bitmap=qb.cand_bitmap.at[slot].set(cand_bitmap),
+        nbr_mask=qb.nbr_mask.at[slot].set(nbr_mask),
+        n_query=qb.n_query.at[slot].set(n_query))
+    tb2 = TableBank(
+        phi=tb.phi.at[slot].set(table.phi),
+        mu=tb.mu.at[slot].set(table.mu),
+        mask=tb.mask.at[slot].set(table.mask),
+        valid=tb.valid.at[slot].set(table.valid))
+    return qb2, tb2
 
-    C'(row) = cand[depth] ∩ ⋂_{p < depth, p ~q depth} N(frontier[row, p]).
-    Returns the packed candidate bitmap uint32 [F, W].
+
+def read_table_slot(tb: TableBank, slot: int) -> TableArrays:
+    """Read one slot's table back out (pattern export on completion)."""
+    return TableArrays(phi=tb.phi[slot], mu=tb.mu[slot],
+                       mask=tb.mask[slot], valid=tb.valid[slot])
+
+
+# ===================================================================
+# multi-query wave programs
+# ===================================================================
+def refine_eq2_mq(g: GraphArrays, qb: QueryBank, query_slot: jax.Array,
+                  frontier: jax.Array, depth: jax.Array) -> jax.Array:
+    """Eq. 2 candidate refinement for a mixed-query wave.
+
+    C'(row) = cand[qid, depth] ∩ ⋂_{p < depth, p ~q depth} N(frontier[p]).
+    ``query_slot`` and ``depth`` are int32 [F] lanes. Returns the packed
+    candidate bitmap uint32 [F, W].
     """
     f = frontier.shape[0]
-    w = g.adj_bitmap.shape[1]
-    acc0 = jnp.broadcast_to(q.cand_bitmap[depth], (f, w))
+    acc0 = qb.cand_bitmap[query_slot, depth]                 # [F, W]
 
     def body(p, acc):
-        active = q.nbr_mask[depth, p] & (p < depth)
-        rows = g.adj_bitmap[frontier[:, p].clip(0)]          # [F, W]
-        return jnp.where(active, acc & rows, acc)
+        active = qb.nbr_mask[query_slot, depth, p] & (p < depth)  # [F]
+        rows = g.adj_bitmap[frontier[:, p].clip(0)]               # [F, W]
+        return jnp.where(active[:, None], acc & rows, acc)
 
     return lax.fori_loop(0, N_PAD, body, acc0)
 
 
-def deadend_lookup_children(t: TableArrays, phi: jax.Array,
-                            depth: jax.Array, child_v: jax.Array
-                            ) -> tuple[jax.Array, jax.Array]:
+def deadend_lookup_children_mq(tb: TableBank, phi: jax.Array,
+                               query_slot: jax.Array, depth: jax.Array,
+                               child_v: jax.Array
+                               ) -> tuple[jax.Array, jax.Array]:
     """Paper-Eq.7 check for extracted children only (§Perf iteration 2:
-    O(F·kpr) gathers instead of the O(F·V) dense sweep).
+    O(F·kpr) gathers instead of the O(F·V) dense sweep), table rows keyed
+    per query slot.
 
     child_v: int32 [F, KPR] candidate vertices (-1 = empty slot).
     Returns (prune bool [F, KPR], Γ* contribution uint32 [F, MASK_WORDS]).
     """
-    f, kpr = child_v.shape
     cv = child_v.clip(0)
-    mu_g = t.mu[depth][cv]                   # [F, KPR]
-    phi_g = t.phi[depth][cv]
-    valid_g = t.valid[depth][cv] & (child_v >= 0)
+    q2 = query_slot[:, None]
+    d2 = depth[:, None]
+    mu_g = tb.mu[q2, d2, cv]                 # [F, KPR]
+    phi_g = tb.phi[q2, d2, cv]
+    valid_g = tb.valid[q2, d2, cv] & (child_v >= 0)
     my_phi = jnp.take_along_axis(phi, mu_g, axis=1)
     prune = valid_g & (my_phi == phi_g)
-    masks = t.mask[depth][cv]                # [F, KPR, MASK_WORDS]
+    masks = tb.mask[q2, d2, cv]              # [F, KPR, MASK_WORDS]
     masks = jnp.where(prune[:, :, None],
-                      masks | _position_bit(depth)[None, None, :],
+                      masks | _position_bits(depth)[:, None, :],
                       jnp.uint32(0))
     # OR over the (small) child axis via unpack -> any -> repack
     shifts = jnp.arange(32, dtype=jnp.uint32)
@@ -165,27 +262,28 @@ def deadend_lookup_children(t: TableArrays, phi: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=("kpr",))
-def expand_wave(g: GraphArrays, q: QueryArrays, t: TableArrays,
-                frontier: jax.Array, used: jax.Array, phi: jax.Array,
-                row_valid: jax.Array, depth: jax.Array,
-                kpr: int = 16) -> WaveResult:
-    """Expand every row of a wave by one query position.
+def expand_wave_mq(g: GraphArrays, qb: QueryBank, tb: TableBank,
+                   frontier: jax.Array, used: jax.Array, phi: jax.Array,
+                   row_valid: jax.Array, query_slot: jax.Array,
+                   depth: jax.Array, kpr: int = 16) -> WaveResultMQ:
+    """Expand every row of a mixed-query wave by one query position.
 
     Args:
-      frontier:  int32 [F, N_PAD] mapped data vertex per order position
-                 (-1 where unmapped); all rows share the same depth.
-      used:      uint32 [F, W] bitmap of data vertices used by the row.
-      phi:       int32 [F, N_PAD + 1] ancestor embedding ids (Φ array).
-      row_valid: bool [F] padding mask.
-      depth:     int32 scalar — number of mapped positions in each row.
-      kpr:       static per-row child cap for this pass (leftovers are
-                 re-expanded by the host in later passes).
+      frontier:   int32 [F, N_PAD] mapped data vertex per order position
+                  (-1 where unmapped).
+      used:       uint32 [F, W] bitmap of data vertices used by the row.
+      phi:        int32 [F, N_PAD + 1] ancestor embedding ids (Φ array).
+      row_valid:  bool [F] padding mask.
+      query_slot: int32 [F] — owning query's bank slot, per row.
+      depth:      int32 [F] — number of mapped positions, per row.
+      kpr:        static per-row child cap for this pass (leftovers are
+                  re-expanded by the host in later passes).
     """
     f = frontier.shape[0]
     v = g.adj_bitmap.shape[0]
     w = g.adj_bitmap.shape[1]
 
-    refined = refine_eq2(g, q, frontier, depth)              # [F, W]
+    refined = refine_eq2_mq(g, qb, query_slot, frontier, depth)  # [F, W]
     refined = jnp.where(row_valid[:, None], refined, jnp.uint32(0))
     refined_empty = (_popcount_rows(refined) == 0) & row_valid
 
@@ -195,13 +293,15 @@ def expand_wave(g: GraphArrays, q: QueryArrays, t: TableArrays,
 
     # injectivity Γ* contribution (Lemma 2): for every mapped position p
     # whose vertex is a refined candidate, add bit(p) | bit(depth).
+    depth_bits = _position_bits(depth)                       # [F, MW]
+
     def inj_body(p, acc):
         vert = frontier[:, p].clip(0)                        # [F]
         word = jnp.take_along_axis(refined, (vert // 32)[:, None],
                                    axis=1)[:, 0]
         hit = ((word >> (vert % 32).astype(jnp.uint32)) & 1).astype(bool)
         hit &= (p < depth) & row_valid
-        contrib = _position_bit(p)[None, :] | _position_bit(depth)[None, :]
+        contrib = _position_bit(p)[None, :] | depth_bits
         return jnp.where(hit[:, None], acc | contrib, acc)
 
     inj_mask = lax.fori_loop(
@@ -227,12 +327,13 @@ def expand_wave(g: GraphArrays, q: QueryArrays, t: TableArrays,
     # children turns the O(F*V) dense sweep into O(F*kpr) gathers;
     # prunable candidates still in `leftover` are checked when a later
     # pass extracts them.
-    prune, prune_mask = deadend_lookup_children(t, phi, depth, child_v)
+    prune, prune_mask = deadend_lookup_children_mq(
+        tb, phi, query_slot, depth, child_v)
     child_valid = (child_v >= 0) & ~prune
     n_children = child_valid.sum(axis=1).astype(jnp.int32)
     partial_mask = inj_mask | prune_mask
 
-    return WaveResult(
+    return WaveResultMQ(
         refined_empty=refined_empty,
         n_children=n_children,
         n_leftover=n_leftover,
@@ -240,23 +341,24 @@ def expand_wave(g: GraphArrays, q: QueryArrays, t: TableArrays,
         child_v=jnp.where(child_valid, child_v, -1),
         child_valid=child_valid,
         leftover=leftover,
-        n_pruned=jnp.where(row_valid, prune.sum(axis=1), 0).sum(),
-        n_inj=jnp.where(row_valid, n_inj_per_row, 0).sum(),
+        n_pruned=jnp.where(row_valid, prune.sum(axis=1), 0),
+        n_inj=jnp.where(row_valid, n_inj_per_row, 0),
     )
 
 
 @functools.partial(jax.jit, static_argnames=("kpr",))
-def extract_more(t: TableArrays, phi: jax.Array, depth: jax.Array,
-                 leftover: jax.Array, kpr: int = 64
-                 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array,
-                            jax.Array, jax.Array]:
-    """Extract up to ``kpr`` more children per row from leftover bitmaps.
+def extract_more_mq(tb: TableBank, phi: jax.Array, query_slot: jax.Array,
+                    depth: jax.Array, leftover: jax.Array, kpr: int = 64
+                    ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array,
+                               jax.Array, jax.Array]:
+    """Extract up to ``kpr`` more children per row from leftover bitmaps
+    of a mixed-query wave.
 
     Leftover bits already survived refinement and injectivity in their
     fresh pass; the dead-end check runs here at extraction time (and may
     see *newer* patterns than the fresh pass did — strictly more pruning).
     Returns (child_v, child_valid, new_leftover, n_leftover,
-             partial_mask, n_pruned).
+             partial_mask, n_pruned[F]).
     """
     f, w = leftover.shape
     v_pad = w * 32
@@ -269,32 +371,38 @@ def extract_more(t: TableArrays, phi: jax.Array, depth: jax.Array,
         return jnp.nonzero(row, size=kpr, fill_value=-1)[0]
 
     child_v = jax.vmap(row_nonzero)(take_bits).astype(jnp.int32)
-    prune, prune_mask = deadend_lookup_children(t, phi, depth, child_v)
+    prune, prune_mask = deadend_lookup_children_mq(
+        tb, phi, query_slot, depth, child_v)
     child_valid = (child_v >= 0) & ~prune
     return (jnp.where(child_valid, child_v, -1), child_valid,
             _pack_bits(left_bits, w),
             left_bits.sum(axis=1).astype(jnp.int32),
-            prune_mask, prune.sum())
+            prune_mask, prune.sum(axis=1))
 
 
 @jax.jit
-def assemble_children(frontier: jax.Array, used: jax.Array, phi: jax.Array,
-                      child_v: jax.Array, child_valid: jax.Array,
-                      depth: jax.Array, id_base: jax.Array
-                      ) -> tuple[jax.Array, jax.Array, jax.Array,
-                                 jax.Array, jax.Array]:
-    """Materialize child rows [F*KPR, ...] from an expand_wave result.
+def assemble_children_mq(frontier: jax.Array, used: jax.Array,
+                         phi: jax.Array, child_v: jax.Array,
+                         child_valid: jax.Array, depth: jax.Array,
+                         id_base: jax.Array
+                         ) -> tuple[jax.Array, jax.Array, jax.Array,
+                                    jax.Array, jax.Array]:
+    """Materialize child rows [F*KPR, ...] from a mixed-query wave result.
 
-    Returns (child_frontier, child_used, child_phi, parent_row, valid) —
-    padded flat arrays; the host compacts them into new segments.
+    ``depth`` is the per-row int32 [F] lane. Returns (child_frontier,
+    child_used, child_phi, parent_row, valid) — padded flat arrays; the
+    host compacts them into new per-query segments. Fresh embedding ids
+    are drawn from one shared counter (``id_base``): ids only need to be
+    unique within a query, so global uniqueness is sufficient.
     """
     f, kpr = child_v.shape
     flat_v = child_v.reshape(-1)                              # [F*KPR]
     valid = child_valid.reshape(-1)
     parent = jnp.repeat(jnp.arange(f, dtype=jnp.int32), kpr)
+    d_par = depth[parent]                                     # [F*KPR]
     cf = frontier[parent]                                     # [F*KPR, NP]
     cf = jnp.where(
-        (jnp.arange(cf.shape[1])[None, :] == depth) & valid[:, None],
+        (jnp.arange(cf.shape[1])[None, :] == d_par[:, None]) & valid[:, None],
         flat_v[:, None], cf)
     vv = flat_v.clip(0)
     word = (vv // 32).astype(jnp.int32)
@@ -306,26 +414,102 @@ def assemble_children(frontier: jax.Array, used: jax.Array, phi: jax.Array,
     new_ids = id_base + jnp.cumsum(valid.astype(jnp.int32)) - 1
     cp = phi[parent]
     cp = jnp.where(
-        (jnp.arange(cp.shape[1])[None, :] == depth + 1) & valid[:, None],
+        (jnp.arange(cp.shape[1])[None, :] == d_par[:, None] + 1)
+        & valid[:, None],
         new_ids[:, None], cp)
     return cf, cu, cp, parent, valid
+
+
+@jax.jit
+def store_patterns_mq(tb: TableBank, query_slot: jax.Array,
+                      key_pos: jax.Array, key_v: jax.Array,
+                      phis: jax.Array, mus: jax.Array, masks: jax.Array,
+                      valid: jax.Array) -> TableBank:
+    """Batched Δ[slot, u_k, v] <- (φ, μ, Γ) scatter (paper Eq. 6) across
+    all slots at once.
+
+    Invalid (padding) entries are routed out of bounds and dropped by the
+    scatter, so they can never clobber a real pattern.
+    """
+    v_dim = tb.phi.shape[2]
+    qs = jnp.where(valid, query_slot, 0)
+    kp = jnp.where(valid, key_pos, 0)
+    kv = jnp.where(valid, key_v, v_dim)      # OOB -> dropped
+    phi_new = tb.phi.at[qs, kp, kv].set(phis, mode="drop")
+    mu_new = tb.mu.at[qs, kp, kv].set(mus, mode="drop")
+    mask_new = tb.mask.at[qs, kp, kv].set(masks, mode="drop")
+    valid_new = tb.valid.at[qs, kp, kv].set(True, mode="drop")
+    return TableBank(phi=phi_new, mu=mu_new, mask=mask_new,
+                     valid=valid_new)
+
+
+# ===================================================================
+# single-query wrappers (S == 1) — kept for the launch dry-run cells
+# and the distributed pattern merge, which operate on one query
+# ===================================================================
+def _tbank_of(t: TableArrays) -> TableBank:
+    return TableBank(phi=t.phi[None], mu=t.mu[None],
+                     mask=t.mask[None], valid=t.valid[None])
+
+
+def _bank_of(q: QueryArrays, t: TableArrays) -> tuple[QueryBank, TableBank]:
+    qb = QueryBank(cand_bitmap=q.cand_bitmap[None],
+                   nbr_mask=q.nbr_mask[None],
+                   n_query=jnp.asarray(q.n_query)[None])
+    return qb, _tbank_of(t)
+
+
+@functools.partial(jax.jit, static_argnames=("kpr",))
+def expand_wave(g: GraphArrays, q: QueryArrays, t: TableArrays,
+                frontier: jax.Array, used: jax.Array, phi: jax.Array,
+                row_valid: jax.Array, depth: jax.Array,
+                kpr: int = 16) -> WaveResult:
+    """Single-query :func:`expand_wave_mq` with a shared scalar depth."""
+    f = frontier.shape[0]
+    qb, tb = _bank_of(q, t)
+    res = expand_wave_mq(
+        g, qb, tb, frontier, used, phi, row_valid,
+        jnp.zeros((f,), jnp.int32),
+        jnp.full((f,), depth, jnp.int32), kpr=kpr)
+    return WaveResult(
+        refined_empty=res.refined_empty, n_children=res.n_children,
+        n_leftover=res.n_leftover, partial_mask=res.partial_mask,
+        child_v=res.child_v, child_valid=res.child_valid,
+        leftover=res.leftover,
+        n_pruned=res.n_pruned.sum(), n_inj=res.n_inj.sum())
+
+
+@functools.partial(jax.jit, static_argnames=("kpr",))
+def extract_more(t: TableArrays, phi: jax.Array, depth: jax.Array,
+                 leftover: jax.Array, kpr: int = 64
+                 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array,
+                            jax.Array, jax.Array]:
+    """Single-query :func:`extract_more_mq`; returns a scalar prune count."""
+    f = leftover.shape[0]
+    out = extract_more_mq(_tbank_of(t), phi, jnp.zeros((f,), jnp.int32),
+                          jnp.full((f,), depth, jnp.int32), leftover,
+                          kpr=kpr)
+    return out[:5] + (out[5].sum(),)
+
+
+@jax.jit
+def assemble_children(frontier: jax.Array, used: jax.Array, phi: jax.Array,
+                      child_v: jax.Array, child_valid: jax.Array,
+                      depth: jax.Array, id_base: jax.Array
+                      ) -> tuple[jax.Array, jax.Array, jax.Array,
+                                 jax.Array, jax.Array]:
+    """Single-query :func:`assemble_children_mq` with a scalar depth."""
+    f = child_v.shape[0]
+    return assemble_children_mq(frontier, used, phi, child_v, child_valid,
+                                jnp.full((f,), depth, jnp.int32), id_base)
 
 
 @jax.jit
 def store_patterns(t: TableArrays, key_pos: jax.Array, key_v: jax.Array,
                    phis: jax.Array, mus: jax.Array, masks: jax.Array,
                    valid: jax.Array) -> TableArrays:
-    """Batched Δ[u_k, v] <- (φ, μ, Γ) scatter (paper Eq. 6).
-
-    Invalid (padding) entries are routed out of bounds and dropped by the
-    scatter, so they can never clobber a real pattern.
-    """
-    v_dim = t.phi.shape[1]
-    kp = jnp.where(valid, key_pos, 0)
-    kv = jnp.where(valid, key_v, v_dim)      # OOB -> dropped
-    phi_new = t.phi.at[kp, kv].set(phis, mode="drop")
-    mu_new = t.mu.at[kp, kv].set(mus, mode="drop")
-    mask_new = t.mask.at[kp, kv].set(masks, mode="drop")
-    valid_new = t.valid.at[kp, kv].set(True, mode="drop")
-    return TableArrays(phi=phi_new, mu=mu_new, mask=mask_new,
-                       valid=valid_new)
+    """Single-query :func:`store_patterns_mq` (paper Eq. 6)."""
+    tb2 = store_patterns_mq(_tbank_of(t), jnp.zeros_like(key_pos),
+                            key_pos, key_v, phis, mus, masks, valid)
+    return TableArrays(phi=tb2.phi[0], mu=tb2.mu[0],
+                       mask=tb2.mask[0], valid=tb2.valid[0])

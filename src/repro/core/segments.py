@@ -1,0 +1,281 @@
+"""Per-query search state for the shared-wave scheduler.
+
+A *segment* is a fixed-shape batch of partial embeddings of one query,
+all at one depth. Each concurrent query owns a DFS stack of
+:class:`WorkItem` slices over its segments plus the resolution
+bookkeeping that implements the paper's Lemma-4 mask aggregation across
+waves (DESIGN.md §2): a row resolves when its subtree is exhausted, its
+Γ* terms (empty-candidate, injectivity, dead-end, child masks) are
+combined, and the resulting dead-end pattern is queued for the batched
+device scatter.
+
+:class:`SegmentPool` maps bank slots to live :class:`QueryState` objects
+and owns the shared embedding-id counter — the scheduler in
+``vectorized.py`` packs waves from whichever queries have ready segments.
+
+Learning happens *across* waves and across queries' interleavings:
+patterns extracted from failures in earlier-expanded subtrees prune later
+waves. Matching is exact for any schedule because stored patterns are
+true dead-ends.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .backtrack import SearchStats
+from .engine_step import MASK_WORDS
+
+_ID_LIMIT = 2**31 - 2**22
+
+
+def mask64(words: np.ndarray) -> np.ndarray:
+    """uint32 [..., 2] -> uint64 [...]."""
+    w = words.astype(np.uint64)
+    return w[..., 0] | (w[..., 1] << np.uint64(32))
+
+
+def words_from64(m: np.ndarray) -> np.ndarray:
+    out = np.zeros(m.shape + (MASK_WORDS,), np.uint32)
+    out[..., 0] = (m & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    out[..., 1] = (m >> np.uint64(32)).astype(np.uint32)
+    return out
+
+
+def bit_of(p) -> np.uint64:
+    return np.uint64(1) << np.uint64(p)
+
+
+def below(d: int) -> np.uint64:
+    return (np.uint64(1) << np.uint64(d)) - np.uint64(1) if d < 64 \
+        else np.uint64(0xFFFFFFFFFFFFFFFF)
+
+
+@dataclasses.dataclass
+class Segment:
+    seg_id: int
+    depth: int                      # mapped positions per row
+    frontier: np.ndarray            # int32 [R, N_PAD]
+    used: np.ndarray                # uint32 [R, W]
+    phi: np.ndarray                 # int32 [R, N_PAD + 1]
+    parent_seg: np.ndarray          # int32 [R] (-1 for roots)
+    parent_row: np.ndarray          # int32 [R]
+    # resolution state
+    outstanding: np.ndarray | None = None   # int64 [R]
+    gamma: np.ndarray | None = None         # uint64 [R] accumulated Γ*
+    reported: np.ndarray | None = None      # bool [R]
+    expanded: np.ndarray | None = None      # bool [R] first pass done
+    pending_leftover: np.ndarray | None = None  # uint32 [R, W]
+    resolved: np.ndarray | None = None      # bool [R]
+    n_unresolved: int = 0
+
+    def init_state(self, w: int) -> None:
+        r = len(self.frontier)
+        self.outstanding = np.zeros(r, np.int64)
+        self.gamma = np.zeros(r, np.uint64)
+        self.reported = np.zeros(r, bool)
+        self.expanded = np.zeros(r, bool)
+        self.pending_leftover = np.zeros((r, w), np.uint32)
+        self.resolved = np.zeros(r, bool)
+        self.n_unresolved = r
+
+
+@dataclasses.dataclass
+class EngineStats(SearchStats):
+    waves: int = 0
+    rows_created: int = 0
+    patterns_stored: int = 0
+
+
+@dataclasses.dataclass
+class WorkItem:
+    """A ready slice of one segment: rows [start, stop) awaiting a fresh
+    expansion or a leftover extraction pass."""
+    seg_id: int
+    start: int
+    stop: int
+    kind: str                       # "fresh" | "leftover"
+
+
+class QueryState:
+    """One concurrent query: DFS stack, segments, Lemma-4 resolution."""
+
+    def __init__(self, slot: int, query_id: int, n: int, order: np.ndarray,
+                 qnbr_bits: np.ndarray, w: int, *, limit: int | None,
+                 learn: bool, max_rows: int | None,
+                 deadline: float | None, keep_table: bool,
+                 t_submit: float):
+        self.slot = slot
+        self.query_id = query_id
+        self.n = n
+        self.order = order
+        self.qnbr_bits = qnbr_bits      # uint64 [N_PAD] query-adjacency bits
+        self.w = w
+        self.limit = limit
+        self.learn = learn
+        self.max_rows = max_rows
+        self.deadline = deadline        # absolute perf_counter deadline
+        self.keep_table = keep_table
+        self.t_submit = t_submit
+        self.stats = EngineStats()
+        self.embeddings: list[np.ndarray] = []
+        self.segments: dict[int, Segment] = {}
+        self.stack: list[WorkItem] = []
+        self.store_buf: list[tuple[int, int, int, int, np.uint64]] = []
+        self.status = "running"         # "running" | "done"
+        self.abort_reason: str | None = None  # "limit" | "rows" | "time"
+        self._next_seg = 0
+
+    # -- segment / stack management ------------------------------------
+    def new_segment(self, depth: int, frontier: np.ndarray,
+                    used: np.ndarray, phi: np.ndarray,
+                    parent_seg: np.ndarray, parent_row: np.ndarray
+                    ) -> Segment:
+        seg = Segment(self._next_seg, depth, frontier, used, phi,
+                      parent_seg, parent_row)
+        seg.init_state(self.w)
+        self.segments[self._next_seg] = seg
+        self._next_seg += 1
+        return seg
+
+    def push(self, item: WorkItem) -> None:
+        self.stack.append(item)
+
+    def pop_ready(self) -> WorkItem | None:
+        """Pop the top work item whose segment is still alive."""
+        while self.stack:
+            item = self.stack[-1]
+            if item.seg_id not in self.segments:
+                self.stack.pop()
+                continue
+            return self.stack.pop()
+        return None
+
+    def peek_kind(self) -> str | None:
+        """Kind of the top live work item (discarding stale ones)."""
+        while self.stack:
+            item = self.stack[-1]
+            if item.seg_id not in self.segments:
+                self.stack.pop()
+                continue
+            return item.kind
+        return None
+
+    def evict(self) -> None:
+        """Drop all in-flight work (abort / completion)."""
+        self.segments.clear()
+        self.stack.clear()
+        self.store_buf.clear()
+
+    # -- Lemma-4 resolution bookkeeping --------------------------------
+    def queue_store(self, seg: Segment, row: int, gamma: np.uint64) -> None:
+        """Record the dead-end pattern of a resolved-dead row."""
+        if not self.learn or self.stats.aborted:
+            return
+        d = seg.depth
+        if d == 0:
+            return
+        key_pos = d - 1
+        key_v = int(seg.frontier[row, key_pos])
+        below_mask = gamma & below(key_pos)
+        if below_mask:
+            mu_len = int(below_mask).bit_length()   # highest set bit + 1
+        else:
+            mu_len = 0
+        phi_id = int(seg.phi[row, mu_len])
+        self.store_buf.append((key_pos, key_v, phi_id, mu_len, gamma))
+
+    def has_leftover(self, seg: Segment, row: int) -> bool:
+        return bool(seg.pending_leftover[row].any())
+
+    def finalize_row(self, seg: Segment, row: int
+                     ) -> tuple[int, int, bool, np.uint64]:
+        """All children of this row are resolved: Lemma 4 conversion."""
+        if seg.reported[row]:
+            return (seg.seg_id, row, True, np.uint64(0))
+        d = seg.depth
+        gamma = seg.gamma[row]
+        if gamma & bit_of(d):
+            gamma = (gamma | self.qnbr_bits[d]) & below(d)
+        return (seg.seg_id, row, False, gamma)
+
+    def resolve_rows(self, items: list[tuple[int, int, bool, np.uint64]]
+                     ) -> None:
+        """Worklist of (seg_id, row, reported, gamma) resolutions,
+        propagating up through parent segments."""
+        while items:
+            sid, row, reported, gamma = items.pop()
+            seg = self.segments.get(sid)
+            if seg is None or seg.resolved[row]:
+                continue
+            seg.resolved[row] = True
+            seg.n_unresolved -= 1
+            if not reported:
+                self.queue_store(seg, row, gamma)
+            ps, pr = int(seg.parent_seg[row]), int(seg.parent_row[row])
+            if ps >= 0:
+                pseg = self.segments[ps]
+                if reported:
+                    pseg.reported[pr] = True
+                else:
+                    pseg.gamma[pr] |= gamma
+                pseg.outstanding[pr] -= 1
+                if (pseg.outstanding[pr] == 0 and pseg.expanded[pr]
+                        and not self.has_leftover(pseg, pr)):
+                    items.append(self.finalize_row(pseg, pr))
+            if seg.n_unresolved == 0:
+                del self.segments[sid]
+
+    @property
+    def active(self) -> bool:
+        return self.status == "running"
+
+
+class SegmentPool:
+    """Slot table of live queries plus the shared embedding-id counter."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self.slots: list[QueryState | None] = [None] * n_slots
+        self.id_counter = 1
+        self.learning_enabled = True
+        self.peak_active = 0
+
+    def free_slot(self) -> int | None:
+        for i, q in enumerate(self.slots):
+            if q is None:
+                return i
+        return None
+
+    def attach(self, slot: int, q: QueryState) -> None:
+        assert self.slots[slot] is None
+        self.slots[slot] = q
+        self.peak_active = max(self.peak_active, self.n_active)
+
+    def release(self, slot: int) -> None:
+        self.slots[slot] = None
+        if self.n_active == 0 and not self.learning_enabled:
+            # id-space overflow recovery: once the pool drains, no live
+            # phi value can collide with fresh ids, so learning restarts.
+            self.id_counter = 1
+            self.learning_enabled = True
+
+    @property
+    def n_active(self) -> int:
+        return sum(q is not None for q in self.slots)
+
+    def active_queries(self) -> list[QueryState]:
+        return [q for q in self.slots if q is not None and q.active]
+
+    def alloc_ids(self, n: int) -> int:
+        """Reserve ``n`` fresh embedding ids; returns the base id. On
+        overflow, learning pauses (tables are cleared by the scheduler)
+        until the pool drains — matching stays exact throughout."""
+        base = self.id_counter
+        self.id_counter += n
+        return base
+
+    @property
+    def id_overflow(self) -> bool:
+        return self.id_counter > _ID_LIMIT

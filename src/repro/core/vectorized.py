@@ -1,93 +1,580 @@
-"""Host-side wave scheduler for the TPU matching engine.
+"""Host-side shared-wave scheduler for the TPU matching engine.
 
-The scheduler owns a DFS stack of *segments* (fixed-shape batches of
-partial embeddings, all at one depth) and the resolution bookkeeping that
-implements the paper's Lemma-4 mask aggregation across waves. All dense
-work — Eq. 2 refinement, injectivity, dead-end lookup, child extraction,
-pattern scatter — runs in the jitted device programs of ``engine_step``.
+Continuous multi-query wave batching (DESIGN.md §2): many concurrent
+queries are admitted into bank *slots*; every wave is packed with ready
+segment rows from whichever queries have work, so one fixed-shape jitted
+device program (``engine_step.expand_wave_mq``) serves mixed traffic with
+no idle gaps between queries. The per-query DFS stacks and Lemma-4
+resolution bookkeeping live in ``segments.py``; all dense work — Eq. 2
+refinement, injectivity, dead-end lookup, child extraction, pattern
+scatter — runs in the jitted device programs of ``engine_step``.
+
+Scheduling policy: admission fills free slots from a bounded FIFO queue;
+wave packing round-robins over active queries, splitting segment slices
+so waves stay full; per-query ``limit`` / ``max_rows`` / ``time_budget_s``
+abort a query and evict its segments without touching its neighbors.
 
 Learning happens *across* waves: patterns extracted from failures in
-earlier-expanded subtrees prune later waves (DESIGN.md §2). Matching is
+earlier-expanded subtrees prune later waves of the same query (tables are
+slot-private, so queries never see each other's patterns). Matching is
 exact for any schedule because stored patterns are true dead-ends.
+
+:class:`WaveEngine` is the single-query facade (one slot) kept for the
+sequential-style API and the distributed matcher.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import time
 
 import jax.numpy as jnp
 import numpy as np
 
-from .backtrack import MatchResult, SearchStats, _prepare
-from .candidates import build_candidates
-from .engine_step import (MASK_WORDS, N_PAD, GraphArrays, QueryArrays,
-                          TableArrays, assemble_children, expand_wave,
-                          extract_more, store_patterns)
+from .backtrack import MatchResult, _prepare
+from .engine_step import (MASK_WORDS, N_PAD, GraphArrays, QueryBank,
+                          TableArrays, TableBank, assemble_children_mq,
+                          expand_wave_mq, extract_more_mq, load_slot,
+                          read_table_slot, store_patterns_mq)
 from .graph import Graph, pack_bitmap
-from .ordering import connected_min_candidate_order
+from .segments import (EngineStats, QueryState, Segment, SegmentPool,
+                       WorkItem, below, bit_of, mask64, words_from64)
 
-_ID_LIMIT = 2**31 - 2**22
-
-
-def _mask64(words: np.ndarray) -> np.ndarray:
-    """uint32 [..., 2] -> uint64 [...]."""
-    w = words.astype(np.uint64)
-    return w[..., 0] | (w[..., 1] << np.uint64(32))
+__all__ = ["WaveScheduler", "WaveEngine", "EngineStats", "QueueFull",
+           "match_vectorized"]
 
 
-def _words_from64(m: np.ndarray) -> np.ndarray:
-    out = np.zeros(m.shape + (MASK_WORDS,), np.uint32)
-    out[..., 0] = (m & np.uint64(0xFFFFFFFF)).astype(np.uint32)
-    out[..., 1] = (m >> np.uint64(32)).astype(np.uint32)
-    return out
-
-
-def _bit(p) -> np.uint64:
-    return np.uint64(1) << np.uint64(p)
-
-
-def _below(d: int) -> np.uint64:
-    return (np.uint64(1) << np.uint64(d)) - np.uint64(1) if d < 64 \
-        else np.uint64(0xFFFFFFFFFFFFFFFF)
+class QueueFull(RuntimeError):
+    """Raised when the bounded admission queue rejects a submission."""
 
 
 @dataclasses.dataclass
-class _Segment:
-    seg_id: int
-    depth: int                      # mapped positions per row
-    frontier: np.ndarray            # int32 [R, N_PAD]
-    used: np.ndarray                # uint32 [R, W]
-    phi: np.ndarray                 # int32 [R, N_PAD + 1]
-    parent_seg: np.ndarray          # int32 [R] (-1 for roots)
-    parent_row: np.ndarray          # int32 [R]
-    # resolution state (filled lazily at expansion time)
-    outstanding: np.ndarray | None = None   # int64 [R]
-    gamma: np.ndarray | None = None         # uint64 [R] accumulated Γ*
-    reported: np.ndarray | None = None      # bool [R]
-    expanded: np.ndarray | None = None      # bool [R] first pass done
-    pending_leftover: np.ndarray | None = None  # uint32 [R, W]
-    resolved: np.ndarray | None = None      # bool [R]
-    n_unresolved: int = 0
-
-    def init_state(self, w: int) -> None:
-        r = len(self.frontier)
-        self.outstanding = np.zeros(r, np.int64)
-        self.gamma = np.zeros(r, np.uint64)
-        self.reported = np.zeros(r, bool)
-        self.expanded = np.zeros(r, bool)
-        self.pending_leftover = np.zeros((r, w), np.uint32)
-        self.resolved = np.zeros(r, bool)
-        self.n_unresolved = r
+class _Request:
+    """A prepared query waiting in the admission queue."""
+    query_id: int
+    n: int
+    order: np.ndarray
+    roots: np.ndarray
+    cand_bitmap: np.ndarray        # uint32 [N_PAD, W]
+    nbr_mask: np.ndarray           # bool [N_PAD, N_PAD]
+    qnbr_bits: np.ndarray          # uint64 [N_PAD]
+    limit: int | None
+    learn: bool
+    max_rows: int | None
+    time_budget_s: float | None
+    seed_table: TableArrays | None
+    keep_table: bool
+    t_submit: float
 
 
-@dataclasses.dataclass
-class EngineStats(SearchStats):
-    waves: int = 0
-    rows_created: int = 0
-    patterns_stored: int = 0
+class WaveScheduler:
+    """Continuous multi-query matching over one data graph.
+
+    Usage::
+
+        sched = WaveScheduler(data_graph, n_slots=16)
+        qid = sched.submit(query_graph, limit=1000)
+        sched.run()
+        res = sched.finished.pop(qid)          # MatchResult
+    """
+
+    def __init__(self, data: Graph, n_slots: int = 8, wave_size: int = 512,
+                 kpr: int = 16, use_pruning: bool = True,
+                 max_queue: int = 4096):
+        self.data = data
+        self.n_slots = int(n_slots)
+        self.wave_size = int(wave_size)
+        self.kpr = int(kpr)
+        self.use_pruning = use_pruning
+        self.max_queue = int(max_queue)
+        self.w = (data.n + 31) // 32
+        self.g = GraphArrays(
+            adj_bitmap=jnp.asarray(data.adj_bitmap),
+            n_vertices=jnp.int32(data.n))
+        self.qb = QueryBank.empty(self.n_slots, self.w)
+        self.tb = TableBank.empty(self.n_slots, data.n)
+        self.pool = SegmentPool(self.n_slots)
+        self.queue: collections.deque[_Request] = collections.deque()
+        self.finished: dict[int, MatchResult] = {}
+        self.tables: dict[int, TableArrays] = {}
+        self._fresh_done: list[int] = []
+        self._next_qid = 0
+        self._rr = 0
+        # aggregate wave statistics (for occupancy / SLO reporting)
+        self.waves = 0
+        self.rows_packed = 0
+        self.occ_sum = 0.0
+        self.waves_steady = 0
+        self.occ_sum_steady = 0.0
+        self.total_prunes = 0
+        self.total_rows_created = 0
+
+    # ------------------------------------------------------------------
+    # submission / admission
+    # ------------------------------------------------------------------
+    def submit(self, query: Graph, *, limit: int | None = 1000,
+               cand: list[np.ndarray] | None = None,
+               order: np.ndarray | None = None,
+               max_rows: int | None = None,
+               time_budget_s: float | None = None,
+               use_pruning: bool | None = None,
+               seed_table: TableArrays | None = None,
+               keep_table: bool = False) -> int:
+        """Enqueue a query; returns its scheduler query id.
+
+        Raises :class:`QueueFull` when the bounded admission queue is at
+        capacity — callers apply backpressure or shed load.
+
+        ``seed_table``: a TableArrays of *transferable* (mu == 0)
+        patterns from other shards — see core.distributed. Patterns with
+        mu > 0 reference foreign embedding-id numbering and MUST NOT be
+        seeded (soundness).
+        """
+        if len(self.queue) >= self.max_queue:
+            raise QueueFull(
+                f"admission queue at capacity ({self.max_queue})")
+        if query.n > N_PAD:
+            raise ValueError(f"query too large for mask width: {query.n}")
+        t_submit = time.perf_counter()
+        qid = self._next_qid
+        self._next_qid += 1
+        cand_by_pos, order, _pos_of, nbr_pos = _prepare(
+            query, self.data, cand, order)
+        n = query.n
+        v = self.data.n
+        cand_dense = np.zeros((N_PAD, v), bool)
+        for d in range(n):
+            cand_dense[d, cand_by_pos[d]] = True
+        nbr_mask = np.zeros((N_PAD, N_PAD), bool)
+        qnbr_bits = np.zeros(N_PAD, np.uint64)
+        for d in range(n):
+            bits = np.uint64(0)
+            for p in nbr_pos[d]:
+                nbr_mask[d, int(p)] = True
+                bits |= bit_of(int(p))
+            qnbr_bits[d] = bits
+        learn = self.use_pruning if use_pruning is None else use_pruning
+        req = _Request(
+            query_id=qid, n=n, order=np.asarray(order, np.int32),
+            roots=np.asarray(cand_by_pos[0], np.int32),
+            cand_bitmap=pack_bitmap(cand_dense), nbr_mask=nbr_mask,
+            qnbr_bits=qnbr_bits, limit=limit, learn=learn,
+            max_rows=max_rows, time_budget_s=time_budget_s,
+            seed_table=seed_table, keep_table=keep_table,
+            t_submit=t_submit)
+        # trivial queries never need a slot
+        if len(req.roots) == 0 or n == 1:
+            self._finish_trivial(req)
+        else:
+            self.queue.append(req)
+        return qid
+
+    def _finish_trivial(self, req: _Request) -> None:
+        stats = EngineStats()
+        stats.table_stats = None
+        embeddings: list[np.ndarray] = []
+        if req.n == 1 and len(req.roots) > 0:
+            stats.rows_created = len(req.roots)
+            for v0 in req.roots:
+                emb = np.empty(1, np.int32)
+                emb[req.order[0]] = v0
+                embeddings.append(emb)
+            if req.limit is not None and len(embeddings) >= req.limit:
+                embeddings = embeddings[:req.limit]
+                stats.aborted = True
+                stats.abort_reason = "limit"
+            stats.found = len(embeddings)
+            stats.recursions = stats.rows_created
+        stats.wall_time_s = time.perf_counter() - req.t_submit
+        self.finished[req.query_id] = MatchResult(embeddings, stats)
+        if req.keep_table:
+            self.tables[req.query_id] = (req.seed_table
+                                         if req.seed_table is not None
+                                         else TableArrays.empty(self.data.n))
+        self._fresh_done.append(req.query_id)
+
+    def _admit(self) -> None:
+        while self.queue:
+            slot = self.pool.free_slot()
+            if slot is None:
+                return
+            req = self.queue.popleft()
+            table = (req.seed_table if req.seed_table is not None
+                     else TableArrays.empty(self.data.n))
+            self.qb, self.tb = load_slot(
+                self.qb, self.tb, jnp.int32(slot),
+                jnp.asarray(req.cand_bitmap), jnp.asarray(req.nbr_mask),
+                jnp.int32(req.n), table)
+            now = time.perf_counter()
+            deadline = (None if req.time_budget_s is None
+                        else now + req.time_budget_s)
+            q = QueryState(slot, req.query_id, req.n, req.order,
+                           req.qnbr_bits, self.w, limit=req.limit,
+                           learn=req.learn and self.pool.learning_enabled,
+                           max_rows=req.max_rows, deadline=deadline,
+                           keep_table=req.keep_table,
+                           t_submit=req.t_submit)
+            q.stats.table_stats = None
+            r = len(req.roots)
+            frontier = np.full((r, N_PAD), -1, np.int32)
+            frontier[:, 0] = req.roots
+            used = np.zeros((r, self.w), np.uint32)
+            used[np.arange(r), req.roots // 32] = (
+                np.uint32(1) << (req.roots.astype(np.uint32)
+                                 % np.uint32(32)))
+            phi = np.zeros((r, N_PAD + 1), np.int32)
+            base = self.pool.alloc_ids(r)
+            phi[:, 1] = np.arange(base, base + r)
+            q.stats.rows_created += r
+            root_seg = q.new_segment(1, frontier, used, phi,
+                                     np.full(r, -1, np.int32),
+                                     np.zeros(r, np.int32))
+            q.push(WorkItem(root_seg.seg_id, 0, r, "fresh"))
+            self.pool.attach(slot, q)
+
+    # ------------------------------------------------------------------
+    # completion / abort
+    # ------------------------------------------------------------------
+    def _finish(self, q: QueryState) -> None:
+        if q.keep_table and q.store_buf:
+            # make patterns from the final resolutions visible in the
+            # exported table (distributed pattern sharing)
+            self._flush_stores()
+        q.status = "done"
+        q.evict()
+        q.stats.recursions = q.stats.rows_created
+        q.stats.wall_time_s = time.perf_counter() - q.t_submit
+        self.total_prunes += q.stats.deadend_prunes
+        self.total_rows_created += q.stats.rows_created
+        if q.keep_table:
+            self.tables[q.query_id] = read_table_slot(self.tb, q.slot)
+        self.finished[q.query_id] = MatchResult(q.embeddings, q.stats)
+        self._fresh_done.append(q.query_id)
+        self.pool.release(q.slot)
+
+    def _abort(self, q: QueryState, reason: str) -> None:
+        """Abort a query (budget exhausted or limit reached) and evict
+        its segments; partial embeddings are kept."""
+        q.stats.aborted = True
+        q.stats.abort_reason = reason
+        q.abort_reason = reason
+        self._finish(q)
+
+    def _check_budgets(self, now: float | None = None) -> None:
+        for q in self.pool.active_queries():
+            if q.deadline is not None:
+                if now is None:
+                    now = time.perf_counter()
+                if now > q.deadline:
+                    self._abort(q, "time")
+                    continue
+            if q.max_rows is not None and q.stats.rows_created > q.max_rows:
+                self._abort(q, "rows")
+
+    # ------------------------------------------------------------------
+    # wave packing
+    # ------------------------------------------------------------------
+    def _pack_wave(self) -> list[tuple[QueryState, Segment, int, int]] | None:
+        """Fill one wave with ready rows, round-robin across queries.
+
+        All picks share one kind ("fresh" or "leftover") because the two
+        run different device programs; a query whose stack top is the
+        other kind simply waits for a later wave. Each query contributes
+        at most one work item per wave: waves fill *across* queries, not
+        by draining one query's stack — that keeps the per-query
+        store→lookup cadence of depth-first search (patterns learned from
+        one segment slice prune the next slice) while mixed traffic keeps
+        the wave full. Returns [(query, segment, start, stop)] or None
+        when no work exists.
+        """
+        active = self.pool.active_queries()
+        if not active:
+            return None
+        order = active[self._rr % len(active):] + \
+            active[:self._rr % len(active)]
+        self._rr += 1
+        kind = None
+        picks: list[tuple[QueryState, Segment, int, int]] = []
+        remaining = self.wave_size
+        for q in order:
+            if remaining == 0:
+                break
+            top = q.peek_kind()
+            if top is None:
+                continue
+            if kind is None:
+                kind = top
+            if top != kind:
+                continue
+            item = q.pop_ready()
+            take = min(remaining, item.stop - item.start)
+            if take < item.stop - item.start:
+                q.push(WorkItem(item.seg_id, item.start + take,
+                                item.stop, item.kind))
+            picks.append((q, q.segments[item.seg_id], item.start,
+                          item.start + take))
+            remaining -= take
+        if not picks:
+            return None
+        self._wave_kind = kind
+        return picks
+
+    # ------------------------------------------------------------------
+    # pattern store flushing
+    # ------------------------------------------------------------------
+    def _flush_stores(self) -> None:
+        bufs = [(q, q.store_buf) for q in self.pool.active_queries()
+                if q.store_buf]
+        if not bufs or not self.pool.learning_enabled:
+            for q, buf in bufs:
+                buf.clear()
+            return
+        slots, kpos, kv, phis, mus, masks = [], [], [], [], [], []
+        for q, buf in bufs:
+            for key_pos, key_v, phi_id, mu_len, gamma in buf:
+                slots.append(q.slot)
+                kpos.append(key_pos)
+                kv.append(key_v)
+                phis.append(phi_id)
+                mus.append(mu_len)
+                masks.append(gamma)
+            q.stats.patterns_stored += len(buf)
+            buf.clear()
+        self.tb = store_patterns_mq(
+            self.tb,
+            jnp.asarray(np.array(slots, np.int32)),
+            jnp.asarray(np.array(kpos, np.int32)),
+            jnp.asarray(np.array(kv, np.int32)),
+            jnp.asarray(np.array(phis, np.int32)),
+            jnp.asarray(np.array(mus, np.int32)),
+            jnp.asarray(words_from64(np.array(masks, np.uint64))),
+            jnp.ones(len(slots), bool))
+
+    # ------------------------------------------------------------------
+    # one wave
+    # ------------------------------------------------------------------
+    def step(self) -> bool:
+        """Admit, pack, and execute one wave. Returns False when idle."""
+        self._check_budgets()
+        self._admit()
+        picks = self._pack_wave()
+        if picks is None:
+            return False
+        kind = self._wave_kind
+        f_pad = self.wave_size
+        fr = np.full((f_pad, N_PAD), -1, np.int32)
+        us = np.zeros((f_pad, self.w), np.uint32)
+        ph = np.zeros((f_pad, N_PAD + 1), np.int32)
+        lo = np.zeros((f_pad, self.w), np.uint32)
+        valid = np.zeros(f_pad, bool)
+        slot_v = np.zeros(f_pad, np.int32)
+        depth_v = np.zeros(f_pad, np.int32)
+        metas: list[tuple[QueryState, Segment, int, int, int, int]] = []
+        off = 0
+        for q, seg, s, e in picks:
+            k = e - s
+            fr[off:off + k] = seg.frontier[s:e]
+            us[off:off + k] = seg.used[s:e]
+            ph[off:off + k] = seg.phi[s:e]
+            valid[off:off + k] = ~seg.resolved[s:e]
+            slot_v[off:off + k] = q.slot
+            depth_v[off:off + k] = seg.depth
+            if kind == "leftover":
+                lo[off:off + k] = seg.pending_leftover[s:e]
+            metas.append((q, seg, s, e, off, k))
+            off += k
+
+        self._flush_stores()
+        self.waves += 1
+        self.rows_packed += off
+        occ = off / f_pad
+        self.occ_sum += occ
+        if self.pool.n_active == self.n_slots:
+            self.waves_steady += 1
+            self.occ_sum_steady += occ
+        for q, *_ in metas:     # one item per query per wave (_pack_wave)
+            q.stats.waves += 1
+
+        if kind == "fresh":
+            res = expand_wave_mq(
+                self.g, self.qb, self.tb, jnp.asarray(fr), jnp.asarray(us),
+                jnp.asarray(ph), jnp.asarray(valid), jnp.asarray(slot_v),
+                jnp.asarray(depth_v), kpr=self.kpr)
+            refined_empty = np.asarray(res.refined_empty)
+            n_children = np.asarray(res.n_children)
+            n_leftover = np.asarray(res.n_leftover)
+            partial = mask64(np.asarray(res.partial_mask))
+            child_v = np.asarray(res.child_v)
+            child_valid = np.asarray(res.child_valid)
+            leftover = np.asarray(res.leftover)
+            n_pruned = np.asarray(res.n_pruned)
+            n_inj = np.asarray(res.n_inj)
+        else:
+            res = extract_more_mq(
+                self.tb, jnp.asarray(ph), jnp.asarray(slot_v),
+                jnp.asarray(depth_v), jnp.asarray(lo), kpr=4 * self.kpr)
+            child_v = np.asarray(res[0])
+            child_valid = np.asarray(res[1])
+            leftover = np.asarray(res[2])
+            n_leftover = np.asarray(res[3])
+            partial = mask64(np.asarray(res[4]))
+            n_pruned = np.asarray(res[5])
+            n_children = child_valid.sum(axis=1).astype(np.int32)
+            refined_empty = np.zeros(f_pad, bool)
+            n_inj = np.zeros(f_pad, np.int32)
+
+        # mask out rows of evicted queries (aborted between pack and now:
+        # cannot happen today, but keeps the invariant explicit) and
+        # last-level rows — their children are embeddings, not rows.
+        last_level = np.zeros(f_pad, bool)
+        for q, seg, s, e, woff, k in metas:
+            if seg.depth + 1 == q.n:
+                last_level[woff:woff + k] = True
+        child_valid_eff = child_valid & ~last_level[:, None]
+
+        cf = cu = cp = par = cvalid = None
+        if child_valid_eff.any():
+            id_base = self.pool.alloc_ids(int(child_valid_eff.sum()))
+            cf, cu, cp, par, cvalid = assemble_children_mq(
+                jnp.asarray(fr), jnp.asarray(us), jnp.asarray(ph),
+                jnp.asarray(np.where(child_valid_eff, child_v, -1)),
+                jnp.asarray(child_valid_eff), jnp.asarray(depth_v),
+                jnp.int32(id_base))
+            cf = np.asarray(cf)
+            cu = np.asarray(cu)
+            cp = np.asarray(cp)
+            par = np.asarray(par)
+            cvalid = np.asarray(cvalid)
+            if self.pool.id_overflow and self.pool.learning_enabled:
+                # id overflow: clear all tables, pause learning (sound);
+                # the pool re-enables learning once it drains.
+                self.tb = TableBank.empty(self.n_slots, self.data.n)
+                self.pool.learning_enabled = False
+                for qq in self.pool.active_queries():
+                    qq.learn = False
+
+        # ---- per-item host bookkeeping ---------------------------------
+        for q, seg, s, e, woff, k in metas:
+            if not q.active:
+                continue
+            sl = slice(woff, woff + k)
+            rows = slice(s, e)
+            seg.gamma[rows] |= partial[sl]
+            seg.pending_leftover[rows] = leftover[sl]
+            q.stats.deadend_prunes += int(n_pruned[sl].sum())
+            if kind == "fresh":
+                seg.expanded[rows] = True
+                q.stats.injectivity_fails += int(n_inj[sl].sum())
+
+            # re-queue leftover before children (LIFO: children first)
+            if (n_leftover[sl] > 0).any():
+                q.push(WorkItem(seg.seg_id, s, e, "leftover"))
+
+            item_last = seg.depth + 1 == q.n
+            if item_last:
+                # complete embeddings
+                emb_rows, emb_cols = np.nonzero(child_valid[sl])
+                for i, j in zip(emb_rows.tolist(), emb_cols.tolist()):
+                    if (q.limit is not None
+                            and q.stats.found >= q.limit):
+                        break
+                    mrow = seg.frontier[s + i].copy()
+                    mrow[seg.depth] = child_v[woff + i, j]
+                    emb = np.empty(q.n, np.int32)
+                    emb[q.order] = mrow[:q.n]
+                    q.embeddings.append(emb)
+                    q.stats.found += 1
+                    seg.reported[s + i] = True
+                if q.limit is not None and q.stats.found >= q.limit:
+                    self._abort(q, "limit")
+                    continue
+            else:
+                seg.outstanding[rows] += n_children[sl]
+                # compact this item's children into a new segment
+                if (n_children[sl] > 0).any():
+                    lo_f, hi_f = woff * child_v.shape[1], \
+                        (woff + k) * child_v.shape[1]
+                    sel = np.nonzero(cvalid[lo_f:hi_f])[0] + lo_f
+                    n_new = len(sel)
+                    q.stats.rows_created += n_new
+                    cseg = q.new_segment(
+                        seg.depth + 1, cf[sel], cu[sel], cp[sel],
+                        np.full(n_new, seg.seg_id, np.int32),
+                        (par[sel] - woff + s).astype(np.int32))
+                    q.push(WorkItem(cseg.seg_id, 0, n_new, "fresh"))
+
+            # immediate resolutions
+            items = []
+            for i in range(k):
+                row = s + i
+                if seg.resolved[row]:
+                    continue
+                if refined_empty[woff + i]:
+                    # Lemma 1: Γ = N(u_d) ∩ dom(M̂)
+                    gam = q.qnbr_bits[seg.depth] & below(seg.depth)
+                    items.append((seg.seg_id, row, False, gam))
+                elif (seg.outstanding[row] == 0 and seg.expanded[row]
+                      and not seg.pending_leftover[row].any()):
+                    if seg.reported[row]:
+                        items.append((seg.seg_id, row, True, np.uint64(0)))
+                    else:
+                        items.append(q.finalize_row(seg, row))
+            q.resolve_rows(items)
+
+            if q.max_rows is not None and q.stats.rows_created > q.max_rows:
+                self._abort(q, "rows")
+            elif not q.segments:
+                self._finish(q)
+        return True
+
+    # ------------------------------------------------------------------
+    # driving
+    # ------------------------------------------------------------------
+    def poll(self) -> list[int]:
+        """Query ids completed since the last poll."""
+        done, self._fresh_done = self._fresh_done, []
+        return done
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and self.pool.n_active == 0
+
+    def run(self) -> dict[int, MatchResult]:
+        """Drain all queued and in-flight queries; returns the finished
+        map (also available as ``self.finished``)."""
+        while self.step():
+            pass
+        return self.finished
+
+    def scheduler_stats(self) -> dict:
+        """Aggregate wave statistics for SLO / occupancy reporting.
+        Prune/row totals include still-active queries, so mid-run polling
+        sees live numbers."""
+        prunes = self.total_prunes + sum(
+            q.stats.deadend_prunes for q in self.pool.active_queries())
+        rows = self.total_rows_created + sum(
+            q.stats.rows_created for q in self.pool.active_queries())
+        return {
+            "waves": self.waves,
+            "rows_packed": self.rows_packed,
+            "wave_size": self.wave_size,
+            "n_slots": self.n_slots,
+            "mean_occupancy": (self.occ_sum / self.waves
+                               if self.waves else 0.0),
+            "steady_occupancy": (self.occ_sum_steady / self.waves_steady
+                                 if self.waves_steady else 0.0),
+            "steady_waves": self.waves_steady,
+            "peak_active": self.pool.peak_active,
+            "queued": len(self.queue),
+            "active": self.pool.n_active,
+            "deadend_prunes": prunes,
+            "rows_created": rows,
+            "prune_rate": prunes / max(1, prunes + rows),
+        }
 
 
 class WaveEngine:
-    """Vectorized subgraph matching over one data graph.
+    """Single-query facade over :class:`WaveScheduler` (one slot).
 
     Usage::
 
@@ -97,322 +584,27 @@ class WaveEngine:
 
     def __init__(self, data: Graph, wave_size: int = 512, kpr: int = 16,
                  use_pruning: bool = True):
-        self.data = data
-        self.wave_size = int(wave_size)
-        self.kpr = int(kpr)
-        self.use_pruning = use_pruning
-        self.w = (data.n + 31) // 32
-        self.g = GraphArrays(
-            adj_bitmap=jnp.asarray(data.adj_bitmap),
-            n_vertices=jnp.int32(data.n))
+        self.scheduler = WaveScheduler(
+            data, n_slots=1, wave_size=wave_size, kpr=kpr,
+            use_pruning=use_pruning)
 
-    # ------------------------------------------------------------------
     def match(self, query: Graph, limit: int | None = 1000,
               cand: list[np.ndarray] | None = None,
               order: np.ndarray | None = None,
               max_rows: int | None = None,
-              seed_table=None) -> MatchResult:
+              time_budget_s: float | None = None,
+              seed_table: TableArrays | None = None) -> MatchResult:
         """``seed_table``: a TableArrays of *transferable* (mu == 0)
-        patterns from other shards — see core.distributed. Patterns with
-        mu > 0 reference foreign embedding-id numbering and MUST NOT be
-        seeded (soundness)."""
-        import time as _time
-        _t0 = _time.perf_counter()
-        if query.n > N_PAD:
-            raise ValueError(f"query too large for mask width: {query.n}")
-        cand_by_pos, order, pos_of, nbr_pos = _prepare(
-            query, self.data, cand, order)
-        n = query.n
-        v, w = self.data.n, self.w
-
-        # --- device query arrays -------------------------------------
-        cand_dense = np.zeros((N_PAD, v), bool)
-        for d in range(n):
-            cand_dense[d, cand_by_pos[d]] = True
-        nbr_mask = np.zeros((N_PAD, N_PAD), bool)
-        for d in range(n):
-            for p in nbr_pos[d]:
-                nbr_mask[d, int(p)] = True
-        q = QueryArrays(cand_bitmap=jnp.asarray(pack_bitmap(cand_dense)),
-                        nbr_mask=jnp.asarray(nbr_mask),
-                        n_query=jnp.int32(n))
-        qnbr_bits = np.zeros(N_PAD, np.uint64)
-        for d in range(n):
-            bits = np.uint64(0)
-            for p in nbr_pos[d]:
-                bits |= _bit(int(p))
-            qnbr_bits[d] = bits
-
-        table = seed_table if seed_table is not None \
-            else TableArrays.empty(v)
-        no_table = TableArrays.empty(v) if not self.use_pruning else None
-        stats = EngineStats()
-        stats.table_stats = None
-        embeddings: list[np.ndarray] = []
-        segments: dict[int, _Segment] = {}
-        store_buf: list[tuple[int, int, int, int, np.uint64]] = []
-        id_counter = 1
-        learning = self.use_pruning
-        next_seg = 0
-
-        # --- helpers ---------------------------------------------------
-        def new_segment(depth, frontier, used, phi, pseg, prow) -> _Segment:
-            nonlocal next_seg
-            seg = _Segment(next_seg, depth, frontier, used, phi, pseg, prow)
-            seg.init_state(w)
-            segments[next_seg] = seg
-            next_seg += 1
-            return seg
-
-        def flush_stores():
-            nonlocal table
-            if not store_buf or not learning:
-                store_buf.clear()
-                return
-            kpos = np.array([s[0] for s in store_buf], np.int32)
-            kv = np.array([s[1] for s in store_buf], np.int32)
-            phis = np.array([s[2] for s in store_buf], np.int32)
-            mus = np.array([s[3] for s in store_buf], np.int32)
-            masks = _words_from64(np.array([s[4] for s in store_buf],
-                                           np.uint64))
-            table = store_patterns(table, jnp.asarray(kpos), jnp.asarray(kv),
-                                   jnp.asarray(phis), jnp.asarray(mus),
-                                   jnp.asarray(masks),
-                                   jnp.ones(len(kpos), bool))
-            stats.patterns_stored += len(store_buf)
-            store_buf.clear()
-
-        def queue_store(seg: _Segment, row: int, gamma: np.uint64):
-            """Record the dead-end pattern of a resolved-dead row."""
-            if not learning or stats.aborted:
-                return
-            d = seg.depth
-            if d == 0:
-                return
-            key_pos = d - 1
-            key_v = int(seg.frontier[row, key_pos])
-            below = gamma & _below(key_pos)
-            if below:
-                mu_len = int(below).bit_length()   # highest set bit + 1
-            else:
-                mu_len = 0
-            phi_id = int(seg.phi[row, mu_len])
-            store_buf.append((key_pos, key_v, phi_id, mu_len, gamma))
-
-        # worklist of (seg_id, row, reported, gamma) resolutions
-        def resolve_rows(items: list[tuple[int, int, bool, np.uint64]]):
-            while items:
-                sid, row, reported, gamma = items.pop()
-                seg = segments[sid]
-                if seg.resolved[row]:
-                    continue
-                seg.resolved[row] = True
-                seg.n_unresolved -= 1
-                if not reported:
-                    queue_store(seg, row, gamma)
-                ps, pr = int(seg.parent_seg[row]), int(seg.parent_row[row])
-                if ps >= 0:
-                    pseg = segments[ps]
-                    if reported:
-                        pseg.reported[pr] = True
-                    else:
-                        pseg.gamma[pr] |= gamma
-                    pseg.outstanding[pr] -= 1
-                    if (pseg.outstanding[pr] == 0 and pseg.expanded[pr]
-                            and not _has_leftover(pseg, pr)):
-                        items.append(_finalize_row(pseg, pr))
-                if seg.n_unresolved == 0:
-                    del segments[sid]
-
-        def _has_leftover(seg: _Segment, row: int) -> bool:
-            return bool(seg.pending_leftover[row].any())
-
-        def _finalize_row(seg: _Segment, row: int
-                          ) -> tuple[int, int, bool, np.uint64]:
-            """All children of this row are resolved: Lemma 4 conversion."""
-            if seg.reported[row]:
-                return (seg.seg_id, row, True, np.uint64(0))
-            d = seg.depth
-            gamma = seg.gamma[row]
-            if gamma & _bit(d):
-                gamma = (gamma | qnbr_bits[d]) & _below(d)
-            return (seg.seg_id, row, False, gamma)
-
-        # --- root segment ----------------------------------------------
-        roots = cand_by_pos[0]
-        if len(roots) == 0:
-            stats.wall_time_s = 0.0
-            return MatchResult([], stats)
-        r = len(roots)
-        frontier = np.full((r, N_PAD), -1, np.int32)
-        frontier[:, 0] = roots
-        used = np.zeros((r, w), np.uint32)
-        used[np.arange(r), roots // 32] = (
-            np.uint32(1) << (roots.astype(np.uint32) % np.uint32(32)))
-        phi = np.zeros((r, N_PAD + 1), np.int32)
-        phi[:, 1] = np.arange(id_counter, id_counter + r)
-        id_counter += r
-        stats.rows_created += r
-        if n == 1:
-            for v0 in roots:
-                emb = np.empty(1, np.int32)
-                emb[order[0]] = v0
-                embeddings.append(emb)
-            if limit is not None:
-                embeddings = embeddings[:limit]
-            stats.found = len(embeddings)
-            stats.recursions = stats.rows_created
-            return MatchResult(embeddings, stats)
-        root_seg = new_segment(1, frontier, used, phi,
-                               np.full(r, -1, np.int32),
-                               np.zeros(r, np.int32))
-
-        # stack items: (seg_id, row_start, 'fresh' | 'leftover')
-        stack: list[tuple[int, int, str]] = []
-        for s in range(0, r, self.wave_size):
-            stack.append((root_seg.seg_id, s, "fresh"))
-        stack.reverse()
-
-        # --- main loop ---------------------------------------------------
-        while stack and not stats.aborted:
-            sid, start, kind = stack.pop()
-            if sid not in segments:
-                continue
-            seg = segments[sid]
-            rows = slice(start, min(start + self.wave_size,
-                                    len(seg.frontier)))
-            nrows = rows.stop - rows.start
-            if kind == "leftover":
-                active = seg.pending_leftover[rows].any(axis=1)
-                if not active.any():
-                    continue
-            flush_stores()
-            stats.waves += 1
-            f_pad = self.wave_size
-            fr = _pad(seg.frontier[rows], f_pad, -1)
-            us = _pad(seg.used[rows], f_pad, 0)
-            ph = _pad(seg.phi[rows], f_pad, 0)
-            valid = np.zeros(f_pad, bool)
-            valid[:nrows] = ~seg.resolved[rows]
-            depth = seg.depth
-            last_level = depth + 1 == n
-
-            if kind == "fresh":
-                res = expand_wave(
-                    self.g, q, table if no_table is None else no_table,
-                    jnp.asarray(fr), jnp.asarray(us), jnp.asarray(ph),
-                    jnp.asarray(valid), jnp.int32(depth), kpr=self.kpr)
-                refined_empty = np.asarray(res.refined_empty)[:nrows]
-                n_children = np.asarray(res.n_children)[:nrows]
-                n_leftover = np.asarray(res.n_leftover)[:nrows]
-                partial = _mask64(np.asarray(res.partial_mask))[:nrows]
-                child_v = np.asarray(res.child_v)[:nrows]
-                child_valid = np.asarray(res.child_valid)[:nrows]
-                leftover = np.asarray(res.leftover)[:nrows]
-                stats.deadend_prunes += int(np.asarray(res.n_pruned))
-                stats.injectivity_fails += int(np.asarray(res.n_inj))
-                seg.expanded[rows] = True
-                seg.gamma[rows] |= partial
-                seg.pending_leftover[rows] = leftover
-            else:
-                lo = _pad(seg.pending_leftover[rows], f_pad, 0)
-                res = extract_more(
-                    table if no_table is None else no_table,
-                    jnp.asarray(ph), jnp.int32(depth), jnp.asarray(lo),
-                    kpr=4 * self.kpr)
-                child_v = np.asarray(res[0])[:nrows]
-                child_valid = np.asarray(res[1])[:nrows]
-                leftover = np.asarray(res[2])[:nrows]
-                n_children = child_valid.sum(axis=1)
-                n_leftover = np.asarray(res[3])[:nrows]
-                seg.gamma[rows] |= _mask64(np.asarray(res[4]))[:nrows]
-                stats.deadend_prunes += int(np.asarray(res[5]))
-                refined_empty = np.zeros(nrows, bool)
-                seg.pending_leftover[rows] = leftover
-
-            # re-queue leftover before children (LIFO: children first)
-            if (n_leftover > 0).any():
-                stack.append((sid, start, "leftover"))
-
-            # ---- complete embeddings at the last level -------------------
-            if last_level:
-                emb_rows, emb_cols = np.nonzero(child_valid)
-                for i, j in zip(emb_rows.tolist(), emb_cols.tolist()):
-                    if limit is not None and stats.found >= limit:
-                        stats.aborted = True
-                        break
-                    mrow = seg.frontier[rows.start + i].copy()
-                    mrow[depth] = child_v[i, j]
-                    emb = np.empty(n, np.int32)
-                    emb[order] = mrow[:n]
-                    embeddings.append(emb)
-                    stats.found += 1
-                    seg.reported[rows.start + i] = True
-                if stats.aborted:
-                    break
-                n_children_eff = np.zeros_like(n_children)
-            else:
-                n_children_eff = n_children
-
-            seg.outstanding[rows] += n_children_eff
-
-            # ---- push child segment --------------------------------------
-            if not last_level and (n_children > 0).any():
-                cf, cu, cp, par, cvalid = assemble_children(
-                    jnp.asarray(fr), jnp.asarray(us), jnp.asarray(ph),
-                    jnp.asarray(_pad(child_v, f_pad, -1)),
-                    jnp.asarray(_pad(child_valid, f_pad, False)),
-                    jnp.int32(depth), jnp.int32(id_counter))
-                cvalid = np.asarray(cvalid)
-                sel = np.nonzero(cvalid)[0]
-                n_new = len(sel)
-                id_counter += n_new
-                stats.rows_created += n_new
-                if id_counter > _ID_LIMIT and learning:
-                    # id overflow: clear the table, stop learning (sound)
-                    table = TableArrays.empty(v)
-                    learning = False
-                cseg = new_segment(
-                    depth + 1,
-                    np.asarray(cf)[sel], np.asarray(cu)[sel],
-                    np.asarray(cp)[sel],
-                    np.full(n_new, sid, np.int32),
-                    (np.asarray(par)[sel] + rows.start).astype(np.int32))
-                for s in range(0, n_new, self.wave_size):
-                    stack.append((cseg.seg_id, s, "fresh"))
-
-            # ---- immediate resolutions -----------------------------------
-            items = []
-            for i in range(nrows):
-                row = rows.start + i
-                if seg.resolved[row]:
-                    continue
-                if refined_empty[i]:
-                    # Lemma 1: Γ = N(u_d) ∩ dom(M̂)
-                    gam = qnbr_bits[depth] & _below(depth)
-                    items.append((sid, row, False, gam))
-                elif (seg.outstanding[row] == 0 and seg.expanded[row]
-                      and not seg.pending_leftover[row].any()):
-                    if seg.reported[row]:
-                        items.append((sid, row, True, np.uint64(0)))
-                    else:
-                        items.append(_finalize_row(seg, row))
-            resolve_rows(items)
-            if max_rows is not None and stats.rows_created > max_rows:
-                stats.aborted = True
-
-        stats.recursions = stats.rows_created
-        stats.wall_time_s = _time.perf_counter() - _t0
-        self._table = table  # expose for distributed pattern merging
-        return MatchResult(embeddings, stats)
-
-
-def _pad(arr: np.ndarray, rows: int, fill) -> np.ndarray:
-    if len(arr) == rows:
-        return arr
-    out = np.full((rows,) + arr.shape[1:], fill, arr.dtype)
-    out[:len(arr)] = arr
-    return out
+        patterns from other shards — see core.distributed."""
+        qid = self.scheduler.submit(
+            query, limit=limit, cand=cand, order=order, max_rows=max_rows,
+            time_budget_s=time_budget_s, seed_table=seed_table,
+            keep_table=True)
+        self.scheduler.run()
+        res = self.scheduler.finished.pop(qid)
+        self.scheduler.poll()
+        self._table = self.scheduler.tables.pop(qid, None)
+        return res
 
 
 def match_vectorized(query: Graph, data: Graph, limit: int | None = 1000,

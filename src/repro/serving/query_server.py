@@ -1,11 +1,17 @@
-"""Batched subgraph-matching query serving.
+"""Batched subgraph-matching query serving on the shared-wave scheduler.
 
 The paper's evaluation protocol (10 000-query sets, enumeration capped at
 1000 embeddings, per-query time budget) as a service: queries are
-admitted into a bounded queue, executed on a per-data-graph engine pool
-(compiled programs are shared across queries — one engine instance per
-worker reuses its jitted wave step), with per-query timeouts, result
-caps, and cumulative statistics for SLO reporting (p50/p99 latency).
+admitted into the :class:`~repro.core.vectorized.WaveScheduler`'s bounded
+queue and executed *concurrently* — partial embeddings from many queries
+are packed into each fixed-shape wave, so one jitted device program
+serves the whole mixed batch with no idle gaps between queries
+(DESIGN.md §4). Per-query limits, recursion and time budgets evict
+aborted queries without disturbing their neighbors, and cumulative
+statistics feed SLO reporting (p50/p99 latency, wave occupancy).
+
+backend: "engine" (shared-wave JAX scheduler) or "sequential" (paper
+Algorithm 2 reference, one query at a time — the correctness oracle).
 """
 from __future__ import annotations
 
@@ -16,7 +22,7 @@ import numpy as np
 
 from ..core.backtrack import backtrack_deadend
 from ..core.graph import Graph
-from ..core.vectorized import WaveEngine
+from ..core.vectorized import WaveScheduler
 
 
 @dataclasses.dataclass
@@ -26,50 +32,122 @@ class QueryResult:
     embeddings: list
     latency_s: float
     recursions: int
-    timed_out: bool
+    # status taxonomy (identical for both backends):
+    #   "ok"      — enumeration ran to completion
+    #   "limit"   — stopped because the result cap was reached
+    #   "timeout" — aborted by the recursion or wall-clock budget
+    timed_out: bool              # True iff status == "timeout"
+    aborted: bool = False        # any early stop (limit OR budget)
+    status: str = "ok"
+
+
+def _status_of(stats, limit: int | None) -> str:
+    """Map SearchStats abort bookkeeping to the serving status taxonomy."""
+    if not stats.aborted:
+        return "ok"
+    reason = stats.abort_reason
+    if reason == "limit" or (reason is None and limit is not None
+                             and stats.found >= limit):
+        return "limit"
+    return "timeout"
 
 
 class QueryServer:
-    """Serve matching queries against one data graph.
-
-    backend: "engine" (JAX wave engine) or "sequential" (paper Algorithm 2
-    reference — fastest single-core path on this CPU container).
-    """
+    """Serve matching queries against one data graph."""
 
     def __init__(self, data: Graph, backend: str = "sequential",
-                 limit: int = 1000, time_budget_s: float = 10.0,
-                 wave_size: int = 256, kpr: int = 16):
+                 limit: int | None = 1000, time_budget_s: float = 10.0,
+                 wave_size: int = 256, kpr: int = 16, n_slots: int = 16,
+                 max_recursions: int | None = None, max_queue: int = 4096):
         self.data = data
         self.backend = backend
         self.limit = limit
         self.time_budget_s = time_budget_s
-        self.engine = (WaveEngine(data, wave_size=wave_size, kpr=kpr)
-                       if backend == "engine" else None)
+        self.max_recursions = max_recursions
+        self.scheduler = (WaveScheduler(data, n_slots=n_slots,
+                                        wave_size=wave_size, kpr=kpr,
+                                        max_queue=max_queue)
+                          if backend == "engine" else None)
         self.latencies: list[float] = []
+        self.n_timeouts = 0
+
+    # ------------------------------------------------------------------
+    def _wrap(self, query_id: int, res, latency_s: float) -> QueryResult:
+        status = _status_of(res.stats, self.limit)
+        qr = QueryResult(query_id=query_id, n_found=res.stats.found,
+                         embeddings=res.embeddings, latency_s=latency_s,
+                         recursions=res.stats.recursions,
+                         timed_out=status == "timeout",
+                         aborted=res.stats.aborted, status=status)
+        self.latencies.append(latency_s)
+        self.n_timeouts += qr.timed_out
+        return qr
 
     def submit(self, query_id: int, query: Graph) -> QueryResult:
-        t0 = time.perf_counter()
-        if self.backend == "engine":
-            res = self.engine.match(query, limit=self.limit)
-        else:
-            res = backtrack_deadend(query, self.data, limit=self.limit,
-                                    time_budget_s=self.time_budget_s)
-        dt = time.perf_counter() - t0
-        self.latencies.append(dt)
-        return QueryResult(query_id=query_id, n_found=res.stats.found,
-                           embeddings=res.embeddings, latency_s=dt,
-                           recursions=res.stats.recursions,
-                           timed_out=res.stats.aborted
-                           and res.stats.found < self.limit)
+        """Synchronous single-query submit (runs the query to completion)."""
+        return self.submit_batch([query], ids=[query_id])[0]
 
-    def submit_batch(self, queries: list[Graph]) -> list[QueryResult]:
-        return [self.submit(i, q) for i, q in enumerate(queries)]
+    def submit_batch(self, queries: list[Graph],
+                     ids: list[int] | None = None) -> list[QueryResult]:
+        """Run a batch of queries; on the engine backend all of them share
+        the scheduler's waves concurrently (continuous batching: as
+        queries finish, queued ones are admitted into their slots)."""
+        if ids is None:
+            ids = list(range(len(queries)))
+        if self.backend != "engine":
+            out = []
+            for qid, q in zip(ids, queries):
+                t0 = time.perf_counter()
+                res = backtrack_deadend(
+                    q, self.data, limit=self.limit,
+                    max_recursions=self.max_recursions,
+                    time_budget_s=self.time_budget_s)
+                out.append(self._wrap(qid, res, time.perf_counter() - t0))
+            return out
 
+        sched = self.scheduler
+        pending = list(zip(ids, queries))
+        t_submit: dict[int, float] = {}
+        ext_id: dict[int, int] = {}          # scheduler id -> external id
+        results: dict[int, QueryResult] = {}
+        next_i = 0
+
+        def drain_finished():
+            for sqid in sched.poll():
+                eid = ext_id.get(sqid)
+                if eid is None or sqid not in sched.finished:
+                    continue
+                res = sched.finished.pop(sqid)
+                results[eid] = self._wrap(
+                    eid, res, time.perf_counter() - t_submit[eid])
+
+        while len(results) < len(pending):
+            # bounded-queue backpressure: top the queue up, then step
+            while next_i < len(pending) and len(sched.queue) < sched.max_queue:
+                eid, q = pending[next_i]
+                t_submit[eid] = time.perf_counter()
+                ext_id[sched.submit(
+                    q, limit=self.limit,
+                    max_rows=self.max_recursions,
+                    time_budget_s=self.time_budget_s)] = eid
+                next_i += 1
+            if not sched.step() and next_i >= len(pending):
+                drain_finished()
+                break
+            drain_finished()
+        drain_finished()
+        return [results[eid] for eid, _ in pending]
+
+    # ------------------------------------------------------------------
     def slo_report(self) -> dict:
         lat = np.asarray(self.latencies)
         if len(lat) == 0:
             return {}
-        return {"n": len(lat),
-                "p50_ms": float(np.percentile(lat, 50) * 1e3),
-                "p99_ms": float(np.percentile(lat, 99) * 1e3),
-                "mean_ms": float(lat.mean() * 1e3)}
+        rep = {"n": len(lat),
+               "p50_ms": float(np.percentile(lat, 50) * 1e3),
+               "p99_ms": float(np.percentile(lat, 99) * 1e3),
+               "mean_ms": float(lat.mean() * 1e3),
+               "timeouts": int(self.n_timeouts)}
+        if self.scheduler is not None:
+            rep.update(self.scheduler.scheduler_stats())
+        return rep

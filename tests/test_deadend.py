@@ -2,7 +2,9 @@
 pattern representation (paper §4.3–4.4)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.backtrack import backtrack_deadend
 from repro.core.deadend import (DeadEndStats, NumericDeadEndTable,

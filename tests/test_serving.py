@@ -1,0 +1,160 @@
+"""Serving layer: mixed multi-query waves must enumerate exactly what the
+sequential oracle enumerates per query, budgets must evict cleanly, and
+timeout/abort status must be consistent across backends."""
+import numpy as np
+import pytest
+
+from repro.core.backtrack import backtrack_deadend
+from repro.core.vectorized import WaveScheduler
+from repro.data.graph_gen import er_labeled_graph, query_set, trap_graph
+from repro.serving.query_server import QueryServer
+
+
+def embset(embs):
+    return set(frozenset(enumerate(e.tolist())) for e in embs)
+
+
+@pytest.fixture(scope="module")
+def workload():
+    data = er_labeled_graph(35, 100, 3, seed=11)
+    queries = query_set(data, 4, 12, seed=5)
+    oracle = [backtrack_deadend(q, data, limit=None) for q in queries]
+    return data, queries, oracle
+
+
+def test_batch_matches_oracle_fewer_slots_than_queries(workload):
+    """Continuous admission: 12 queries through 4 slots, results exact."""
+    data, queries, oracle = workload
+    srv = QueryServer(data, backend="engine", limit=None, n_slots=4,
+                      wave_size=32, kpr=4)
+    results = srv.submit_batch(queries)
+    assert [r.query_id for r in results] == list(range(len(queries)))
+    for r, ref in zip(results, oracle):
+        assert embset(r.embeddings) == embset(ref.embeddings)
+        assert r.status == "ok" and not r.timed_out
+
+
+def test_64_concurrent_queries_share_one_wave_program():
+    """≥64 queries resident at once, mixed into shared fixed-shape waves,
+    each enumerating exactly the oracle's embedding set."""
+    data = er_labeled_graph(30, 80, 2, seed=2)
+    queries = query_set(data, 3, 64, seed=9)
+    srv = QueryServer(data, backend="engine", limit=None, n_slots=64,
+                      wave_size=128, kpr=4)
+    results = srv.submit_batch(queries)
+    for r, q in zip(results, queries):
+        ref = backtrack_deadend(q, data, limit=None)
+        assert embset(r.embeddings) == embset(ref.embeddings)
+    rep = srv.slo_report()
+    assert rep["peak_active"] == 64          # truly concurrent
+    # mixed waves: far fewer waves than a per-query serial schedule
+    assert rep["waves"] < sum(
+        backtrack_deadend(q, data, limit=None).stats.recursions
+        for q in queries)
+    assert rep["mean_occupancy"] > 0.0
+
+
+def test_batch_respects_limit(workload):
+    data, queries, oracle = workload
+    srv = QueryServer(data, backend="engine", limit=3, n_slots=4,
+                      wave_size=32, kpr=4)
+    results = srv.submit_batch(queries)
+    for r, ref in zip(results, oracle):
+        full = embset(ref.embeddings)
+        assert r.n_found == min(3, len(full))
+        assert embset(r.embeddings) <= full
+        if len(full) > 3:
+            assert r.status == "limit" and r.aborted and not r.timed_out
+
+
+@pytest.mark.parametrize("backend", ["sequential", "engine"])
+def test_timeout_status_consistent_across_backends(backend):
+    """A query killed by its recursion budget reports timed_out on both
+    backends; a limit-capped query does not."""
+    query, data = trap_graph(n_b=30, n_c=30, n_good=2, tail_len=2, seed=0)
+    srv = QueryServer(data, backend=backend, limit=1000,
+                      max_recursions=20, n_slots=2, wave_size=16, kpr=4)
+    r = srv.submit(0, query)
+    assert r.timed_out and r.aborted and r.status == "timeout"
+
+    srv2 = QueryServer(data, backend=backend, limit=1, n_slots=2,
+                       wave_size=16, kpr=4)
+    r2 = srv2.submit(0, query)
+    assert r2.n_found == 1
+    assert not r2.timed_out and r2.status == "limit"
+
+
+def test_eviction_does_not_disturb_neighbors(workload):
+    """One query aborted mid-flight (tiny recursion budget) must not
+    corrupt the other queries sharing its waves."""
+    data, queries, oracle = workload
+    srv = QueryServer(data, backend="engine", limit=None, n_slots=4,
+                      wave_size=32, kpr=4)
+    # run the doomed query and the healthy ones in one shared batch
+    sched = srv.scheduler
+    doomed = sched.submit(queries[0], limit=None, max_rows=1)
+    healthy = [sched.submit(q, limit=None) for q in queries]
+    sched.run()
+    d = sched.finished.pop(doomed)
+    assert d.stats.aborted and d.stats.abort_reason == "rows"
+    for sqid, ref in zip(healthy, oracle):
+        res = sched.finished.pop(sqid)
+        assert not res.stats.aborted
+        assert embset(res.embeddings) == embset(ref.embeddings)
+
+
+def test_time_budget_eviction():
+    """A wall-clock budget of ~0 must abort with status "timeout" while
+    keeping any partial results, on the engine backend."""
+    query, data = trap_graph(n_b=40, n_c=40, n_good=2, tail_len=2, seed=1)
+    srv = QueryServer(data, backend="engine", limit=None,
+                      time_budget_s=0.0, n_slots=2, wave_size=16, kpr=4)
+    r = srv.submit(0, query)
+    assert r.timed_out and r.status == "timeout"
+
+
+def test_scheduler_pruning_is_per_slot(workload):
+    """Slot-private tables: a learning query next to a non-learning one
+    must both stay exact, and only the learner stores patterns."""
+    data, queries, oracle = workload
+    sched = WaveScheduler(data, n_slots=2, wave_size=32, kpr=4)
+    a = sched.submit(queries[0], limit=None, use_pruning=True)
+    b = sched.submit(queries[1], limit=None, use_pruning=False)
+    sched.run()
+    ra, rb = sched.finished.pop(a), sched.finished.pop(b)
+    assert embset(ra.embeddings) == embset(oracle[0].embeddings)
+    assert embset(rb.embeddings) == embset(oracle[1].embeddings)
+    assert rb.stats.patterns_stored == 0 and rb.stats.deadend_prunes == 0
+
+
+def test_trivial_queries_in_batch(workload):
+    """Single-vertex and no-candidate queries flow through the batched
+    API without occupying scheduler slots."""
+    from repro.core.graph import Graph
+    data, queries, oracle = workload
+    single = Graph.from_edges(1, [], [int(data.labels[0])], data.n_labels)
+    impossible = Graph.from_edges(2, [(0, 1)], [7, 7], 8)
+    srv = QueryServer(data, backend="engine", limit=None, n_slots=2,
+                      wave_size=32, kpr=4)
+    results = srv.submit_batch([single, impossible, queries[0]])
+    assert results[0].n_found == int((data.labels == data.labels[0]).sum())
+    assert results[1].n_found == 0 and results[1].status == "ok"
+    assert embset(results[2].embeddings) == embset(oracle[0].embeddings)
+    # limit-capped trivial queries report "limit", same as the oracle
+    srv_cap = QueryServer(data, backend="engine", limit=1, n_slots=2,
+                          wave_size=32, kpr=4)
+    capped = srv_cap.submit(0, single)
+    assert capped.n_found == 1 and capped.status == "limit"
+    assert not capped.timed_out
+
+
+def test_slo_report_has_occupancy(workload):
+    data, queries, _ = workload
+    srv = QueryServer(data, backend="engine", limit=None, n_slots=4,
+                      wave_size=32, kpr=4)
+    srv.submit_batch(queries[:6])
+    rep = srv.slo_report()
+    for key in ("p50_ms", "p99_ms", "mean_occupancy", "steady_occupancy",
+                "waves", "peak_active"):
+        assert key in rep
+    assert 0.0 < rep["mean_occupancy"] <= 1.0
