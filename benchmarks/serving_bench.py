@@ -6,13 +6,17 @@ concurrently through the shared-wave scheduler (continuous batching,
 DESIGN.md §4). Tracks the serving-perf trajectory across PRs:
 
     queries/sec, mean + steady-state wave occupancy, prune rate,
-    p50/p99 latency, timeouts.
+    p50/p99 latency, timeouts, host-vs-device time split, and the
+    megastep depth the run used (so trajectories stay comparable when
+    the fusion depth changes between PRs).
 
     PYTHONPATH=src python -m benchmarks.serving_bench
+    PYTHONPATH=src python -m benchmarks.serving_bench --smoke   # CI
     PYTHONPATH=src python -m benchmarks.run --only serving
 """
 from __future__ import annotations
 
+import argparse
 import json
 import pathlib
 import sys
@@ -30,22 +34,41 @@ _OUT = pathlib.Path(__file__).resolve().parent.parent / "BENCH_serving.json"
 
 
 def run(csv_rows: list | None = None, budget_s: float = 90.0,
-        n_queries: int = N_QUERIES, out_path: pathlib.Path = _OUT) -> dict:
+        n_queries: int = N_QUERIES, out_path: pathlib.Path | None = _OUT,
+        smoke: bool = False) -> dict:
+    """``smoke=True`` shrinks every dimension to a seconds-scale CI run
+    and leaves the committed BENCH_serving.json untouched."""
     from repro.data.graph_gen import ba_labeled_graph, query_set
     from repro.serving.query_server import QueryServer
 
-    data = ba_labeled_graph(512, 3, 24, extra_edges=512, seed=0)
-    queries = query_set(data, QUERY_SIZE, n_queries, seed=7)
+    if smoke:
+        n_queries, query_size = 8, 4
+        n_slots, wave_size, kpr = 8, 64, 8
+        n_vertices, extra_edges = 128, 128
+        out_path = None
+    else:
+        query_size = QUERY_SIZE
+        n_slots, wave_size, kpr = N_SLOTS, WAVE_SIZE, KPR
+        n_vertices, extra_edges = 512, 512
+
+    data = ba_labeled_graph(n_vertices, 3, 24, extra_edges=extra_edges,
+                            seed=0)
+    queries = query_set(data, query_size, n_queries, seed=7)
+
+    def make_server(graph, **kw):
+        return QueryServer(graph, backend="engine",
+                           time_budget_s=TIME_BUDGET_S,
+                           wave_size=wave_size, kpr=kpr, n_slots=n_slots,
+                           **kw)
 
     # warm-up on a throwaway server with identical shapes: the jitted
     # wave programs are module-level, so the compile cost lands here and
-    # neither the timed run nor the reported SLO stats include it
-    QueryServer(data, backend="engine", limit=LIMIT,
-                time_budget_s=TIME_BUDGET_S, wave_size=WAVE_SIZE,
-                kpr=KPR, n_slots=N_SLOTS).submit_batch(queries[:1])
-    server = QueryServer(data, backend="engine", limit=LIMIT,
-                         time_budget_s=TIME_BUDGET_S, wave_size=WAVE_SIZE,
-                         kpr=KPR, n_slots=N_SLOTS)
+    # neither the timed run nor the reported SLO stats include it. The
+    # full batch is replayed so the warm-up reaches every program the
+    # timed run will dispatch (the adaptive scheduler only switches to
+    # the fused megastep after a few low-prune waves).
+    make_server(data, limit=LIMIT).submit_batch(queries)
+    server = make_server(data, limit=LIMIT)
     t0 = time.perf_counter()
     results = server.submit_batch(queries)
     wall = time.perf_counter() - t0
@@ -55,11 +78,12 @@ def run(csv_rows: list | None = None, budget_s: float = 90.0,
         "data_graph": {"n_vertices": data.n, "n_edges": data.n_edges,
                        "n_labels": data.n_labels},
         "n_queries": len(results),
-        "query_size": QUERY_SIZE,
-        "n_slots": N_SLOTS,
-        "wave_size": WAVE_SIZE,
-        "kpr": KPR,
+        "query_size": query_size,
+        "n_slots": n_slots,
+        "wave_size": wave_size,
+        "kpr": kpr,
         "limit": LIMIT,
+        "megastep_depth": rep["megastep_depth"],
         "wall_time_s": wall,
         "queries_per_sec": len(results) / wall,
         "total_embeddings": int(sum(r.n_found for r in results)),
@@ -74,21 +98,26 @@ def run(csv_rows: list | None = None, budget_s: float = 90.0,
         "deadend_prunes": rep["deadend_prunes"],
         "rows_created": rep["rows_created"],
         "prune_rate": rep["prune_rate"],
+        # host-vs-device split: dispatch = packing + async dispatch,
+        # device_sync = blocked materializing digests, host = digest
+        # processing. Their sum < wall because the double-buffered
+        # pipeline overlaps host work with in-flight device waves.
+        "dispatch_time_s": rep["dispatch_time_s"],
+        "device_sync_time_s": rep["device_sync_time_s"],
+        "host_time_s": rep["host_time_s"],
     }
-    # --- trap workload: 64 clients hammering the paper's Fig. 1 hard
+    # --- trap workload: clients hammering the paper's Fig. 1 hard
     # case — the regime where dead-end learning dominates, so the prune
     # rate is a meaningful trajectory metric (it is ~0 on uniform
     # random-walk traffic, matching the paper's easy-query ablations).
     from repro.data.graph_gen import trap_graph
-    tq, tg = trap_graph(n_b=60, n_c=60, n_good=2, tail_len=2, seed=0)
-    QueryServer(tg, backend="engine", limit=None,
-                time_budget_s=TIME_BUDGET_S, wave_size=WAVE_SIZE,
-                kpr=KPR, n_slots=N_SLOTS).submit_batch([tq])
-    tserver = QueryServer(tg, backend="engine", limit=None,
-                          time_budget_s=TIME_BUDGET_S, wave_size=WAVE_SIZE,
-                          kpr=KPR, n_slots=N_SLOTS)
+    nb = 12 if smoke else 60
+    n_trap = 4 if smoke else N_SLOTS
+    tq, tg = trap_graph(n_b=nb, n_c=nb, n_good=2, tail_len=2, seed=0)
+    make_server(tg, limit=None).submit_batch([tq])
+    tserver = make_server(tg, limit=None)
     t0 = time.perf_counter()
-    tres = tserver.submit_batch([tq] * N_SLOTS)
+    tres = tserver.submit_batch([tq] * n_trap)
     twall = time.perf_counter() - t0
     trep = tserver.slo_report()
     payload["trap_workload"] = {
@@ -101,12 +130,15 @@ def run(csv_rows: list | None = None, budget_s: float = 90.0,
         "deadend_prunes": trep["deadend_prunes"],
         "rows_created": trep["rows_created"],
         "prune_rate": trep["prune_rate"],
+        "device_sync_time_s": trep["device_sync_time_s"],
+        "host_time_s": trep["host_time_s"],
     }
 
-    out_path.write_text(json.dumps(payload, indent=2) + "\n")
+    if out_path is not None:
+        out_path.write_text(json.dumps(payload, indent=2) + "\n")
     if csv_rows is not None:
         csv_rows.append((
-            f"serving_q{QUERY_SIZE}x{len(results)}_s{N_SLOTS}",
+            f"serving_q{query_size}x{len(results)}_s{n_slots}",
             wall * 1e6 / len(results),
             f"qps={payload['queries_per_sec']:.1f};"
             f"occ={payload['mean_wave_occupancy']:.2f};"
@@ -114,7 +146,7 @@ def run(csv_rows: list | None = None, budget_s: float = 90.0,
             f"prune_rate={payload['prune_rate']:.2f}"))
         t = payload["trap_workload"]
         csv_rows.append((
-            f"serving_trap60x{t['n_queries']}",
+            f"serving_trap{nb}x{t['n_queries']}",
             t["wall_time_s"] * 1e6 / t["n_queries"],
             f"qps={t['queries_per_sec']:.1f};"
             f"occ={t['mean_wave_occupancy']:.2f};"
@@ -125,6 +157,11 @@ def run(csv_rows: list | None = None, budget_s: float = 90.0,
 if __name__ == "__main__":
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
                            / "src"))
-    payload = run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-size CI run; does not write BENCH_serving")
+    args = ap.parse_args()
+    payload = run(smoke=args.smoke)
     print(json.dumps(payload, indent=2))
-    print(f"# wrote {_OUT}", file=sys.stderr)
+    if not args.smoke:
+        print(f"# wrote {_OUT}", file=sys.stderr)

@@ -7,11 +7,32 @@ partitioning with pattern sharing.
     PYTHONPATH=src python examples/serve_queries.py [--n-queries 50]
 """
 import argparse
+import json
 import pathlib
 import sys
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
                        / "src"))
+
+_BENCH = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_serving.json"
+
+
+def _baseline_delta(rep: dict, n_served: int, wall_s: float) -> str:
+    """One glance-able line comparing this run's qps and latency tails
+    against the committed BENCH_serving.json trajectory baseline (the
+    configs differ, so deltas are a smoke signal, not a benchmark)."""
+    if not _BENCH.exists():
+        return "baseline: BENCH_serving.json not found — no delta"
+    base = json.loads(_BENCH.read_text())
+    qps = n_served / wall_s if wall_s > 0 else 0.0
+    dq = 100.0 * (qps / base["queries_per_sec"] - 1.0)
+    dp50 = 100.0 * (rep["p50_ms"] / base["p50_ms"] - 1.0)
+    dp99 = 100.0 * (rep["p99_ms"] / base["p99_ms"] - 1.0)
+    return (f"vs BENCH_serving.json baseline "
+            f"({base['queries_per_sec']:.1f} qps, "
+            f"p50 {base['p50_ms']:.0f}ms, p99 {base['p99_ms']:.0f}ms): "
+            f"qps {dq:+.0f}%  p50 {dp50:+.0f}%  p99 {dp99:+.0f}%")
 
 from repro.core.distributed import DistributedMatcher
 from repro.data.graph_gen import query_set, yeast_like_graph, trap_graph
@@ -34,25 +55,36 @@ def main():
           f"labels={data.n_labels}")
     queries = query_set(data, args.query_size, args.n_queries, seed=42)
 
+    # warm-up: compile the wave programs before taking timed traffic —
+    # a cold megastep compile would eat the per-query time budgets
+    QueryServer(data, backend=args.backend, limit=100,
+                time_budget_s=60.0, n_slots=args.n_slots,
+                wave_size=args.wave_size).submit_batch(queries[:4])
     server = QueryServer(data, backend=args.backend, limit=1000,
                          time_budget_s=2.0, n_slots=args.n_slots,
                          wave_size=args.wave_size)
+    import time
+    t0 = time.perf_counter()
     results = server.submit_batch(queries)
+    wall = time.perf_counter() - t0
     found = sum(r.n_found for r in results)
     dnf = sum(r.timed_out for r in results)
     capped = sum(r.status == "limit" for r in results)
     print(f"served {len(results)} queries: {found} embeddings total, "
-          f"{capped} hit the limit, {dnf} timed out")
+          f"{capped} hit the limit, {dnf} timed out "
+          f"({len(results) / wall:.1f} qps)")
     rep = server.slo_report()
     line = (f"SLO: p50={rep['p50_ms']:.1f}ms p99={rep['p99_ms']:.1f}ms "
             f"mean={rep['mean_ms']:.1f}ms")
     if args.backend == "engine":
         line += (f" | waves={rep['waves']} "
+                 f"megastep_depth={rep['megastep_depth']} "
                  f"occupancy={rep['mean_occupancy']:.2f} "
                  f"(steady {rep['steady_occupancy']:.2f}) "
                  f"peak_concurrent={rep['peak_active']} "
                  f"prune_rate={rep['prune_rate']:.2f}")
     print(line)
+    print(_baseline_delta(rep, len(results), wall))
 
     # distributed matching of one hard query with pattern sharing
     q, g = trap_graph(n_b=120, n_c=120, n_good=2, tail_len=2)

@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
 # Tier-1 verification in one invocation (see ROADMAP.md):
 #
-#     scripts/ci.sh               # run the full tier-1 suite
+#     scripts/ci.sh               # full tier-1 suite + serving smoke run
 #     scripts/ci.sh tests/test_serving.py -q   # pass-through args
+#                                              # (skips the smoke run)
 #
 # Optional dependencies (hypothesis, networkx) are skipped gracefully by
 # the suite when absent — see requirements.txt.
@@ -12,4 +13,8 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if [ "$#" -gt 0 ]; then
     exec python -m pytest -x -q "$@"
 fi
-exec python -m pytest -x -q
+python -m pytest -x -q
+# tiny-size serving benchmark smoke run: exercises the megastep + async
+# pipeline end to end (does not touch the committed BENCH_serving.json)
+python -m benchmarks.serving_bench --smoke >/dev/null
+echo "serving_bench --smoke: OK"

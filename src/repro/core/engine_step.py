@@ -60,13 +60,15 @@ class QueryBank(NamedTuple):
     cand_bitmap: jax.Array   # uint32 [S, N_PAD, W]
     nbr_mask: jax.Array      # bool [S, N_PAD, N_PAD]
     n_query: jax.Array       # int32 [S]
+    learn: jax.Array         # bool [S] — slot stores patterns in-loop
 
     @staticmethod
     def empty(n_slots: int, w: int) -> "QueryBank":
         return QueryBank(
             cand_bitmap=jnp.zeros((n_slots, N_PAD, w), jnp.uint32),
             nbr_mask=jnp.zeros((n_slots, N_PAD, N_PAD), bool),
-            n_query=jnp.zeros((n_slots,), jnp.int32))
+            n_query=jnp.zeros((n_slots,), jnp.int32),
+            learn=jnp.zeros((n_slots,), bool))
 
 
 class TableArrays(NamedTuple):
@@ -177,21 +179,90 @@ def _below_bits(d: jax.Array) -> jax.Array:
             ).sum(axis=-1, dtype=jnp.uint32)
 
 
+def _below_bits_rows(d: jax.Array) -> jax.Array:
+    """Positions strictly below d, rowwise: int32 [F] -> uint32 [F, MW]."""
+    idx = jnp.arange(MASK_WORDS * 32)
+    bits = idx[None, :] < d[:, None]                        # [F, MW*32]
+    weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    return (bits.reshape(-1, MASK_WORDS, 32).astype(jnp.uint32)
+            * weights).sum(axis=-1, dtype=jnp.uint32)
+
+
+def _pack_mask_rows(bits: jax.Array) -> jax.Array:
+    """bool [F, N_PAD] position sets -> packed uint32 [F, MASK_WORDS]."""
+    weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    return (bits.reshape(-1, MASK_WORDS, 32).astype(jnp.uint32)
+            * weights).sum(axis=-1, dtype=jnp.uint32)
+
+
+def _bitlen32(x: jax.Array) -> jax.Array:
+    """Highest set bit + 1 of a uint32 (0 for 0): bit-smear + popcount."""
+    x = x | (x >> 1)
+    x = x | (x >> 2)
+    x = x | (x >> 4)
+    x = x | (x >> 8)
+    x = x | (x >> 16)
+    return lax.population_count(x).astype(jnp.int32)
+
+
+def _mask_bitlen(words: jax.Array) -> jax.Array:
+    """Bit length of packed 64-bit masks, uint32 [F, MASK_WORDS] -> int32
+    [F] (the paper's μ: highest Γ position below the key + 1)."""
+    hi, lo = words[:, 1], words[:, 0]
+    return jnp.where(hi != 0, 32 + _bitlen32(hi), _bitlen32(lo))
+
+
+def _extract_topk_packed(live: jax.Array, kpr: int
+                         ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Extract the ``kpr`` lowest set bits per row of a packed bitmap.
+
+    Word-level replacement for the old dense ``_unpack_bits`` + cumsum +
+    vmapped-nonzero ranking, which materialized an O(F·V) boolean matrix
+    per wave. Each of the ``kpr`` steps isolates the lowest set bit via
+    first-nonzero-word + ``word & -word`` — O(kpr·F·W) word ops with no
+    dense unpack, and the packed leftovers fall out for free.
+
+    Returns (child_v int32 [F, kpr] ascending with -1 padding,
+             leftover uint32 [F, W], n_leftover int32 [F]).
+    """
+    f, w = live.shape
+    rows = jnp.arange(f)
+
+    def step(cur, _):
+        nz = cur != 0                                        # [F, W]
+        any_row = nz.any(axis=1)
+        first_w = jnp.argmax(nz, axis=1).astype(jnp.int32)   # [F]
+        word = cur[rows, first_w]                            # [F]
+        lsb = word & (jnp.uint32(0) - word)
+        bit_idx = lax.population_count(
+            lsb - jnp.uint32(1)).astype(jnp.int32)
+        child = jnp.where(any_row, first_w * 32 + bit_idx, -1)
+        cleared = word & (word - jnp.uint32(1))
+        cur = cur.at[rows, first_w].set(
+            jnp.where(any_row, cleared, word))
+        return cur, child
+
+    leftover, children = lax.scan(step, live, None, length=kpr)
+    return children.T, leftover, _popcount_rows(leftover)
+
+
 # ===================================================================
 # slot management: load one query (+ its table) into a bank slot
 # ===================================================================
 @jax.jit
 def load_slot(qb: QueryBank, tb: TableBank, slot: jax.Array,
               cand_bitmap: jax.Array, nbr_mask: jax.Array,
-              n_query: jax.Array, table: TableArrays
-              ) -> tuple[QueryBank, TableBank]:
+              n_query: jax.Array, table: TableArrays,
+              learn: jax.Array = True) -> tuple[QueryBank, TableBank]:
     """Install a query in bank slot ``slot`` (admission). ``table`` is the
     slot's initial dead-end table: empty, or seeded with transferable
-    patterns (see core.distributed)."""
+    patterns (see core.distributed). ``learn`` gates the megastep's
+    in-loop pattern stores for this slot."""
     qb2 = QueryBank(
         cand_bitmap=qb.cand_bitmap.at[slot].set(cand_bitmap),
         nbr_mask=qb.nbr_mask.at[slot].set(nbr_mask),
-        n_query=qb.n_query.at[slot].set(n_query))
+        n_query=qb.n_query.at[slot].set(n_query),
+        learn=qb.learn.at[slot].set(learn))
     tb2 = TableBank(
         phi=tb.phi.at[slot].set(table.phi),
         mu=tb.mu.at[slot].set(table.mu),
@@ -210,15 +281,30 @@ def read_table_slot(tb: TableBank, slot: int) -> TableArrays:
 # multi-query wave programs
 # ===================================================================
 def refine_eq2_mq(g: GraphArrays, qb: QueryBank, query_slot: jax.Array,
-                  frontier: jax.Array, depth: jax.Array) -> jax.Array:
+                  frontier: jax.Array, depth: jax.Array,
+                  backend: str = "jnp") -> jax.Array:
     """Eq. 2 candidate refinement for a mixed-query wave.
 
     C'(row) = cand[qid, depth] ∩ ⋂_{p < depth, p ~q depth} N(frontier[p]).
     ``query_slot`` and ``depth`` are int32 [F] lanes. Returns the packed
     candidate bitmap uint32 [F, W].
+
+    ``backend`` (static, from ``kernels.config``): "jnp" keeps the inline
+    gather + AND contraction that XLA fuses well on CPU; "pallas" /
+    "pallas_interpret" lower to the multi-row ``bitmap_refine`` kernel,
+    so one config switch moves the whole engine hot path onto the
+    compiled kernel (no silent interpret-mode fallback).
     """
-    f = frontier.shape[0]
     acc0 = qb.cand_bitmap[query_slot, depth]                 # [F, W]
+    if backend != "jnp":
+        from ..kernels.bitmap_refine import refine_bitmap_rows
+        pos = jnp.arange(N_PAD)
+        active = (qb.nbr_mask[query_slot, depth]
+                  & (pos[None, :] < depth[:, None]))         # [F, NP]
+        w = acc0.shape[1]
+        out = refine_bitmap_rows(g.adj_bitmap, acc0, frontier, active,
+                                 interpret=(backend == "pallas_interpret"))
+        return out[:, :w].astype(jnp.uint32)
 
     def body(p, acc):
         active = qb.nbr_mask[query_slot, depth, p] & (p < depth)  # [F]
@@ -261,29 +347,19 @@ def deadend_lookup_children_mq(tb: TableBank, phi: jax.Array,
     return prune, contrib
 
 
-@functools.partial(jax.jit, static_argnames=("kpr",))
-def expand_wave_mq(g: GraphArrays, qb: QueryBank, tb: TableBank,
-                   frontier: jax.Array, used: jax.Array, phi: jax.Array,
-                   row_valid: jax.Array, query_slot: jax.Array,
-                   depth: jax.Array, kpr: int = 16) -> WaveResultMQ:
-    """Expand every row of a mixed-query wave by one query position.
-
-    Args:
-      frontier:   int32 [F, N_PAD] mapped data vertex per order position
-                  (-1 where unmapped).
-      used:       uint32 [F, W] bitmap of data vertices used by the row.
-      phi:        int32 [F, N_PAD + 1] ancestor embedding ids (Φ array).
-      row_valid:  bool [F] padding mask.
-      query_slot: int32 [F] — owning query's bank slot, per row.
-      depth:      int32 [F] — number of mapped positions, per row.
-      kpr:        static per-row child cap for this pass (leftovers are
-                  re-expanded by the host in later passes).
-    """
+def _expand_rows(g: GraphArrays, qb: QueryBank, tb: TableBank,
+                 frontier: jax.Array, used: jax.Array, phi: jax.Array,
+                 row_valid: jax.Array, query_slot: jax.Array,
+                 depth: jax.Array, kpr: int,
+                 backend: str = "jnp") -> WaveResultMQ:
+    """One expansion pass over F mixed-query rows (shared by
+    :func:`expand_wave_mq` and the megastep loop body): Eq. 2 refinement,
+    injectivity Γ* terms, packed top-kpr child extraction, and the
+    Lemma 3 / Eq. 7 dead-end check on the extracted children."""
     f = frontier.shape[0]
-    v = g.adj_bitmap.shape[0]
-    w = g.adj_bitmap.shape[1]
 
-    refined = refine_eq2_mq(g, qb, query_slot, frontier, depth)  # [F, W]
+    refined = refine_eq2_mq(g, qb, query_slot, frontier, depth,
+                            backend)                         # [F, W]
     refined = jnp.where(row_valid[:, None], refined, jnp.uint32(0))
     refined_empty = (_popcount_rows(refined) == 0) & row_valid
 
@@ -308,19 +384,9 @@ def expand_wave_mq(g: GraphArrays, qb: QueryBank, tb: TableBank,
         0, N_PAD, inj_body,
         jnp.zeros((f, MASK_WORDS), jnp.uint32))
 
-    # ---- extract candidate children (per-row cap) -----------------------
+    # ---- extract candidate children (per-row cap, packed ranking) -------
     live = refined & ~used                                   # [F, W]
-    live_bits = _unpack_bits(live, v)                        # [F, V]
-    rank = jnp.cumsum(live_bits, axis=1)                     # [F, V]
-    take_bits = live_bits & (rank <= kpr)
-    left_bits = live_bits & (rank > kpr)
-    n_leftover = left_bits.sum(axis=1).astype(jnp.int32)
-
-    def row_nonzero(row):
-        return jnp.nonzero(row, size=kpr, fill_value=-1)[0]
-
-    child_v = jax.vmap(row_nonzero)(take_bits).astype(jnp.int32)
-    leftover = _pack_bits(left_bits, w)
+    child_v, leftover, n_leftover = _extract_topk_packed(live, kpr)
 
     # ---- dead-end pruning on extracted children (Lemma 3 / Eq. 7) -------
     # Perf iteration 2 (see EXPERIMENTS.md): checking only extracted
@@ -346,6 +412,30 @@ def expand_wave_mq(g: GraphArrays, qb: QueryBank, tb: TableBank,
     )
 
 
+@functools.partial(jax.jit, static_argnames=("kpr", "backend"))
+def expand_wave_mq(g: GraphArrays, qb: QueryBank, tb: TableBank,
+                   frontier: jax.Array, used: jax.Array, phi: jax.Array,
+                   row_valid: jax.Array, query_slot: jax.Array,
+                   depth: jax.Array, kpr: int = 16,
+                   backend: str = "jnp") -> WaveResultMQ:
+    """Expand every row of a mixed-query wave by one query position.
+
+    Args:
+      frontier:   int32 [F, N_PAD] mapped data vertex per order position
+                  (-1 where unmapped).
+      used:       uint32 [F, W] bitmap of data vertices used by the row.
+      phi:        int32 [F, N_PAD + 1] ancestor embedding ids (Φ array).
+      row_valid:  bool [F] padding mask.
+      query_slot: int32 [F] — owning query's bank slot, per row.
+      depth:      int32 [F] — number of mapped positions, per row.
+      kpr:        static per-row child cap for this pass (leftovers are
+                  re-expanded by the host in later passes).
+      backend:    static kernel backend for the Eq. 2 contraction.
+    """
+    return _expand_rows(g, qb, tb, frontier, used, phi, row_valid,
+                        query_slot, depth, kpr, backend)
+
+
 @functools.partial(jax.jit, static_argnames=("kpr",))
 def extract_more_mq(tb: TableBank, phi: jax.Array, query_slot: jax.Array,
                     depth: jax.Array, leftover: jax.Array, kpr: int = 64
@@ -360,24 +450,12 @@ def extract_more_mq(tb: TableBank, phi: jax.Array, query_slot: jax.Array,
     Returns (child_v, child_valid, new_leftover, n_leftover,
              partial_mask, n_pruned[F]).
     """
-    f, w = leftover.shape
-    v_pad = w * 32
-    bits = _unpack_bits(leftover, v_pad)
-    rank = jnp.cumsum(bits, axis=1)
-    take_bits = bits & (rank <= kpr)
-    left_bits = bits & (rank > kpr)
-
-    def row_nonzero(row):
-        return jnp.nonzero(row, size=kpr, fill_value=-1)[0]
-
-    child_v = jax.vmap(row_nonzero)(take_bits).astype(jnp.int32)
+    child_v, new_leftover, n_leftover = _extract_topk_packed(leftover, kpr)
     prune, prune_mask = deadend_lookup_children_mq(
         tb, phi, query_slot, depth, child_v)
     child_valid = (child_v >= 0) & ~prune
     return (jnp.where(child_valid, child_v, -1), child_valid,
-            _pack_bits(left_bits, w),
-            left_bits.sum(axis=1).astype(jnp.int32),
-            prune_mask, prune.sum(axis=1))
+            new_leftover, n_leftover, prune_mask, prune.sum(axis=1))
 
 
 @jax.jit
@@ -444,6 +522,246 @@ def store_patterns_mq(tb: TableBank, query_slot: jax.Array,
 
 
 # ===================================================================
+# fused multi-step megastep (DESIGN.md §2 "megastep & async pipeline")
+# ===================================================================
+class MegaResult(NamedTuple):
+    """Digest of one K-depth megastep.
+
+    The ring buffer rows [0, F) are the host's input wave; rows
+    [F, tail) were created in-loop. Rows [0, head) were expanded
+    in-loop; rows [head, tail) ran out of depth/capacity budget and are
+    returned *pending* — the host re-packs them into fresh segments, so
+    no work is ever lost to an overflow. All per-row lanes are indexed
+    by ring position and are zero for rows never expanded.
+    """
+    tb: TableBank                # updated (host flush + in-loop stores)
+    buf_frontier: jax.Array      # int32 [C, N_PAD]
+    buf_used: jax.Array          # uint32 [C, W]
+    buf_phi: jax.Array           # int32 [C, N_PAD + 1]
+    buf_slot: jax.Array          # int32 [C]
+    buf_depth: jax.Array         # int32 [C]
+    buf_parent: jax.Array        # int32 [C] ring index of parent (-1: input)
+    buf_valid: jax.Array         # bool [C]
+    head: jax.Array              # int32 — rows [0, head) were expanded
+    tail: jax.Array              # int32 — rows [head, tail) pending
+    refined_empty: jax.Array     # bool [C] Lemma-1 dead (Eq. 2 empty)
+    n_children: jax.Array        # int32 [C] surviving children appended
+    n_leftover: jax.Array        # int32 [C]
+    leftover: jax.Array          # uint32 [C, W]
+    partial_mask: jax.Array      # uint32 [C, MASK_WORDS] inj+prune Γ* terms
+    n_pruned: jax.Array          # int32 [C]
+    n_inj: jax.Array             # int32 [C]
+    n_emb_row: jax.Array         # int32 [C] embeddings emitted by the row
+    dev_stored: jax.Array        # bool [C] Lemma-1 pattern stored in-loop
+    emb_frontier: jax.Array      # int32 [emb_cap, N_PAD] found embeddings
+    emb_slot: jax.Array          # int32 [emb_cap]
+    n_emb: jax.Array             # int32
+    n_ids: jax.Array             # int32 fresh embedding ids consumed
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kpr", "k_depth", "capacity", "emb_cap", "backend"))
+def run_megastep_mq(g: GraphArrays, qb: QueryBank, tb: TableBank,
+                    frontier: jax.Array, used: jax.Array, phi: jax.Array,
+                    row_valid: jax.Array, query_slot: jax.Array,
+                    depth: jax.Array,
+                    st_slot: jax.Array, st_kpos: jax.Array,
+                    st_kv: jax.Array, st_phi: jax.Array, st_mu: jax.Array,
+                    st_mask: jax.Array, st_valid: jax.Array,
+                    id_base: jax.Array, learn_enabled: jax.Array,
+                    kpr: int = 8, k_depth: int = 4, capacity: int = 1024,
+                    emb_cap: int = 512, backend: str = "jnp") -> MegaResult:
+    """Fused expand → assemble → pattern-store over up to ``k_depth``
+    consecutive depth-steps, one host round-trip.
+
+    A device-resident ring buffer holds the frontier/used/phi/slot/depth
+    lanes of every live row. Each ``lax.while_loop`` iteration pops one
+    F-row chunk off the head, expands it (`_expand_rows`), assembles the
+    surviving non-last-level children directly at the tail, emits
+    last-level children into an embedding buffer, and — for rows whose
+    Eq. 2 candidate set came back empty — scatters their Lemma-1
+    dead-end pattern ``(φ, μ, Γ = N(u_d) ∩ dom(M̂))`` straight into Δ,
+    so later iterations of the *same* dispatch already prune on it.
+    The host's batched pattern flush (``st_*``, fixed-length padded with
+    a validity lane) is applied before the first iteration, replacing
+    the separate ``store_patterns_mq`` dispatch of the single-step path.
+
+    The loop stops when the queue drains, ``k_depth`` chunks were
+    expanded, or a conservative worst-case bound (``F·kpr`` appends /
+    embeddings per chunk) could overflow the ring or embedding buffer;
+    everything still pending is returned in the digest. Fresh embedding
+    ids are drawn from ``id_base``; the host reserves the worst case
+    (``capacity - F``) so a later dispatch can be issued before this
+    digest is read (async double-buffering).
+
+    deep dive: Lemma-4 *aggregated* patterns still resolve on the host
+    (they need the row's whole subtree), riding the next dispatch via
+    the fused flush — only the immediate Lemma-1 stores move in-loop.
+    """
+    f_step, w = used.shape
+    c = capacity
+    assert c >= f_step * (kpr + 1), "ring cannot hold one chunk's children"
+    assert emb_cap >= f_step * kpr, "emb buffer cannot hold one chunk"
+
+    # ---- host-batched pattern stores ride the dispatch -----------------
+    tb = store_patterns_mq(tb, st_slot, st_kpos, st_kv, st_phi, st_mu,
+                           st_mask, st_valid)
+
+    buf_frontier = jnp.full((c, N_PAD), -1, jnp.int32).at[:f_step].set(
+        frontier)
+    buf_used = jnp.zeros((c, w), jnp.uint32).at[:f_step].set(used)
+    buf_phi = jnp.zeros((c, N_PAD + 1), jnp.int32).at[:f_step].set(phi)
+    buf_slot = jnp.zeros((c,), jnp.int32).at[:f_step].set(query_slot)
+    buf_depth = jnp.zeros((c,), jnp.int32).at[:f_step].set(depth)
+    buf_parent = jnp.full((c,), -1, jnp.int32)
+    buf_valid = jnp.zeros((c,), bool).at[:f_step].set(row_valid)
+
+    zi = jnp.zeros((c,), jnp.int32)
+    lanes0 = dict(
+        refined_empty=jnp.zeros((c,), bool), n_children=zi,
+        n_leftover=zi, leftover=jnp.zeros((c, w), jnp.uint32),
+        partial_mask=jnp.zeros((c, MASK_WORDS), jnp.uint32),
+        n_pruned=zi, n_inj=zi, n_emb_row=zi,
+        dev_stored=jnp.zeros((c,), bool))
+
+    state = dict(
+        tb=tb, buf_frontier=buf_frontier, buf_used=buf_used,
+        buf_phi=buf_phi, buf_slot=buf_slot, buf_depth=buf_depth,
+        buf_parent=buf_parent, buf_valid=buf_valid,
+        head=jnp.int32(0), tail=jnp.int32(f_step), it=jnp.int32(0),
+        emb_frontier=jnp.full((emb_cap, N_PAD), -1, jnp.int32),
+        emb_slot=jnp.zeros((emb_cap,), jnp.int32),
+        n_emb=jnp.int32(0), id_ctr=jnp.asarray(id_base, jnp.int32),
+        **lanes0)
+
+    def cond(s):
+        return ((s["head"] < s["tail"]) & (s["it"] < k_depth)
+                & (s["tail"] + f_step * kpr <= c)
+                & (s["n_emb"] + f_step * kpr <= emb_cap))
+
+    def body(s):
+        head, tail = s["head"], s["tail"]
+        cf = lax.dynamic_slice_in_dim(s["buf_frontier"], head, f_step)
+        cu = lax.dynamic_slice_in_dim(s["buf_used"], head, f_step)
+        cp = lax.dynamic_slice_in_dim(s["buf_phi"], head, f_step)
+        slot_c = lax.dynamic_slice_in_dim(s["buf_slot"], head, f_step)
+        depth_c = lax.dynamic_slice_in_dim(s["buf_depth"], head, f_step)
+        in_chunk = (jnp.arange(f_step) + head) < tail
+        valid_c = in_chunk & lax.dynamic_slice_in_dim(
+            s["buf_valid"], head, f_step)
+
+        res = _expand_rows(g, qb, s["tb"], cf, cu, cp, valid_c, slot_c,
+                           depth_c, kpr, backend)
+
+        is_last = depth_c + 1 == qb.n_query[slot_c]          # [F]
+
+        # ---- materialize all surviving children (flat) -----------------
+        parent_local = jnp.repeat(jnp.arange(f_step, dtype=jnp.int32), kpr)
+        flat_v = res.child_v.reshape(-1)
+        cvalid_flat = res.child_valid.reshape(-1)
+        d_par = depth_c[parent_local]
+        pos = jnp.arange(N_PAD)
+        cf2 = cf[parent_local]
+        cf2 = jnp.where((pos[None, :] == d_par[:, None])
+                        & cvalid_flat[:, None], flat_v[:, None], cf2)
+        vv = flat_v.clip(0)
+        word = (vv // 32).astype(jnp.int32)
+        bit = jnp.uint32(1) << (vv % 32).astype(jnp.uint32)
+        cu2 = cu[parent_local]
+        add = jnp.zeros_like(cu2).at[
+            jnp.arange(cu2.shape[0]), word].set(
+                jnp.where(cvalid_flat, bit, jnp.uint32(0)))
+        cu2 = cu2 | add
+
+        # ---- embeddings: last-level children go to the emb buffer ------
+        emb_valid = cvalid_flat & is_last[parent_local]
+        emb_off = jnp.cumsum(emb_valid.astype(jnp.int32)) - 1
+        emb_idx = jnp.where(emb_valid, s["n_emb"] + emb_off, emb_cap)
+        emb_frontier = s["emb_frontier"].at[emb_idx].set(cf2, mode="drop")
+        emb_slot = s["emb_slot"].at[emb_idx].set(
+            slot_c[parent_local], mode="drop")
+        n_emb_new = emb_valid.sum().astype(jnp.int32)
+        n_emb_row_c = (res.child_valid
+                       & is_last[:, None]).sum(axis=1).astype(jnp.int32)
+
+        # ---- append non-last children at the tail ----------------------
+        app_valid = cvalid_flat & ~is_last[parent_local]
+        app_off = jnp.cumsum(app_valid.astype(jnp.int32)) - 1
+        app_idx = jnp.where(app_valid, tail + app_off, c)
+        new_ids = s["id_ctr"] + app_off
+        pos_phi = jnp.arange(N_PAD + 1)
+        cp2 = cp[parent_local]
+        cp2 = jnp.where((pos_phi[None, :] == d_par[:, None] + 1)
+                        & app_valid[:, None], new_ids[:, None], cp2)
+        n_new = app_valid.sum().astype(jnp.int32)
+        bf = s["buf_frontier"].at[app_idx].set(cf2, mode="drop")
+        bu = s["buf_used"].at[app_idx].set(cu2, mode="drop")
+        bp = s["buf_phi"].at[app_idx].set(cp2, mode="drop")
+        bs = s["buf_slot"].at[app_idx].set(
+            slot_c[parent_local], mode="drop")
+        bd = s["buf_depth"].at[app_idx].set(d_par + 1, mode="drop")
+        bpar = s["buf_parent"].at[app_idx].set(
+            head + parent_local, mode="drop")
+        bv = s["buf_valid"].at[app_idx].set(True, mode="drop")
+        n_child_c = (res.child_valid
+                     & ~is_last[:, None]).sum(axis=1).astype(jnp.int32)
+
+        # ---- in-loop Lemma-1 stores (Eq. 2 came back empty) ------------
+        do_store = (res.refined_empty & (depth_c >= 1)
+                    & qb.learn[slot_c] & learn_enabled)
+        qnbr = _pack_mask_rows(qb.nbr_mask[slot_c, depth_c])
+        gamma_w = qnbr & _below_bits_rows(depth_c)           # [F, MW]
+        key_pos = (depth_c - 1).clip(0)
+        key_v = jnp.take_along_axis(cf, key_pos[:, None], axis=1)[:, 0]
+        mu = _mask_bitlen(gamma_w & _below_bits_rows(key_pos))
+        phi_id = jnp.take_along_axis(cp, mu[:, None], axis=1)[:, 0]
+        tb2 = store_patterns_mq(s["tb"], slot_c, key_pos, key_v, phi_id,
+                                mu, gamma_w, do_store)
+
+        # ---- digest lanes for this chunk -------------------------------
+        def put(lane, vals):
+            return lax.dynamic_update_slice_in_dim(lane, vals, head, 0)
+
+        msk = valid_c
+
+        def m1(x):
+            return jnp.where(msk, x, jnp.zeros_like(x))
+
+        def m2(x):
+            return jnp.where(msk[:, None], x, jnp.zeros_like(x))
+
+        return dict(
+            tb=tb2, buf_frontier=bf, buf_used=bu, buf_phi=bp,
+            buf_slot=bs, buf_depth=bd, buf_parent=bpar, buf_valid=bv,
+            head=jnp.minimum(head + f_step, tail), tail=tail + n_new,
+            it=s["it"] + 1, emb_frontier=emb_frontier, emb_slot=emb_slot,
+            n_emb=s["n_emb"] + n_emb_new, id_ctr=s["id_ctr"] + n_new,
+            refined_empty=put(s["refined_empty"], res.refined_empty),
+            n_children=put(s["n_children"], m1(n_child_c)),
+            n_leftover=put(s["n_leftover"], m1(res.n_leftover)),
+            leftover=put(s["leftover"], m2(res.leftover)),
+            partial_mask=put(s["partial_mask"], m2(res.partial_mask)),
+            n_pruned=put(s["n_pruned"], m1(res.n_pruned)),
+            n_inj=put(s["n_inj"], m1(res.n_inj)),
+            n_emb_row=put(s["n_emb_row"], m1(n_emb_row_c)),
+            dev_stored=put(s["dev_stored"], m1(do_store)))
+
+    s = lax.while_loop(cond, body, state)
+    return MegaResult(
+        tb=s["tb"], buf_frontier=s["buf_frontier"], buf_used=s["buf_used"],
+        buf_phi=s["buf_phi"], buf_slot=s["buf_slot"],
+        buf_depth=s["buf_depth"], buf_parent=s["buf_parent"],
+        buf_valid=s["buf_valid"], head=s["head"], tail=s["tail"],
+        refined_empty=s["refined_empty"], n_children=s["n_children"],
+        n_leftover=s["n_leftover"], leftover=s["leftover"],
+        partial_mask=s["partial_mask"], n_pruned=s["n_pruned"],
+        n_inj=s["n_inj"], n_emb_row=s["n_emb_row"],
+        dev_stored=s["dev_stored"], emb_frontier=s["emb_frontier"],
+        emb_slot=s["emb_slot"], n_emb=s["n_emb"],
+        n_ids=s["id_ctr"] - jnp.asarray(id_base, jnp.int32))
+
+
+# ===================================================================
 # single-query wrappers (S == 1) — kept for the launch dry-run cells
 # and the distributed pattern merge, which operate on one query
 # ===================================================================
@@ -455,7 +773,8 @@ def _tbank_of(t: TableArrays) -> TableBank:
 def _bank_of(q: QueryArrays, t: TableArrays) -> tuple[QueryBank, TableBank]:
     qb = QueryBank(cand_bitmap=q.cand_bitmap[None],
                    nbr_mask=q.nbr_mask[None],
-                   n_query=jnp.asarray(q.n_query)[None])
+                   n_query=jnp.asarray(q.n_query)[None],
+                   learn=jnp.ones((1,), bool))
     return qb, _tbank_of(t)
 
 

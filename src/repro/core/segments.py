@@ -68,6 +68,7 @@ class Segment:
     expanded: np.ndarray | None = None      # bool [R] first pass done
     pending_leftover: np.ndarray | None = None  # uint32 [R, W]
     resolved: np.ndarray | None = None      # bool [R]
+    stored: np.ndarray | None = None        # bool [R] pattern already in Δ
     n_unresolved: int = 0
 
     def init_state(self, w: int) -> None:
@@ -78,6 +79,10 @@ class Segment:
         self.expanded = np.zeros(r, bool)
         self.pending_leftover = np.zeros((r, w), np.uint32)
         self.resolved = np.zeros(r, bool)
+        # True for rows whose Lemma-1 pattern the megastep already
+        # scattered into the device table in-loop — the host resolution
+        # must not queue a duplicate store for them.
+        self.stored = np.zeros(r, bool)
         self.n_unresolved = r
 
 
@@ -170,8 +175,17 @@ class QueryState:
 
     # -- Lemma-4 resolution bookkeeping --------------------------------
     def queue_store(self, seg: Segment, row: int, gamma: np.uint64) -> None:
-        """Record the dead-end pattern of a resolved-dead row."""
+        """Record the dead-end pattern of a resolved-dead row.
+
+        ``stats.patterns_stored`` counts at queue time (patterns
+        *learned*): the actual device scatter is batched across waves
+        and fused into the megastep dispatch, so flush time no longer
+        maps 1:1 to a wave. Rows the megastep already stored in-loop
+        (``seg.stored``) are skipped — their pattern is in Δ.
+        """
         if not self.learn or self.stats.aborted:
+            return
+        if seg.stored[row]:
             return
         d = seg.depth
         if d == 0:
@@ -185,6 +199,7 @@ class QueryState:
             mu_len = 0
         phi_id = int(seg.phi[row, mu_len])
         self.store_buf.append((key_pos, key_v, phi_id, mu_len, gamma))
+        self.stats.patterns_stored += 1
 
     def has_leftover(self, seg: Segment, row: int) -> bool:
         return bool(seg.pending_leftover[row].any())

@@ -3,11 +3,24 @@
 Continuous multi-query wave batching (DESIGN.md §2): many concurrent
 queries are admitted into bank *slots*; every wave is packed with ready
 segment rows from whichever queries have work, so one fixed-shape jitted
-device program (``engine_step.expand_wave_mq``) serves mixed traffic with
-no idle gaps between queries. The per-query DFS stacks and Lemma-4
-resolution bookkeeping live in ``segments.py``; all dense work — Eq. 2
-refinement, injectivity, dead-end lookup, child extraction, pattern
-scatter — runs in the jitted device programs of ``engine_step``.
+device program serves mixed traffic with no idle gaps between queries.
+The per-query DFS stacks and Lemma-4 resolution bookkeeping live in
+``segments.py``; all dense work — Eq. 2 refinement, injectivity,
+dead-end lookup, child extraction, pattern scatter — runs in the jitted
+device programs of ``engine_step``.
+
+Megastep & async pipeline (DESIGN.md §2): with ``megastep_depth > 1``
+each packed wave is dispatched as one fused ``run_megastep_mq`` program
+that executes up to K consecutive depth-steps on a device-resident ring
+buffer — child assembly, dead-end lookups, embedding emission, and the
+batched pattern flush all happen in-loop, and only a compact digest
+returns to the host. ``step()`` is double-buffered: megastep *i+1* is
+dispatched (JAX async dispatch, nothing materialized) *before* megastep
+*i*'s digest is read, so host bookkeeping overlaps device compute
+instead of serializing on ~14 per-wave ``np.asarray`` syncs as the
+single-step path did. ``megastep_depth == 1`` keeps the synchronous
+single-step path (`expand_wave_mq` + host assembly) as the oracle
+reference schedule.
 
 Scheduling policy: admission fills free slots from a bounded FIFO queue;
 wave packing round-robins over active queries, splitting segment slices
@@ -16,8 +29,10 @@ abort a query and evict its segments without touching its neighbors.
 
 Learning happens *across* waves: patterns extracted from failures in
 earlier-expanded subtrees prune later waves of the same query (tables are
-slot-private, so queries never see each other's patterns). Matching is
-exact for any schedule because stored patterns are true dead-ends.
+slot-private, so queries never see each other's patterns), and the
+megastep additionally stores Lemma-1 patterns *inside* the loop, so they
+prune later depth-steps of the same dispatch. Matching is exact for any
+schedule because stored patterns are true dead-ends.
 
 :class:`WaveEngine` is the single-query facade (one slot) kept for the
 sequential-style API and the distributed matcher.
@@ -31,11 +46,13 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels.config import get_backend
 from .backtrack import MatchResult, _prepare
-from .engine_step import (MASK_WORDS, N_PAD, GraphArrays, QueryBank,
-                          TableArrays, TableBank, assemble_children_mq,
-                          expand_wave_mq, extract_more_mq, load_slot,
-                          read_table_slot, store_patterns_mq)
+from .engine_step import (MASK_WORDS, N_PAD, GraphArrays, MegaResult,
+                          QueryBank, TableArrays, TableBank,
+                          assemble_children_mq, expand_wave_mq,
+                          extract_more_mq, load_slot, read_table_slot,
+                          run_megastep_mq, store_patterns_mq)
 from .graph import Graph, pack_bitmap
 from .segments import (EngineStats, QueryState, Segment, SegmentPool,
                        WorkItem, below, bit_of, mask64, words_from64)
@@ -67,6 +84,24 @@ class _Request:
     t_submit: float
 
 
+@dataclasses.dataclass
+class _Inflight:
+    """A dispatched-but-unread device wave (the pipeline's depth-1 slot).
+
+    ``res`` holds unmaterialized device arrays; reading any of them
+    blocks until the dispatch finishes, which the scheduler postpones
+    until the *next* wave is already on its way.
+    """
+    kind: str                      # "mega" | "leftover"
+    res: object                    # MegaResult | extract_more_mq tuple
+    metas: list                    # [(q, seg, s, e, woff, k)]
+    slot_map: dict                 # slot -> QueryState at dispatch time
+    fr: np.ndarray | None = None   # leftover kind: packed inputs for
+    us: np.ndarray | None = None   # host-side child assembly
+    ph: np.ndarray | None = None
+    depth_v: np.ndarray | None = None
+
+
 class WaveScheduler:
     """Continuous multi-query matching over one data graph.
 
@@ -76,23 +111,55 @@ class WaveScheduler:
         qid = sched.submit(query_graph, limit=1000)
         sched.run()
         res = sched.finished.pop(qid)          # MatchResult
+
+    ``megastep_depth`` — K consecutive depth-steps fused into one device
+    dispatch (1 = the synchronous single-step reference schedule).
+    ``store_flush_min`` — single-step path only: host-queued pattern
+    stores are batched across waves until this many are pending (the
+    megastep path fuses the flush into every dispatch instead).
     """
 
     def __init__(self, data: Graph, n_slots: int = 8, wave_size: int = 512,
                  kpr: int = 16, use_pruning: bool = True,
-                 max_queue: int = 4096):
+                 max_queue: int = 4096, megastep_depth: int = 6,
+                 store_flush_min: int = 16, store_pad: int = 256,
+                 adaptive_prune_threshold: float = 0.05):
         self.data = data
         self.n_slots = int(n_slots)
         self.wave_size = int(wave_size)
         self.kpr = int(kpr)
         self.use_pruning = use_pruning
         self.max_queue = int(max_queue)
+        self.megastep_depth = int(megastep_depth)
+        self.store_flush_min = int(store_flush_min)
+        self.store_pad = int(store_pad)
+        # adaptive depth: a per-wave prune-rate EMA decides between the
+        # fused K-deep megastep (cheap traffic: latency hiding wins) and
+        # the synchronous single-step schedule (failure-heavy traffic:
+        # the paper's tight store→lookup cadence wins — K-deep
+        # speculation would expand rows that fresh patterns could have
+        # pruned). Starts at 1.0 = assume prune-heavy until proven easy.
+        self.adaptive_prune_threshold = float(adaptive_prune_threshold)
+        self._prune_ema = 1.0
+        # the megastep extracts with a deeper per-row cap than the
+        # single-step path: every child beyond the cap forces a
+        # host-round-trip leftover pass, which is exactly what the fused
+        # loop exists to avoid (hub vertices overflow kpr=8 routinely).
+        self._mega_kpr = 2 * self.kpr
+        # ring capacity: one chunk's worst-case fan-out (F·kpr) must fit
+        # above the tail at every iteration (the megastep's conservative
+        # overflow guard), with 2x slack so typical fan-outs get several
+        # depth-steps before the guard trips.
+        self._ring_capacity = 2 * self.wave_size * (self._mega_kpr + 1)
+        self._emb_cap = 2 * self.wave_size * self._mega_kpr
+        self._kernel_backend = get_backend()
         self.w = (data.n + 31) // 32
         self.g = GraphArrays(
             adj_bitmap=jnp.asarray(data.adj_bitmap),
             n_vertices=jnp.int32(data.n))
         self.qb = QueryBank.empty(self.n_slots, self.w)
         self.tb = TableBank.empty(self.n_slots, data.n)
+        self._empty_table = TableArrays.empty(data.n)   # reused, immutable
         self.pool = SegmentPool(self.n_slots)
         self.queue: collections.deque[_Request] = collections.deque()
         self.finished: dict[int, MatchResult] = {}
@@ -100,6 +167,7 @@ class WaveScheduler:
         self._fresh_done: list[int] = []
         self._next_qid = 0
         self._rr = 0
+        self._inflight: _Inflight | None = None
         # aggregate wave statistics (for occupancy / SLO reporting)
         self.waves = 0
         self.rows_packed = 0
@@ -108,6 +176,10 @@ class WaveScheduler:
         self.occ_sum_steady = 0.0
         self.total_prunes = 0
         self.total_rows_created = 0
+        # host/device time split (serving_bench trajectory)
+        self.t_dispatch_s = 0.0     # pack + async dispatch (host)
+        self.t_sync_s = 0.0         # blocked materializing digests
+        self.t_host_s = 0.0         # digest processing / bookkeeping
 
     # ------------------------------------------------------------------
     # submission / admission
@@ -199,20 +271,19 @@ class WaveScheduler:
             if slot is None:
                 return
             req = self.queue.popleft()
+            learn = req.learn and self.pool.learning_enabled
             table = (req.seed_table if req.seed_table is not None
-                     else TableArrays.empty(self.data.n))
+                     else self._empty_table)
             self.qb, self.tb = load_slot(
-                self.qb, self.tb, jnp.int32(slot),
-                jnp.asarray(req.cand_bitmap), jnp.asarray(req.nbr_mask),
-                jnp.int32(req.n), table)
+                self.qb, self.tb, np.int32(slot), req.cand_bitmap,
+                req.nbr_mask, np.int32(req.n), table, learn)
             now = time.perf_counter()
             deadline = (None if req.time_budget_s is None
                         else now + req.time_budget_s)
             q = QueryState(slot, req.query_id, req.n, req.order,
                            req.qnbr_bits, self.w, limit=req.limit,
-                           learn=req.learn and self.pool.learning_enabled,
-                           max_rows=req.max_rows, deadline=deadline,
-                           keep_table=req.keep_table,
+                           learn=learn, max_rows=req.max_rows,
+                           deadline=deadline, keep_table=req.keep_table,
                            t_submit=req.t_submit)
             q.stats.table_stats = None
             r = len(req.roots)
@@ -239,7 +310,7 @@ class WaveScheduler:
         if q.keep_table and q.store_buf:
             # make patterns from the final resolutions visible in the
             # exported table (distributed pattern sharing)
-            self._flush_stores()
+            self._flush_stores(force=True)
         q.status = "done"
         q.evict()
         q.stats.recursions = q.stats.rows_created
@@ -254,7 +325,8 @@ class WaveScheduler:
 
     def _abort(self, q: QueryState, reason: str) -> None:
         """Abort a query (budget exhausted or limit reached) and evict
-        its segments; partial embeddings are kept."""
+        its segments; partial embeddings are kept. Rows of the query
+        still in flight on the device are dropped at digest time."""
         q.stats.aborted = True
         q.stats.abort_reason = reason
         q.abort_reason = reason
@@ -319,48 +391,8 @@ class WaveScheduler:
         self._wave_kind = kind
         return picks
 
-    # ------------------------------------------------------------------
-    # pattern store flushing
-    # ------------------------------------------------------------------
-    def _flush_stores(self) -> None:
-        bufs = [(q, q.store_buf) for q in self.pool.active_queries()
-                if q.store_buf]
-        if not bufs or not self.pool.learning_enabled:
-            for q, buf in bufs:
-                buf.clear()
-            return
-        slots, kpos, kv, phis, mus, masks = [], [], [], [], [], []
-        for q, buf in bufs:
-            for key_pos, key_v, phi_id, mu_len, gamma in buf:
-                slots.append(q.slot)
-                kpos.append(key_pos)
-                kv.append(key_v)
-                phis.append(phi_id)
-                mus.append(mu_len)
-                masks.append(gamma)
-            q.stats.patterns_stored += len(buf)
-            buf.clear()
-        self.tb = store_patterns_mq(
-            self.tb,
-            jnp.asarray(np.array(slots, np.int32)),
-            jnp.asarray(np.array(kpos, np.int32)),
-            jnp.asarray(np.array(kv, np.int32)),
-            jnp.asarray(np.array(phis, np.int32)),
-            jnp.asarray(np.array(mus, np.int32)),
-            jnp.asarray(words_from64(np.array(masks, np.uint64))),
-            jnp.ones(len(slots), bool))
-
-    # ------------------------------------------------------------------
-    # one wave
-    # ------------------------------------------------------------------
-    def step(self) -> bool:
-        """Admit, pack, and execute one wave. Returns False when idle."""
-        self._check_budgets()
-        self._admit()
-        picks = self._pack_wave()
-        if picks is None:
-            return False
-        kind = self._wave_kind
+    def _build_wave(self, picks: list, kind: str):
+        """Pack picked segment slices into fixed-shape wave arrays."""
         f_pad = self.wave_size
         fr = np.full((f_pad, N_PAD), -1, np.int32)
         us = np.zeros((f_pad, self.w), np.uint32)
@@ -383,8 +415,6 @@ class WaveScheduler:
                 lo[off:off + k] = seg.pending_leftover[s:e]
             metas.append((q, seg, s, e, off, k))
             off += k
-
-        self._flush_stores()
         self.waves += 1
         self.rows_packed += off
         occ = off / f_pad
@@ -392,54 +422,434 @@ class WaveScheduler:
         if self.pool.n_active == self.n_slots:
             self.waves_steady += 1
             self.occ_sum_steady += occ
-        for q, *_ in metas:     # one item per query per wave (_pack_wave)
+        return fr, us, ph, lo, valid, slot_v, depth_v, metas
+
+    def _note_prunes(self, prunes: int, rows: int) -> None:
+        """Feed one wave's prune/row counts into the adaptive-depth EMA
+        (decay 0.5: ~5 easy waves flip a cold scheduler to deep mode, a
+        single prune-heavy wave flips it back)."""
+        rate = prunes / max(1, prunes + rows)
+        self._prune_ema = 0.5 * self._prune_ema + 0.5 * rate
+
+    # ------------------------------------------------------------------
+    # pattern store flushing
+    # ------------------------------------------------------------------
+    def _pending_stores(self) -> list[tuple[QueryState, list]]:
+        return [(q, q.store_buf) for q in self.pool.active_queries()
+                if q.store_buf]
+
+    @staticmethod
+    def _pack_store_batch(bufs: list, n_pad: int, max_take: int | None):
+        """Pack up to ``max_take`` queued (key_pos, key_v, φ, μ, Γ)
+        tuples from per-query buffers into padded scatter arrays (the
+        validity lane marks padding; the device scatter drops invalid
+        rows). Consumed entries are removed from the buffers."""
+        slots = np.zeros(n_pad, np.int32)
+        kpos = np.zeros(n_pad, np.int32)
+        kv = np.zeros(n_pad, np.int32)
+        phis = np.zeros(n_pad, np.int32)
+        mus = np.zeros(n_pad, np.int32)
+        masks = np.zeros(n_pad, np.uint64)
+        valid = np.zeros(n_pad, bool)
+        i = 0
+        for q, buf in bufs:
+            take = (len(buf) if max_take is None
+                    else min(len(buf), max_take - i))
+            for key_pos, key_v, phi_id, mu_len, gamma in buf[:take]:
+                slots[i] = q.slot
+                kpos[i] = key_pos
+                kv[i] = key_v
+                phis[i] = phi_id
+                mus[i] = mu_len
+                masks[i] = gamma
+                valid[i] = True
+                i += 1
+            del buf[:take]
+            if max_take is not None and i == max_take:
+                break
+        return slots, kpos, kv, phis, mus, words_from64(masks), valid
+
+    def _flush_stores(self, force: bool = False) -> None:
+        """Standalone batched Δ scatter (single-step path and forced
+        flushes). Skips the dispatch entirely when nothing is pending,
+        and below ``store_flush_min`` unless forced; arrays are padded
+        to power-of-two buckets so the jitted scatter compiles O(log)
+        variants instead of one per distinct batch length."""
+        bufs = self._pending_stores()
+        if not bufs:
+            return
+        if not self.pool.learning_enabled:
+            for q, buf in bufs:
+                buf.clear()
+            return
+        total = sum(len(buf) for _, buf in bufs)
+        if not force and total < self.store_flush_min:
+            return
+        n_pad = 16
+        while n_pad < total:
+            n_pad *= 2
+        self.tb = store_patterns_mq(
+            self.tb, *self._pack_store_batch(bufs, n_pad, None))
+
+    def _drain_store_batch(self):
+        """Drain up to ``store_pad`` host-queued pattern stores into the
+        fixed-length arrays that ride the next megastep dispatch.
+        Leftover entries stay queued for the next wave."""
+        bufs = self._pending_stores()
+        if not self.pool.learning_enabled:
+            for q, buf in bufs:
+                buf.clear()
+            bufs = []
+        return self._pack_store_batch(bufs, self.store_pad,
+                                      self.store_pad)
+
+    # ------------------------------------------------------------------
+    # one scheduling step (double-buffered pipeline)
+    # ------------------------------------------------------------------
+    def step(self) -> bool:
+        """Admit, pack, and execute one wave. Returns False when idle.
+
+        With ``megastep_depth > 1`` the wave is dispatched as a fused
+        megastep and the *previous* dispatch's digest is processed only
+        after the new one is in flight — host bookkeeping overlaps
+        device compute (double buffering).
+        """
+        self._check_budgets()
+        self._admit()
+        if self.megastep_depth <= 1:
+            return self._step_single()
+        if self._prune_ema > self.adaptive_prune_threshold:
+            # failure-heavy regime: drain the pipeline and fall back to
+            # the synchronous single-step schedule so every wave sees
+            # the patterns learned from the one before it.
+            prev, self._inflight = self._inflight, None
+            if prev is not None:
+                if prev.kind == "mega":
+                    self._retire_mega(prev)
+                else:
+                    self._retire_leftover(prev)
+            return self._step_single() or prev is not None
+        t0 = time.perf_counter()
+        picks = self._pack_wave()
+        rec: _Inflight | None = None
+        if picks is not None:
+            if self._wave_kind == "fresh":
+                rec = self._dispatch_mega(picks)
+            else:
+                rec = self._dispatch_leftover(picks)
+        self.t_dispatch_s += time.perf_counter() - t0
+        prev, self._inflight = self._inflight, rec
+        if prev is not None:
+            if prev.kind == "mega":
+                self._retire_mega(prev)
+            else:
+                self._retire_leftover(prev)
+        return prev is not None or rec is not None
+
+    # ------------------------------------------------------------------
+    # megastep dispatch / retire
+    # ------------------------------------------------------------------
+    def _dispatch_mega(self, picks: list) -> _Inflight:
+        fr, us, ph, _lo, valid, slot_v, depth_v, metas = \
+            self._build_wave(picks, "fresh")
+        st = self._drain_store_batch()
+        # worst-case id reservation: every ring position beyond the
+        # input wave is a fresh row. Reserving up front lets the next
+        # dispatch go out before this digest is read.
+        id_base = self.pool.alloc_ids(self._ring_capacity - self.wave_size)
+        if self.pool.id_overflow and self.pool.learning_enabled:
+            # id overflow: clear all tables, pause learning (sound);
+            # the pool re-enables learning once it drains.
+            self.tb = TableBank.empty(self.n_slots, self.data.n)
+            self.pool.learning_enabled = False
+            for qq in self.pool.active_queries():
+                qq.learn = False
+        res = run_megastep_mq(
+            self.g, self.qb, self.tb, fr, us, ph, valid, slot_v, depth_v,
+            *st, np.int32(id_base), bool(self.pool.learning_enabled),
+            kpr=self._mega_kpr, k_depth=self.megastep_depth,
+            capacity=self._ring_capacity, emb_cap=self._emb_cap,
+            backend=self._kernel_backend)
+        self.tb = res.tb            # handle only — not materialized
+        slot_map = {q.slot: q for q, *_ in metas}
+        for q, *_ in metas:         # one item per query per wave
+            q.stats.waves += 1
+        return _Inflight("mega", res, metas, slot_map)
+
+    def _retire_mega(self, rec: _Inflight) -> None:
+        res: MegaResult = rec.res
+        t0 = time.perf_counter()
+        head = int(res.head)
+        tail = int(res.tail)
+        bufF = np.asarray(res.buf_frontier)
+        bufU = np.asarray(res.buf_used)
+        bufP = np.asarray(res.buf_phi)
+        slot_a = np.asarray(res.buf_slot)
+        depth_a = np.asarray(res.buf_depth)
+        parent_a = np.asarray(res.buf_parent)
+        valid_a = np.asarray(res.buf_valid)
+        rempty = np.asarray(res.refined_empty)
+        nchild = np.asarray(res.n_children)
+        nleft = np.asarray(res.n_leftover)
+        leftover = np.asarray(res.leftover)
+        pmask = mask64(np.asarray(res.partial_mask))
+        nprun = np.asarray(res.n_pruned)
+        ninj = np.asarray(res.n_inj)
+        nembr = np.asarray(res.n_emb_row)
+        dstored = np.asarray(res.dev_stored)
+        n_emb = int(res.n_emb)
+        embF = np.asarray(res.emb_frontier)[:n_emb]
+        embS = np.asarray(res.emb_slot)[:n_emb]
+        t1 = time.perf_counter()
+        self.t_sync_s += t1 - t0
+
+        f_in = self.wave_size
+        slot_map = rec.slot_map
+        involved: dict[int, QueryState] = {}
+        sweeps: dict[int, list] = {}
+
+        # ---- 1) input-row bookkeeping (rows [0, f_in) of the ring) -----
+        for q, seg, s, e, woff, k in rec.metas:
+            if not q.active:
+                continue
+            involved[q.query_id] = q
+            sl = slice(woff, woff + k)
+            rows = slice(s, e)
+            seg.gamma[rows] |= pmask[sl]
+            seg.pending_leftover[rows] = leftover[sl]
+            seg.expanded[rows] = True
+            seg.stored[rows] |= dstored[sl]
+            seg.outstanding[rows] += nchild[sl]
+            seg.reported[rows] |= nembr[sl] > 0
+            q.stats.deadend_prunes += int(nprun[sl].sum())
+            q.stats.injectivity_fails += int(ninj[sl].sum())
+            q.stats.patterns_stored += int(dstored[sl].sum())
+            if (nleft[sl] > 0).any():
+                q.push(WorkItem(seg.seg_id, s, e, "leftover"))
+            sweeps.setdefault(q.query_id, []).append(
+                (seg, np.arange(s, e), rempty[sl]))
+
+        # ---- 2) embeddings found in-loop (+ limit aborts) --------------
+        if n_emb:
+            for sl_v in np.unique(embS):
+                q = slot_map.get(int(sl_v))
+                if q is None or not q.active:
+                    continue
+                rows = embF[embS == sl_v]
+                take = len(rows)
+                if q.limit is not None:
+                    take = min(take, q.limit - q.stats.found)
+                if take > 0:
+                    out = np.empty((take, q.n), np.int32)
+                    out[:, q.order[:q.n]] = rows[:take, :q.n]
+                    q.embeddings.extend(out)
+                    q.stats.found += take
+                if q.limit is not None and q.stats.found >= q.limit:
+                    self._abort(q, "limit")
+
+        # ---- 3) rows created in-loop -> new segments -------------------
+        if tail > f_in:
+            # ring index -> (q-local segment id, row) for parent links;
+            # parents always precede children in the ring.
+            seg_of = np.full(tail, -1, np.int64)
+            row_of = np.full(tail, -1, np.int64)
+            for q, seg, s, e, woff, k in rec.metas:
+                seg_of[woff:woff + k] = seg.seg_id
+                row_of[woff:woff + k] = np.arange(s, e)
+            new_idx = np.arange(f_in, tail)
+            new_idx = new_idx[valid_a[f_in:tail]]
+            sl_arr = slot_a[new_idx]
+            for sl_v in np.unique(sl_arr):
+                q = slot_map.get(int(sl_v))
+                qsel = new_idx[sl_arr == sl_v]
+                if q is None or not q.active:
+                    continue
+                involved[q.query_id] = q
+                qd = depth_a[qsel]
+                for d_v in np.unique(qd):          # ascending: parents
+                    sel = qsel[qd == d_v]          # precede children
+                    exp_sel = sel[sel < head]
+                    sel2 = np.concatenate([exp_sel, sel[sel >= head]])
+                    r = len(sel2)
+                    n_exp = len(exp_sel)
+                    q.stats.rows_created += r
+                    cseg = q.new_segment(
+                        int(d_v), bufF[sel2], bufU[sel2], bufP[sel2],
+                        seg_of[parent_a[sel2]].astype(np.int32),
+                        row_of[parent_a[sel2]].astype(np.int32))
+                    cseg.expanded[:n_exp] = True
+                    cseg.gamma[:n_exp] = pmask[exp_sel]
+                    cseg.pending_leftover[:] = leftover[sel2]
+                    cseg.outstanding[:] = nchild[sel2]
+                    cseg.reported[:] = nembr[sel2] > 0
+                    cseg.stored[:] = dstored[sel2]
+                    q.stats.deadend_prunes += int(nprun[exp_sel].sum())
+                    q.stats.injectivity_fails += int(ninj[exp_sel].sum())
+                    q.stats.patterns_stored += int(dstored[sel2].sum())
+                    seg_of[sel2] = cseg.seg_id
+                    row_of[sel2] = np.arange(r)
+                    if n_exp < r:
+                        q.push(WorkItem(cseg.seg_id, n_exp, r, "fresh"))
+                    if n_exp and (nleft[exp_sel] > 0).any():
+                        q.push(WorkItem(cseg.seg_id, 0, n_exp, "leftover"))
+                    sweeps.setdefault(q.query_id, []).append(
+                        (cseg, np.arange(n_exp), rempty[exp_sel]))
+
+        # ---- 4) Lemma-4 resolution sweep over every expanded row -------
+        for qid, q in involved.items():
+            if not q.active:
+                continue
+            items: list = []
+            for seg, srows, remask in sweeps.get(qid, []):
+                if seg.seg_id not in q.segments:
+                    continue
+                unres = ~seg.resolved[srows]
+                for row in srows[remask & unres]:
+                    # Lemma 1: Γ = N(u_d) ∩ dom(M̂)
+                    gam = q.qnbr_bits[seg.depth] & below(seg.depth)
+                    items.append((seg.seg_id, int(row), False, gam))
+                cand = srows[~remask & unres]
+                if len(cand):
+                    done = cand[(seg.outstanding[cand] == 0)
+                                & seg.expanded[cand]
+                                & ~seg.pending_leftover[cand].any(axis=1)]
+                    for row in done:
+                        if seg.reported[row]:
+                            items.append((seg.seg_id, int(row), True,
+                                          np.uint64(0)))
+                        else:
+                            items.append(q.finalize_row(seg, int(row)))
+            q.resolve_rows(items)
+            if q.max_rows is not None and q.stats.rows_created > q.max_rows:
+                self._abort(q, "rows")
+            elif not q.segments:
+                self._finish(q)
+        self._note_prunes(int(nprun[:tail].sum()), max(0, tail - f_in))
+        self.t_host_s += time.perf_counter() - t1
+
+    # ------------------------------------------------------------------
+    # leftover extraction dispatch / retire (single-step program)
+    # ------------------------------------------------------------------
+    def _dispatch_leftover(self, picks: list) -> _Inflight:
+        fr, us, ph, lo, valid, slot_v, depth_v, metas = \
+            self._build_wave(picks, "leftover")
+        res = extract_more_mq(self.tb, ph, slot_v, depth_v, lo,
+                              kpr=4 * self.kpr)
+        slot_map = {q.slot: q for q, *_ in metas}
+        for q, *_ in metas:
+            q.stats.waves += 1
+        return _Inflight("leftover", res, metas, slot_map,
+                         fr=fr, us=us, ph=ph, depth_v=depth_v)
+
+    def _retire_leftover(self, rec: _Inflight) -> None:
+        res = rec.res
+        t0 = time.perf_counter()
+        child_v = np.asarray(res[0])
+        child_valid = np.asarray(res[1])
+        leftover = np.asarray(res[2])
+        n_leftover = np.asarray(res[3])
+        partial = mask64(np.asarray(res[4]))
+        n_pruned = np.asarray(res[5])
+        t1 = time.perf_counter()
+        self.t_sync_s += t1 - t0
+        f_pad = self.wave_size
+        digest = dict(
+            refined_empty=np.zeros(f_pad, bool),
+            n_children=child_valid.sum(axis=1).astype(np.int32),
+            n_leftover=n_leftover, partial=partial, child_v=child_v,
+            child_valid=child_valid, leftover=leftover,
+            n_pruned=n_pruned, n_inj=np.zeros(f_pad, np.int32))
+        self._process_wave("leftover", rec.metas, rec.fr, rec.us, rec.ph,
+                           rec.depth_v, digest)
+        self.t_host_s += time.perf_counter() - t1
+
+    # ------------------------------------------------------------------
+    # single-step wave processing (megastep_depth == 1 reference path,
+    # and the leftover-extraction retire)
+    # ------------------------------------------------------------------
+    def _step_single(self) -> bool:
+        picks = self._pack_wave()
+        if picks is None:
+            return False
+        kind = self._wave_kind
+        t0 = time.perf_counter()
+        fr, us, ph, lo, valid, slot_v, depth_v, metas = \
+            self._build_wave(picks, kind)
+        self._flush_stores()
+        for q, *_ in metas:         # one item per query per wave
             q.stats.waves += 1
 
         if kind == "fresh":
             res = expand_wave_mq(
-                self.g, self.qb, self.tb, jnp.asarray(fr), jnp.asarray(us),
-                jnp.asarray(ph), jnp.asarray(valid), jnp.asarray(slot_v),
-                jnp.asarray(depth_v), kpr=self.kpr)
-            refined_empty = np.asarray(res.refined_empty)
-            n_children = np.asarray(res.n_children)
-            n_leftover = np.asarray(res.n_leftover)
-            partial = mask64(np.asarray(res.partial_mask))
-            child_v = np.asarray(res.child_v)
-            child_valid = np.asarray(res.child_valid)
-            leftover = np.asarray(res.leftover)
-            n_pruned = np.asarray(res.n_pruned)
-            n_inj = np.asarray(res.n_inj)
+                self.g, self.qb, self.tb, fr, us, ph, valid, slot_v,
+                depth_v, kpr=self.kpr, backend=self._kernel_backend)
+            self.t_dispatch_s += time.perf_counter() - t0
+            t1 = time.perf_counter()
+            digest = dict(
+                refined_empty=np.asarray(res.refined_empty),
+                n_children=np.asarray(res.n_children),
+                n_leftover=np.asarray(res.n_leftover),
+                partial=mask64(np.asarray(res.partial_mask)),
+                child_v=np.asarray(res.child_v),
+                child_valid=np.asarray(res.child_valid),
+                leftover=np.asarray(res.leftover),
+                n_pruned=np.asarray(res.n_pruned),
+                n_inj=np.asarray(res.n_inj))
         else:
-            res = extract_more_mq(
-                self.tb, jnp.asarray(ph), jnp.asarray(slot_v),
-                jnp.asarray(depth_v), jnp.asarray(lo), kpr=4 * self.kpr)
-            child_v = np.asarray(res[0])
+            res = extract_more_mq(self.tb, ph, slot_v, depth_v, lo,
+                                  kpr=4 * self.kpr)
+            self.t_dispatch_s += time.perf_counter() - t0
+            t1 = time.perf_counter()
             child_valid = np.asarray(res[1])
-            leftover = np.asarray(res[2])
-            n_leftover = np.asarray(res[3])
-            partial = mask64(np.asarray(res[4]))
-            n_pruned = np.asarray(res[5])
-            n_children = child_valid.sum(axis=1).astype(np.int32)
-            refined_empty = np.zeros(f_pad, bool)
-            n_inj = np.zeros(f_pad, np.int32)
+            digest = dict(
+                refined_empty=np.zeros(self.wave_size, bool),
+                n_children=child_valid.sum(axis=1).astype(np.int32),
+                n_leftover=np.asarray(res[3]),
+                partial=mask64(np.asarray(res[4])),
+                child_v=np.asarray(res[0]), child_valid=child_valid,
+                leftover=np.asarray(res[2]),
+                n_pruned=np.asarray(res[5]),
+                n_inj=np.zeros(self.wave_size, np.int32))
+        t2 = time.perf_counter()
+        self.t_sync_s += t2 - t1
+        self._process_wave(kind, metas, fr, us, ph, depth_v, digest)
+        self.t_host_s += time.perf_counter() - t2
+        return True
 
-        # mask out rows of evicted queries (aborted between pack and now:
-        # cannot happen today, but keeps the invariant explicit) and
-        # last-level rows — their children are embeddings, not rows.
+    def _process_wave(self, kind: str, metas: list, fr, us, ph, depth_v,
+                      digest: dict) -> None:
+        """Host bookkeeping for one single-step wave digest: child
+        assembly, embedding extraction, Lemma-4 resolution."""
+        f_pad = self.wave_size
+        refined_empty = digest["refined_empty"]
+        n_children = digest["n_children"]
+        n_leftover = digest["n_leftover"]
+        partial = digest["partial"]
+        child_v = digest["child_v"]
+        child_valid = digest["child_valid"]
+        leftover = digest["leftover"]
+        n_pruned = digest["n_pruned"]
+        n_inj = digest["n_inj"]
+
+        # mask out rows of evicted queries (aborted while this wave was
+        # in flight) and last-level rows — their children are
+        # embeddings, not rows.
         last_level = np.zeros(f_pad, bool)
+        dead_rows = np.zeros(f_pad, bool)
         for q, seg, s, e, woff, k in metas:
             if seg.depth + 1 == q.n:
                 last_level[woff:woff + k] = True
-        child_valid_eff = child_valid & ~last_level[:, None]
+            if not q.active:
+                dead_rows[woff:woff + k] = True
+        child_valid_eff = child_valid & ~last_level[:, None] \
+            & ~dead_rows[:, None]
 
         cf = cu = cp = par = cvalid = None
         if child_valid_eff.any():
             id_base = self.pool.alloc_ids(int(child_valid_eff.sum()))
             cf, cu, cp, par, cvalid = assemble_children_mq(
-                jnp.asarray(fr), jnp.asarray(us), jnp.asarray(ph),
-                jnp.asarray(np.where(child_valid_eff, child_v, -1)),
-                jnp.asarray(child_valid_eff), jnp.asarray(depth_v),
-                jnp.int32(id_base))
+                fr, us, ph, np.where(child_valid_eff, child_v, -1),
+                child_valid_eff, depth_v, np.int32(id_base))
             cf = np.asarray(cf)
             cu = np.asarray(cu)
             cp = np.asarray(cp)
@@ -454,6 +864,7 @@ class WaveScheduler:
                     qq.learn = False
 
         # ---- per-item host bookkeeping ---------------------------------
+        wave_rows_created = 0
         for q, seg, s, e, woff, k in metas:
             if not q.active:
                 continue
@@ -497,6 +908,7 @@ class WaveScheduler:
                     sel = np.nonzero(cvalid[lo_f:hi_f])[0] + lo_f
                     n_new = len(sel)
                     q.stats.rows_created += n_new
+                    wave_rows_created += n_new
                     cseg = q.new_segment(
                         seg.depth + 1, cf[sel], cu[sel], cp[sel],
                         np.full(n_new, seg.seg_id, np.int32),
@@ -525,7 +937,7 @@ class WaveScheduler:
                 self._abort(q, "rows")
             elif not q.segments:
                 self._finish(q)
-        return True
+        self._note_prunes(int(n_pruned.sum()), wave_rows_created)
 
     # ------------------------------------------------------------------
     # driving
@@ -537,7 +949,8 @@ class WaveScheduler:
 
     @property
     def idle(self) -> bool:
-        return not self.queue and self.pool.n_active == 0
+        return (not self.queue and self.pool.n_active == 0
+                and self._inflight is None)
 
     def run(self) -> dict[int, MatchResult]:
         """Drain all queued and in-flight queries; returns the finished
@@ -559,6 +972,7 @@ class WaveScheduler:
             "rows_packed": self.rows_packed,
             "wave_size": self.wave_size,
             "n_slots": self.n_slots,
+            "megastep_depth": self.megastep_depth,
             "mean_occupancy": (self.occ_sum / self.waves
                                if self.waves else 0.0),
             "steady_occupancy": (self.occ_sum_steady / self.waves_steady
@@ -570,6 +984,9 @@ class WaveScheduler:
             "deadend_prunes": prunes,
             "rows_created": rows,
             "prune_rate": prunes / max(1, prunes + rows),
+            "dispatch_time_s": self.t_dispatch_s,
+            "device_sync_time_s": self.t_sync_s,
+            "host_time_s": self.t_host_s,
         }
 
 
@@ -583,10 +1000,10 @@ class WaveEngine:
     """
 
     def __init__(self, data: Graph, wave_size: int = 512, kpr: int = 16,
-                 use_pruning: bool = True):
+                 use_pruning: bool = True, megastep_depth: int = 6):
         self.scheduler = WaveScheduler(
             data, n_slots=1, wave_size=wave_size, kpr=kpr,
-            use_pruning=use_pruning)
+            use_pruning=use_pruning, megastep_depth=megastep_depth)
 
     def match(self, query: Graph, limit: int | None = 1000,
               cand: list[np.ndarray] | None = None,
@@ -609,8 +1026,10 @@ class WaveEngine:
 
 def match_vectorized(query: Graph, data: Graph, limit: int | None = 1000,
                      use_pruning: bool = True, wave_size: int = 512,
-                     kpr: int = 16, **kw) -> MatchResult:
+                     kpr: int = 16, megastep_depth: int = 6,
+                     **kw) -> MatchResult:
     """One-shot convenience wrapper around :class:`WaveEngine`."""
     return WaveEngine(data, wave_size=wave_size, kpr=kpr,
-                      use_pruning=use_pruning).match(query, limit=limit,
-                                                     **kw)
+                      use_pruning=use_pruning,
+                      megastep_depth=megastep_depth
+                      ).match(query, limit=limit, **kw)

@@ -3,22 +3,32 @@
 The matcher's hot loop. For every partial embedding (frontier row) the
 refined candidate set of the next query position is
 
-    refined[i] = cand ∧ ⋀_{p active} adj[frontier[i, p]]
+    refined[i] = cand[i] ∧ ⋀_{p active for row i} adj[frontier[i, p]]
 
-an AND-reduction over dynamically gathered adjacency bitmap rows. On TPU
-the dynamic row gather is expressed with *scalar prefetch*: the frontier
-matrix and the active-position vector are prefetched into SMEM, and the
-``index_map`` of the adjacency operand picks the HBM block to stream into
-VMEM for each (row, position) grid step. The output block is revisited
-across the position dimension and accumulated in place (VMEM), so each
-refined row is written to HBM once.
+an AND-reduction over dynamically gathered adjacency bitmap rows. Since
+the multi-query engine refactor the candidate row and the active-position
+set are *per row* (each wave row may belong to a different query at a
+different depth), so the kernel takes ``cand [F, W]`` and
+``active [F, NP]`` — the single-query entry point broadcasts.
 
-Block geometry: one grid step loads one adjacency row block of
-``(1, W_pad)`` words. ``W_pad`` is padded to a multiple of 128 lanes; the
-single-sublane block wastes sublanes on real hardware — measured as
-acceptable because the kernel is gather-bound, see EXPERIMENTS.md §Perf.
-All words are int32 (bitwise ops are sign-agnostic; uint32<->int32 is a
-bitcast at the wrapper).
+Block geometry (this file's §Perf iteration 3): the grid is one step per
+``(BLOCK_F, W_pad)`` row block and the position loop is folded *inside*
+the kernel body — the old kernel used single-sublane ``(1, W_pad)``
+blocks with a ``(F, NP)`` grid, wasting 7/8 sublanes and paying one grid
+step per (row, position) pair. Per grid step the body now runs
+``fori_loop`` over positions and gathers one adjacency row per sublane
+with a dynamic ``pl.ds`` load. The frontier and active matrices are
+scalar-prefetched (SMEM) because their values index the adjacency
+operand; the adjacency bitmap itself is a single whole-array VMEM block
+(packed bitmaps are tiny: V=8192, W_pad=256 is 8 MB — graphs beyond
+VMEM capacity need an HBM + manual-DMA variant, see DESIGN.md §2).
+``W_pad`` is padded to a multiple of 128 lanes, ``F`` to a multiple of
+``BLOCK_F`` sublanes. All words are int32 (bitwise ops are
+sign-agnostic; uint32<->int32 is a bitcast at the wrapper).
+
+Backend selection lives in ``kernels/config.py`` — ``interpret=None``
+resolves from the process-wide config, so TPU runs cannot silently fall
+into interpret mode (the old default was ``interpret=True``).
 """
 from __future__ import annotations
 
@@ -26,64 +36,99 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .config import interpret_mode
+
+BLOCK_F = 8     # sublanes per grid step (f32/int32 min tile height)
+
+
 def _refine_kernel(frontier_ref, active_ref, adj_ref, cand_ref, out_ref):
-    """Grid (F, NP): AND-accumulate adjacency rows into the output row."""
-    p = pl.program_id(1)
-    i = pl.program_id(0)
+    """One grid step refines BLOCK_F rows, looping positions in-body."""
+    b = pl.program_id(0)
+    np_ = frontier_ref.shape[1]
 
-    @pl.when(p == 0)
-    def _init():
-        out_ref[...] = cand_ref[...]
+    def body(p, acc):
+        rows = []
+        for i in range(BLOCK_F):            # static unroll over sublanes
+            r = b * BLOCK_F + i
+            vtx = frontier_ref[r, p]
+            act = (active_ref[r, p] != 0) & (vtx >= 0)
+            idx = jnp.where(act, vtx, 0).clip(0, adj_ref.shape[0] - 1)
+            row = adj_ref[pl.ds(idx, 1), :]             # (1, W_pad)
+            rows.append(jnp.where(act, row, jnp.int32(-1)))
+        return acc & jnp.concatenate(rows, axis=0)
 
-    act = (active_ref[p] != 0) & (frontier_ref[i, p] >= 0)
-    row = jnp.where(act, adj_ref[...], -1)   # -1 == all bits set
-    out_ref[...] &= row
+    out_ref[...] = lax.fori_loop(0, np_, body, cand_ref[...])
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def refine_bitmap(adj_bitmap: jax.Array, cand_row: jax.Array,
-                  frontier: jax.Array, active: jax.Array,
-                  interpret: bool = True) -> jax.Array:
-    """Pallas-backed Eq. 2 refinement.
-
-    Args:
-      adj_bitmap: int32/uint32 [V, W] packed adjacency rows.
-      cand_row:   int32/uint32 [W] packed candidates of the position.
-      frontier:   int32 [F, NP] mapped vertex per position (-1 unmapped).
-      active:     int32 [NP] nonzero for mapped neighbor positions.
-      interpret:  run the kernel body in interpret mode (CPU container);
-                  on real TPU pass False.
-
-    Returns int32 [F, W_pad>=W] refined packed bitmaps (caller slices W).
-    """
-    v, w = adj_bitmap.shape
-    f, np_ = frontier.shape
-    w_pad = max(128, ((w + 127) // 128) * 128)
-    adj = jnp.zeros((v, w_pad), jnp.int32).at[:, :w].set(
-        adj_bitmap.astype(jnp.int32))
-    cand = jnp.zeros((1, w_pad), jnp.int32).at[0, :w].set(
-        cand_row.astype(jnp.int32))
-
+def _refine_rows_call(adj, cand, frontier, active, interpret: bool):
+    v_pad, w_pad = adj.shape
+    f_pad = frontier.shape[0]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(f, np_),
+        grid=(f_pad // BLOCK_F,),
         in_specs=[
-            pl.BlockSpec(
-                (1, w_pad),
-                lambda i, p, frontier_ref, active_ref: (
-                    jnp.where(active_ref[p] != 0,
-                              frontier_ref[i, p], 0).clip(0, v - 1),
-                    0)),
-            pl.BlockSpec((1, w_pad), lambda i, p, *_: (0, 0)),
+            pl.BlockSpec((v_pad, w_pad), lambda i, *_: (0, 0)),
+            pl.BlockSpec((BLOCK_F, w_pad), lambda i, *_: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((1, w_pad), lambda i, p, *_: (i, 0)),
+        out_specs=pl.BlockSpec((BLOCK_F, w_pad), lambda i, *_: (i, 0)),
     )
     return pl.pallas_call(
         _refine_kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((f, w_pad), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((f_pad, w_pad), jnp.int32),
         interpret=interpret,
-    )(frontier, active.astype(jnp.int32), adj, cand)
+    )(frontier, active, adj, cand)
+
+
+def refine_bitmap_rows(adj_bitmap: jax.Array, cand_rows: jax.Array,
+                       frontier: jax.Array, active: jax.Array,
+                       interpret: bool | None = None) -> jax.Array:
+    """Pallas-backed Eq. 2 refinement with per-row candidates.
+
+    Args:
+      adj_bitmap: int32/uint32 [V, W] packed adjacency rows.
+      cand_rows:  int32/uint32 [F, W] packed candidates, one per row.
+      frontier:   int32 [F, NP] mapped vertex per position (-1 unmapped).
+      active:     bool/int32 [F, NP] mapped-neighbor positions, per row.
+      interpret:  None resolves from ``kernels.config`` (the process-wide
+                  backend); pass a bool to force.
+
+    Returns int32 [F, W_pad >= W] refined packed bitmaps (caller slices
+    the first W words).
+    """
+    if interpret is None:
+        interpret = interpret_mode(None)
+    v, w = adj_bitmap.shape
+    f, np_ = frontier.shape
+    w_pad = max(128, ((w + 127) // 128) * 128)
+    v_pad = ((v + BLOCK_F - 1) // BLOCK_F) * BLOCK_F
+    f_pad = ((max(f, 1) + BLOCK_F - 1) // BLOCK_F) * BLOCK_F
+    adj = jnp.zeros((v_pad, w_pad), jnp.int32).at[:v, :w].set(
+        adj_bitmap.astype(jnp.int32))
+    cand = jnp.zeros((f_pad, w_pad), jnp.int32).at[:f, :w].set(
+        cand_rows.astype(jnp.int32))
+    fr = jnp.full((f_pad, np_), -1, jnp.int32).at[:f].set(
+        frontier.astype(jnp.int32))
+    act = jnp.zeros((f_pad, np_), jnp.int32).at[:f].set(
+        active.astype(jnp.int32))
+    return _refine_rows_call(adj, cand, fr, act, interpret)[:f]
+
+
+def refine_bitmap(adj_bitmap: jax.Array, cand_row: jax.Array,
+                  frontier: jax.Array, active: jax.Array,
+                  interpret: bool | None = None) -> jax.Array:
+    """Single-query entry point: one shared candidate row and one shared
+    active-position vector, broadcast over all F rows (the historical
+    signature, kept for ``ops.refine_bitmap_op`` and the dry-run)."""
+    f = frontier.shape[0]
+    cand_rows = jnp.broadcast_to(
+        cand_row.astype(jnp.int32)[None, :], (f, cand_row.shape[0]))
+    act = jnp.broadcast_to(
+        active.astype(jnp.int32)[None, :], (f, active.shape[0]))
+    return refine_bitmap_rows(adj_bitmap, cand_rows, frontier, act,
+                              interpret=interpret)

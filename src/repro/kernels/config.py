@@ -1,0 +1,64 @@
+"""Single kernel-backend configuration shared by every kernel call site.
+
+Before this module existed, ``bitmap_refine.refine_bitmap`` defaulted to
+``interpret=True`` while ``ops.py`` owned its own ``DEFAULT_BACKEND`` —
+a TPU run that called the kernel directly (or through ``engine_step``)
+could silently fall into interpret mode. Now *one* process-wide setting
+decides how every op lowers:
+
+  * ``"jnp"``              — pure-jnp oracle path (``ref.py``); fastest on
+                             CPU and what the dry-run lowers by default.
+  * ``"pallas_interpret"`` — Pallas kernel bodies interpreted on CPU (the
+                             kernel-validation mode used by the tests).
+  * ``"pallas"``           — compiled TPU kernels (target hardware).
+
+Resolution order: explicit ``backend=`` argument > ``set_backend()`` >
+``REPRO_KERNEL_BACKEND`` environment variable > ``"jnp"``.
+
+Kernel wrappers translate the backend to their ``interpret`` flag with
+:func:`interpret_mode` — so ``interpret=True`` can only happen when the
+configuration explicitly asks for it.
+"""
+from __future__ import annotations
+
+import os
+
+BACKENDS = ("jnp", "pallas_interpret", "pallas")
+
+_backend = os.environ.get("REPRO_KERNEL_BACKEND", "jnp")
+if _backend not in BACKENDS:
+    raise ValueError(
+        f"REPRO_KERNEL_BACKEND={_backend!r} not in {BACKENDS}")
+
+
+def get_backend() -> str:
+    """The process-wide kernel backend."""
+    return _backend
+
+
+def set_backend(name: str) -> None:
+    """Set the process-wide kernel backend (e.g. once at TPU startup)."""
+    global _backend
+    if name not in BACKENDS:
+        raise ValueError(f"unknown kernel backend {name!r}; "
+                         f"choose one of {BACKENDS}")
+    _backend = name
+
+
+def resolve(backend: str | None) -> str:
+    """An explicit per-call backend wins; None means the global config."""
+    if backend is None:
+        return get_backend()
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown kernel backend {backend!r}; "
+                         f"choose one of {BACKENDS}")
+    return backend
+
+
+def interpret_mode(backend: str | None) -> bool:
+    """Interpret flag for a Pallas call under ``backend`` (None = global).
+
+    Only ``"pallas_interpret"`` interprets; ``"pallas"`` compiles for the
+    accelerator. (``"jnp"`` never reaches a pallas_call.)
+    """
+    return resolve(backend) == "pallas_interpret"

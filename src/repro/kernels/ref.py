@@ -28,6 +28,25 @@ def refine_bitmap_ref(adj_bitmap: jax.Array, cand_row: jax.Array,
     return jax.lax.fori_loop(0, np_, body, acc)
 
 
+def refine_bitmap_rows_ref(adj_bitmap: jax.Array, cand_rows: jax.Array,
+                           frontier: jax.Array, active: jax.Array
+                           ) -> jax.Array:
+    """Per-row Eq. 2 oracle (multi-query layout): candidates and active
+    positions vary per row. Same semantics as
+    ``kernels.bitmap_refine.refine_bitmap_rows``; returns uint32 [F, W].
+    """
+    f, np_ = frontier.shape
+    adj = adj_bitmap.astype(jnp.uint32)
+    acc = cand_rows.astype(jnp.uint32)
+
+    def body(p, acc):
+        act = (active[:, p] != 0) & (frontier[:, p] >= 0)
+        rows = adj[frontier[:, p].clip(0)]
+        return jnp.where(act[:, None], acc & rows, acc)
+
+    return jax.lax.fori_loop(0, np_, body, acc)
+
+
 def bitmap_spmm_ref(adj_words: jax.Array, x: jax.Array) -> jax.Array:
     """Unpack the bitmap densely and matmul in f32."""
     n, w = adj_words.shape

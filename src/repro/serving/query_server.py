@@ -58,7 +58,8 @@ class QueryServer:
     def __init__(self, data: Graph, backend: str = "sequential",
                  limit: int | None = 1000, time_budget_s: float = 10.0,
                  wave_size: int = 256, kpr: int = 16, n_slots: int = 16,
-                 max_recursions: int | None = None, max_queue: int = 4096):
+                 max_recursions: int | None = None, max_queue: int = 4096,
+                 megastep_depth: int = 6):
         self.data = data
         self.backend = backend
         self.limit = limit
@@ -66,7 +67,8 @@ class QueryServer:
         self.max_recursions = max_recursions
         self.scheduler = (WaveScheduler(data, n_slots=n_slots,
                                         wave_size=wave_size, kpr=kpr,
-                                        max_queue=max_queue)
+                                        max_queue=max_queue,
+                                        megastep_depth=megastep_depth)
                           if backend == "engine" else None)
         self.latencies: list[float] = []
         self.n_timeouts = 0

@@ -9,7 +9,7 @@ import jax.numpy as jnp
 from repro.core.graph import pack_bitmap
 from repro.kernels import ref
 from repro.kernels.ops import (bitmap_spmm_op, flash_attention_op,
-                               refine_bitmap_op)
+                               refine_bitmap_op, refine_bitmap_rows_op)
 
 
 # ---------------------------------------------------------------- refine
@@ -28,6 +28,30 @@ def test_refine_bitmap_vs_ref(v, f, np_, seed):
     got = refine_bitmap_op(adj, cand, frontier, active,
                            backend="pallas_interpret")
     want = ref.refine_bitmap_ref(adj, cand, frontier, active)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("v,f,np_,seed", [
+    (48, 3, 6, 0),      # F < BLOCK_F: one padded row block
+    (96, 8, 7, 1),      # F == BLOCK_F exactly
+    (200, 21, 9, 2),    # F not a multiple of BLOCK_F
+    (520, 40, 12, 3),   # W > 16: multi-word rows, padded lanes
+])
+def test_refine_bitmap_rows_vs_ref(v, f, np_, seed):
+    """Multi-row (8, W_pad) block geometry with per-row candidate and
+    active sets (the multi-query wave layout) against the rowwise
+    oracle."""
+    rng = np.random.default_rng(seed)
+    dense = rng.random((v, v)) < 0.2
+    dense |= dense.T
+    adj = jnp.asarray(pack_bitmap(dense))
+    cand_rows = jnp.asarray(pack_bitmap(rng.random((f, v)) < 0.5))
+    frontier = jnp.asarray(
+        rng.integers(-1, v, size=(f, np_)).astype(np.int32))
+    active = jnp.asarray((rng.random((f, np_)) < 0.6).astype(np.int32))
+    got = refine_bitmap_rows_op(adj, cand_rows, frontier, active,
+                                backend="pallas_interpret")
+    want = ref.refine_bitmap_rows_ref(adj, cand_rows, frontier, active)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 

@@ -1,0 +1,137 @@
+"""The fused K-depth megastep must enumerate exactly what the
+single-step wave path (and the sequential oracle) enumerates, under
+uniform and trap workloads, including limit-aborts that land in the
+middle of a megastep.
+
+``adaptive_prune_threshold`` doubles as the test switch: > 1.0 forces
+every fresh wave through the fused megastep (the EMA never exceeds 1),
+< 0.0 forces the synchronous single-step schedule.
+"""
+import numpy as np
+import pytest
+
+from repro.core.backtrack import backtrack_deadend
+from repro.core.vectorized import WaveScheduler
+from repro.data.graph_gen import (er_labeled_graph, query_set,
+                                  random_walk_query, trap_graph)
+
+ALWAYS_DEEP = 2.0
+NEVER_DEEP = -1.0
+
+
+def embset(embs):
+    return set(frozenset(enumerate(e.tolist())) for e in embs)
+
+
+def run_batch(data, queries, *, megastep_depth, threshold, limit=None,
+              n_slots=4, wave_size=32, kpr=4):
+    sched = WaveScheduler(data, n_slots=n_slots, wave_size=wave_size,
+                          kpr=kpr, megastep_depth=megastep_depth,
+                          adaptive_prune_threshold=threshold)
+    qids = [sched.submit(q, limit=limit) for q in queries]
+    sched.run()
+    return [sched.finished.pop(qid) for qid in qids]
+
+
+def test_megastep_matches_oracle_uniform():
+    """Forced K=4 megastep vs the sequential oracle on mixed traffic."""
+    data = er_labeled_graph(35, 100, 3, seed=11)
+    queries = query_set(data, 4, 10, seed=5)
+    got = run_batch(data, queries, megastep_depth=4,
+                    threshold=ALWAYS_DEEP)
+    for res, q in zip(got, queries):
+        ref = backtrack_deadend(q, data, limit=None)
+        assert embset(res.embeddings) == embset(ref.embeddings)
+        assert not res.stats.aborted
+
+
+def test_megastep_matches_single_step_path():
+    """K>1 and K=1 must produce identical embedding sets per query —
+    the megastep is a schedule change, never a result change."""
+    data = er_labeled_graph(32, 90, 2, seed=3)
+    queries = query_set(data, 4, 8, seed=9)
+    deep = run_batch(data, queries, megastep_depth=5,
+                     threshold=ALWAYS_DEEP)
+    single = run_batch(data, queries, megastep_depth=1,
+                       threshold=NEVER_DEEP)
+    for a, b in zip(deep, single):
+        assert embset(a.embeddings) == embset(b.embeddings)
+        assert a.stats.found == b.stats.found
+
+
+def test_megastep_trap_exact_with_inloop_stores():
+    """Trap workload under forced deep mode: the in-loop Lemma-1 stores
+    and the host Lemma-4 resolution must stay exact together."""
+    query, data = trap_graph(n_b=20, n_c=20, n_good=2, tail_len=2, seed=0)
+    got = run_batch(data, [query, query], megastep_depth=3,
+                    threshold=ALWAYS_DEEP, wave_size=16)
+    ref = backtrack_deadend(query, data, limit=None)
+    for res in got:
+        assert embset(res.embeddings) == embset(ref.embeddings)
+        assert res.stats.deadend_prunes > 0      # learning still active
+        assert res.stats.patterns_stored > 0
+
+
+def test_megastep_limit_abort_mid_flight():
+    """A limit hit by embeddings found *inside* a megastep must abort
+    with exactly ``limit`` results, all of them valid embeddings."""
+    data = er_labeled_graph(30, 90, 2, seed=3)
+    query = random_walk_query(data, 3, seed=4)
+    full = run_batch(data, [query], megastep_depth=4,
+                     threshold=ALWAYS_DEEP)[0]
+    if full.stats.found <= 5:
+        pytest.skip("query too small to exercise the limit")
+    lim = run_batch(data, [query], megastep_depth=4,
+                    threshold=ALWAYS_DEEP, limit=5)[0]
+    assert lim.stats.found == 5
+    assert len(lim.embeddings) == 5
+    assert lim.stats.aborted and lim.stats.abort_reason == "limit"
+    assert embset(lim.embeddings) <= embset(full.embeddings)
+
+
+def test_megastep_rows_budget_abort():
+    """max_rows eviction still works when rows are created K levels at a
+    time (the budget may overshoot by at most one megastep)."""
+    query, data = trap_graph(n_b=20, n_c=20, n_good=2, tail_len=2, seed=1)
+    sched = WaveScheduler(data, n_slots=2, wave_size=16, kpr=4,
+                          megastep_depth=4,
+                          adaptive_prune_threshold=ALWAYS_DEEP)
+    doomed = sched.submit(query, limit=None, max_rows=10)
+    sched.run()
+    res = sched.finished.pop(doomed)
+    assert res.stats.aborted and res.stats.abort_reason == "rows"
+
+
+def test_megastep_neighbors_survive_eviction():
+    """An aborted query mid-megastep must not corrupt queries sharing
+    its waves (in-flight rows of the evicted slot are dropped)."""
+    data = er_labeled_graph(35, 100, 3, seed=11)
+    queries = query_set(data, 4, 6, seed=5)
+    sched = WaveScheduler(data, n_slots=4, wave_size=32, kpr=4,
+                          megastep_depth=4,
+                          adaptive_prune_threshold=ALWAYS_DEEP)
+    doomed = sched.submit(queries[0], limit=None, max_rows=1)
+    healthy = [sched.submit(q, limit=None) for q in queries]
+    sched.run()
+    d = sched.finished.pop(doomed)
+    assert d.stats.aborted and d.stats.abort_reason == "rows"
+    for sqid, q in zip(healthy, queries):
+        res = sched.finished.pop(sqid)
+        ref = backtrack_deadend(q, data, limit=None)
+        assert not res.stats.aborted
+        assert embset(res.embeddings) == embset(ref.embeddings)
+
+
+def test_adaptive_depth_falls_back_on_trap():
+    """The prune-rate EMA must keep a failure-dominated workload on the
+    tight single-step cadence (pruning effectiveness ~ the single-step
+    schedule), while staying exact."""
+    query, data = trap_graph(n_b=40, n_c=40, n_good=2, tail_len=2, seed=0)
+    sched = WaveScheduler(data, n_slots=1, wave_size=64, kpr=8,
+                          megastep_depth=6)     # default adaptivity
+    qid = sched.submit(query, limit=None)
+    sched.run()
+    res = sched.finished.pop(qid)
+    ref = backtrack_deadend(query, data, limit=None)
+    assert embset(res.embeddings) == embset(ref.embeddings)
+    assert sched._prune_ema > sched.adaptive_prune_threshold
