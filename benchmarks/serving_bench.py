@@ -8,7 +8,9 @@ DESIGN.md §4). Tracks the serving-perf trajectory across PRs:
     queries/sec, mean + steady-state wave occupancy, prune rate,
     p50/p99 latency, timeouts, host-vs-device time split, and the
     megastep depth the run used (so trajectories stay comparable when
-    the fusion depth changes between PRs).
+    the fusion depth changes between PRs). A distributed workload
+    (shard-as-segments, DESIGN.md §3) additionally records qps and
+    prune rate vs shard count on the trap query.
 
     PYTHONPATH=src python -m benchmarks.serving_bench
     PYTHONPATH=src python -m benchmarks.serving_bench --smoke   # CI
@@ -134,6 +136,40 @@ def run(csv_rows: list | None = None, budget_s: float = 90.0,
         "host_time_s": trep["host_time_s"],
     }
 
+    # --- distributed workload: one heavy trap query matched as
+    # shard-as-segments (DESIGN.md §3) across increasing shard counts —
+    # qps and prune rate vs n_shards track that full Δ sharing holds the
+    # single-engine prune rate while shards add wave occupancy.
+    from repro.core.distributed import DistributedMatcher
+    dist_rows = []
+    shard_counts = (1, 2) if smoke else (1, 2, 4, 8)
+    dnb = 12 if smoke else 40
+    dq, dg = trap_graph(n_b=dnb, n_c=dnb, n_good=2, tail_len=2, seed=0)
+    for n_shards in shard_counts:
+        dm = DistributedMatcher(dg, n_shards=n_shards,
+                                wave_size=(32 if smoke else 64),
+                                kpr=(4 if smoke else 8))
+        dm.match(dq, limit=None)                     # warm-up
+        dm = DistributedMatcher(dg, n_shards=n_shards,
+                                wave_size=(32 if smoke else 64),
+                                kpr=(4 if smoke else 8))
+        t0 = time.perf_counter()
+        dres = dm.match(dq, limit=None)
+        dwall = time.perf_counter() - t0
+        prunes = dres.stats.deadend_prunes
+        rows = dres.stats.rows_created
+        dist_rows.append({
+            "n_shards": n_shards,
+            "wall_time_s": dwall,
+            "queries_per_sec": 1.0 / dwall if dwall > 0 else 0.0,
+            "embeddings": dres.stats.found,
+            "deadend_prunes": prunes,
+            "rows_created": rows,
+            "prune_rate": prunes / max(1, prunes + rows),
+            "steals": dres.stats.steals,
+        })
+    payload["distributed_workload"] = dist_rows
+
     if out_path is not None:
         out_path.write_text(json.dumps(payload, indent=2) + "\n")
     if csv_rows is not None:
@@ -151,6 +187,13 @@ def run(csv_rows: list | None = None, budget_s: float = 90.0,
             f"qps={t['queries_per_sec']:.1f};"
             f"occ={t['mean_wave_occupancy']:.2f};"
             f"prune_rate={t['prune_rate']:.2f}"))
+        d = payload["distributed_workload"][-1]
+        csv_rows.append((
+            f"distributed_trap{dnb}_s{d['n_shards']}",
+            d["wall_time_s"] * 1e6,
+            f"qps={d['queries_per_sec']:.1f};"
+            f"prune_rate={d['prune_rate']:.2f};"
+            f"steals={d['steals']}"))
     return payload
 
 

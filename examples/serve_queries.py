@@ -1,8 +1,12 @@
 """End-to-end driver (the paper's kind of system = a query engine):
 serve a batched subgraph-matching workload through the shared-wave
 scheduler — many concurrent queries packed into each device wave — with
-SLO + wave-occupancy reporting, then distributed search-tree
-partitioning with pattern sharing.
+SLO + wave-occupancy reporting. One heavy trap query rides the same
+batch with ``parallelism=8`` (shard-as-segments, DESIGN.md §3): its
+root space splits into 8 root segments that share one slot-private Δ
+table and steal work from each other, and the run prints per-shard
+row/item/steal stats. A distributed trap match with full Δ sharing
+closes the demo.
 
     PYTHONPATH=src python examples/serve_queries.py [--n-queries 50]
 """
@@ -54,18 +58,31 @@ def main():
     print(f"data graph: |V|={data.n} |E|={data.n_edges} "
           f"labels={data.n_labels}")
     queries = query_set(data, args.query_size, args.n_queries, seed=42)
+    # one heavy query rides the mixed batch as 8 intra-query shards:
+    # a short walk query with the widest root-candidate range (the
+    # min-candidate matching order keeps typical roots narrow, so pick
+    # the fattest search tree worth splitting across shards)
+    from repro.core.backtrack import _prepare
+    from repro.data.graph_gen import random_walk_query
+    heavy = max((random_walk_query(data, 3, seed=s) for s in range(8)),
+                key=lambda q: len(_prepare(q, data, None, None)[0][0]))
+    heavy_i = len(queries)
+    queries = queries + [heavy]
+    par = [1] * len(queries)
+    par[heavy_i] = 8
 
     # warm-up: compile the wave programs before taking timed traffic —
     # a cold megastep compile would eat the per-query time budgets
     QueryServer(data, backend=args.backend, limit=100,
                 time_budget_s=60.0, n_slots=args.n_slots,
-                wave_size=args.wave_size).submit_batch(queries[:4])
+                wave_size=args.wave_size).submit_batch(
+                    queries[:4] + [heavy], parallelism=[1, 1, 1, 1, 8])
     server = QueryServer(data, backend=args.backend, limit=1000,
                          time_budget_s=2.0, n_slots=args.n_slots,
                          wave_size=args.wave_size)
     import time
     t0 = time.perf_counter()
-    results = server.submit_batch(queries)
+    results = server.submit_batch(queries, parallelism=par)
     wall = time.perf_counter() - t0
     found = sum(r.n_found for r in results)
     dnf = sum(r.timed_out for r in results)
@@ -84,15 +101,26 @@ def main():
                  f"peak_concurrent={rep['peak_active']} "
                  f"prune_rate={rep['prune_rate']:.2f}")
     print(line)
+    if args.backend == "engine":
+        hs = results[heavy_i].stats
+        total = max(1, hs.rows_created)
+        occ = [f"{r / total:.0%}" for r in (hs.shard_rows or [])]
+        print(f"heavy query #{heavy_i} (parallelism=8): "
+              f"{hs.rows_created} rows, {hs.steals} steals | per-shard "
+              f"rows {hs.shard_rows} (occupancy {occ}) "
+              f"items {hs.shard_items}")
     print(_baseline_delta(rep, len(results), wall))
 
-    # distributed matching of one hard query with pattern sharing
+    # distributed matching of one hard query: shard-as-segments with
+    # full Δ sharing (every mu learned by one shard prunes the others)
     q, g = trap_graph(n_b=120, n_c=120, n_good=2, tail_len=2)
     dm = DistributedMatcher(g, n_shards=4, wave_size=128, kpr=8)
     res = dm.match(q, limit=None)
     print(f"\ndistributed trap(120): {res.stats.found} embeddings, "
           f"{res.stats.recursions} rows across 4 shards, "
-          f"{res.stats.deadend_prunes} prunes (patterns shared)")
+          f"{res.stats.deadend_prunes} prunes (full Δ shared), "
+          f"{res.stats.steals} steals, per-shard rows "
+          f"{res.stats.shard_rows}")
 
 
 if __name__ == "__main__":

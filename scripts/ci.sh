@@ -14,7 +14,12 @@ if [ "$#" -gt 0 ]; then
     exec python -m pytest -x -q "$@"
 fi
 python -m pytest -x -q
+# distributed suite re-run on its own (kept explicit so a marker or
+# selection change in the main invocation can never silently drop the
+# shard-as-segments / elastic-restore coverage)
+python -m pytest tests/test_distributed.py -q
 # tiny-size serving benchmark smoke run: exercises the megastep + async
-# pipeline end to end (does not touch the committed BENCH_serving.json)
+# pipeline and the distributed shard-as-segments workload end to end
+# (does not touch the committed BENCH_serving.json)
 python -m benchmarks.serving_bench --smoke >/dev/null
 echo "serving_bench --smoke: OK"

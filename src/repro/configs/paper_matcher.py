@@ -1,9 +1,13 @@
 """The paper's own workload as an 'architecture': the wave-engine device
 program over production-scale matching instances.
 
-Shape cells size the device arrays of ``core.engine_step.expand_wave``:
-the data-graph bitmap, wave width, and dead-end table. These are the
-dry-run/roofline cells for the paper's technique itself.
+Shape cells size the device arrays of the *real* serving program,
+``core.engine_step.expand_wave_mq``: the data-graph bitmap, the
+slot-stacked query/table banks, wave width, and the slot/depth lanes —
+the same multi-query wave the shared-wave scheduler (and the distributed
+shard-as-segments matcher on top of it) dispatches, not the 1-slot
+facade. These are the dry-run/roofline cells for the paper's technique
+itself.
 """
 import dataclasses
 
@@ -16,6 +20,7 @@ class MatcherConfig:
     n_vertices: int          # data graph |V|
     wave_size: int
     kpr: int
+    n_slots: int = 16        # concurrent resident queries (bank slots)
     n_query_max: int = 64
 
 
@@ -23,18 +28,21 @@ FULL = MatcherConfig(name="paper-matcher", n_vertices=1_048_576,
                      wave_size=8192, kpr=16)
 
 SMOKE = MatcherConfig(name="matcher-smoke", n_vertices=512,
-                      wave_size=64, kpr=4)
+                      wave_size=64, kpr=4, n_slots=4)
 
 
 def spec() -> ArchSpec:
     shapes = (
         ShapeCell("yeast_scale", "matcher",
-                  dict(n_vertices=4096, wave_size=4096, kpr=16)),
+                  dict(n_vertices=4096, wave_size=4096, kpr=16,
+                       n_slots=16)),
         ShapeCell("web_scale", "matcher",
-                  dict(n_vertices=1_048_576, wave_size=8192, kpr=16)),
+                  dict(n_vertices=1_048_576, wave_size=8192, kpr=16,
+                       n_slots=16)),
     )
     return ArchSpec(arch_id="paper-matcher", family="matcher", config=FULL,
                     smoke_config=SMOKE, shapes=shapes,
-                    notes="expand_wave lowered on the production mesh; "
-                          "frontier sharded over data axis, graph bitmap "
-                          "+ dead-end table sharded over model axis")
+                    notes="expand_wave_mq lowered on the production mesh; "
+                          "frontier + slot/depth lanes sharded over data "
+                          "axis, graph bitmap + dead-end table bank "
+                          "sharded over model axis")

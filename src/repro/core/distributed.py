@@ -1,24 +1,40 @@
-"""Distributed subgraph matching: search-tree partitioning, pattern
-sharing, work stealing, checkpoint/restart, elastic repartitioning.
+"""Distributed subgraph matching: shard-as-segments on the shared-wave
+scheduler, with sound full-Δ sharing, work stealing, and elastic
+checkpoint/restore (DESIGN.md §3).
 
-Parallel model (DESIGN.md §3):
+Parallel model:
   * the root-candidate space of one query is range-partitioned into
-    shards (mesh "model" axis / workers);
-  * each shard runs its own :class:`WaveEngine` waves with a local
-    dead-end table — correctness never depends on other shards (patterns
-    only prune);
-  * periodically, shards exchange their most recently learned patterns —
-    a *lossy but sound* compressed collective (the analogue of gradient
-    compression: pruning power degrades gracefully with compression);
-  * a shard that finishes early steals unprocessed root ranges from the
-    most-loaded shard (straggler mitigation);
-  * shard progress (done ranges, found embeddings, pattern tables) is
-    checkpointable; restore may change the shard count (elasticity).
+    shards — but a shard is no longer an isolated engine: it is a *root
+    segment* of one resident scheduler query (``parallelism = k``), so
+    every shard rides the megastep, the double-buffered pipeline, and
+    the adaptive-depth machinery of :class:`~repro.core.vectorized
+    .WaveScheduler` for free;
+  * all shards draw φ ids from the scheduler's single pool and write one
+    slot-private dead-end table, so **every** pattern — μ > 0 included —
+    learned by one shard prunes all the others with zero exchange step
+    (the old per-engine architecture had to discard every μ > 0 pattern
+    because φ embedding ids were engine-local);
+  * an idle shard steals by splitting the largest pending work-item
+    range of the most loaded shard (straggler mitigation on row ranges,
+    see ``segments.QueryState.balance_shards``);
+  * progress is checkpointable at segment granularity — unresolved root
+    rows, found embeddings, and the full Δ table (with its hit
+    counters) snapshot to compressed ``.npz``; restore may change the
+    shard count (elasticity) and keeps the learned Δ;
+  * *cross-host* replication (each host runs its own scheduler over a
+    replica of the data graph) exchanges a capped pattern set selected
+    deterministically by Δ hit counters (:func:`select_exchange_patterns`)
+    — every host picks the same set from the same table state, unlike
+    the fixed-seed random sample it replaces.
 
-This container has one physical device, so shards execute as a
-round-robin cooperative schedule on it — the scheduling, stealing, merge,
-and checkpoint logic is exactly what a multi-host launcher drives, and is
-what the tests validate.
+``share_patterns=False`` keeps the pre-unification ablation: each shard
+runs as its *own* scheduler query in its own slot with a private table
+and no sharing at all — the baseline the tests compare against.
+
+This container has one physical device, so shards execute as segments of
+one device-shared wave — the seeding, stealing, and checkpoint logic is
+exactly what a multi-host launcher drives, and is what the tests
+validate.
 """
 from __future__ import annotations
 
@@ -28,143 +44,273 @@ import pathlib
 
 import numpy as np
 
-from .backtrack import MatchResult, SearchStats, _prepare
+from .backtrack import MatchResult, _prepare
+from .engine_step import TableArrays
 from .graph import Graph
-from .vectorized import WaveEngine
+from .segments import EngineStats
+from .vectorized import WaveScheduler
+
+CHECKPOINT_VERSION = 2
+_TABLE_KEYS = ("phi", "mu", "mask", "valid")
+
+
+def select_exchange_patterns(table, hits: np.ndarray, top_k: int,
+                             transferable_only: bool = True):
+    """Deterministic top-k pattern selection for the cross-host exchange
+    (DESIGN.md §3).
+
+    Entries are ranked by Δ hit counter (descending — the patterns that
+    actually pruned rows travel first), ties broken by (order position,
+    vertex) ascending, so every host selects the identical set from the
+    same table state. This replaces the old fixed-seed
+    ``np.random.default_rng(0)`` sample, which was only accidentally
+    deterministic and ignored pattern usefulness entirely.
+
+    Within one host all shards already share the full table
+    (shard-as-segments), so this export exists only for cross-host
+    replication. μ > 0 patterns reference the sending host's φ
+    numbering: they are sound to import only if the receiver raised its
+    φ floor above the sender's ids (checkpoint restore does); otherwise
+    keep ``transferable_only=True`` and ship μ == 0 patterns, whose
+    match condition Φ[0] == 0 holds in every engine.
+
+    ``table`` is a TableArrays or a dict of numpy arrays. Returns
+    ``(exported_table_dict, exported_hits, (pos, vert))`` where the
+    table dict holds only the selected entries (zeros elsewhere).
+    """
+    arr = {k: np.asarray(table[k] if isinstance(table, dict)
+                         else getattr(table, k)) for k in _TABLE_KEYS}
+    hits = np.asarray(hits)
+    sel = arr["valid"].copy()
+    if transferable_only:
+        sel &= arr["mu"] == 0
+    pos, vert = np.nonzero(sel)
+    if top_k is not None and len(pos) > top_k:
+        h = hits[pos, vert]
+        rank = np.lexsort((vert, pos, -h))      # -hits, then pos, vert
+        keep = np.sort(rank[:top_k])
+        pos, vert = pos[keep], vert[keep]
+    out = {k: np.zeros_like(arr[k]) for k in _TABLE_KEYS}
+    for k in _TABLE_KEYS:
+        out[k][pos, vert] = arr[k][pos, vert]
+    out_hits = np.zeros_like(hits)
+    out_hits[pos, vert] = hits[pos, vert]
+    return out, out_hits, (pos, vert)
 
 
 @dataclasses.dataclass
-class ShardState:
-    shard_id: int
-    pending_ranges: list[tuple[int, int]]   # root-candidate index ranges
-    found: list[np.ndarray]
-    done: bool = False
+class Checkpoint:
+    """Elastic snapshot of one distributed match (segment granularity).
+
+    ``pending_roots`` are *data-vertex ids* of root candidates whose
+    subtree was not fully resolved at snapshot time — restore re-seeds
+    exactly those roots (onto any shard count) and deduplicates
+    re-enumerated embeddings. ``table``/``hits`` carry the learned Δ;
+    ``phi_floor`` is the writer's φ ceiling, which the restoring
+    scheduler reserves so μ > 0 patterns stay sound.
+    """
+    version: int
+    pending_roots: np.ndarray | None          # int32 [P] (v2)
+    embeddings: list                          # list of int32 [n_query]
+    table: dict | None                        # numpy TableArrays fields
+    hits: np.ndarray | None                   # int64 [N_PAD, V]
+    phi_floor: int = 1
+    n_shards: int = 0
+    # legacy (v1 JSON): root-candidate *index* ranges instead of ids
+    pending_index_ranges: list | None = None
 
 
 class DistributedMatcher:
-    """Search-tree-partitioned matching with pattern sharing."""
+    """Search-tree-partitioned matching as a thin front-end over the
+    shared-wave scheduler (shard-as-segments)."""
 
     def __init__(self, data: Graph, n_shards: int = 4,
                  wave_size: int = 256, kpr: int = 16,
                  share_patterns: bool = True,
-                 share_top_k: int = 4096):
+                 share_top_k: int = 4096,
+                 megastep_depth: int = 6,
+                 adaptive_prune_threshold: float = 0.05,
+                 checkpoint_every_waves: int = 8):
         self.data = data
-        self.n_shards = n_shards
+        self.n_shards = int(n_shards)
         self.share_patterns = share_patterns
         self.share_top_k = share_top_k
-        self.engines = [WaveEngine(data, wave_size=wave_size, kpr=kpr)
-                        for _ in range(n_shards)]
-
-    # -- pattern exchange -------------------------------------------------
-    def _merge_tables(self, tables):
-        """Union the shards' *transferable* dead-end patterns.
-
-        The numeric representation's embedding ids (φ) are engine-local,
-        so only μ == 0 patterns — whose match condition Φ[0] == 0 holds in
-        every engine, i.e. 'mapping (pos, v) is dead regardless of
-        ancestors' — may cross shards (soundness; see DESIGN.md §3). On a
-        real mesh this is a hierarchical all-gather (intra-pod ring, then
-        inter-pod) capped at ``share_top_k`` entries per shard: a lossy
-        but sound compressed collective.
-        """
-        import jax.numpy as jnp
-        from .engine_step import TableArrays, store_patterns
-        merged = TableArrays.empty(self.data.n)
-        for t in tables:
-            valid = np.asarray(t.valid) & (np.asarray(t.mu) == 0)
-            pos, vert = np.nonzero(valid)
-            if len(pos) == 0:
-                continue
-            if len(pos) > self.share_top_k:
-                sel = np.random.default_rng(0).choice(
-                    len(pos), self.share_top_k, replace=False)
-                pos, vert = pos[sel], vert[sel]
-            merged = store_patterns(
-                merged,
-                jnp.asarray(pos.astype(np.int32)),
-                jnp.asarray(vert.astype(np.int32)),
-                jnp.asarray(np.asarray(t.phi)[pos, vert]),
-                jnp.asarray(np.asarray(t.mu)[pos, vert]),
-                jnp.asarray(np.asarray(t.mask)[pos, vert]),
-                jnp.ones(len(pos), bool))
-        return merged
+        self.checkpoint_every_waves = int(checkpoint_every_waves)
+        # shared mode: ONE resident query whose n_shards root segments
+        # share one slot-private table. Ablation mode: one isolated
+        # scheduler query (own slot, own table) per shard.
+        self.scheduler = WaveScheduler(
+            data, n_slots=(1 if share_patterns else self.n_shards),
+            wave_size=wave_size, kpr=kpr, megastep_depth=megastep_depth,
+            adaptive_prune_threshold=adaptive_prune_threshold)
+        self._table: TableArrays | None = None
+        self._hits: np.ndarray | None = None
 
     # -- main entry ---------------------------------------------------------
     def match(self, query: Graph, limit: int | None = 1000,
-              rounds: int = 8, checkpoint_dir: str | None = None
-              ) -> MatchResult:
+              checkpoint_dir: str | None = None, resume: bool = False,
+              max_rows: int | None = None) -> MatchResult:
+        """Match ``query`` across ``n_shards`` intra-query shards.
+
+        ``checkpoint_dir``: snapshot progress every
+        ``checkpoint_every_waves`` scheduler steps (and once at the
+        end). ``resume=True`` restores the latest snapshot from that
+        directory — possibly written under a different shard count —
+        re-seeding only unresolved roots and keeping the learned Δ.
+        ``max_rows`` bounds the row budget (mainly to exercise
+        mid-flight aborts + restore in tests).
+        """
         cand_by_pos, order, _, _ = _prepare(query, self.data, None, None)
-        roots = cand_by_pos[0]
-        n = len(roots)
-        stats = SearchStats()
-        if n == 0:
-            return MatchResult([], stats)
-        # range partition of the root candidates
-        bounds = np.linspace(0, n, self.n_shards + 1).astype(int)
-        shards = [ShardState(i, [(int(bounds[i]), int(bounds[i + 1]))], [])
-                  for i in range(self.n_shards)]
-        chunk = max(1, n // (self.n_shards * max(rounds, 1)))
+        roots = np.asarray(cand_by_pos[0], np.int32)
+        prior = None
+        if resume and checkpoint_dir is not None:
+            prior = self.load_state(checkpoint_dir)
+        if prior is not None:
+            pending = self._pending_roots(prior, roots)
+            if prior.table is not None:
+                self.scheduler.reserve_phi_floor(prior.phi_floor)
+        else:
+            pending = roots
+        prior_embs = list(prior.embeddings) if prior is not None else []
+
+        if len(pending) == 0 or (
+                limit is not None and len(prior_embs) >= limit):
+            return self._merge_result(prior_embs, [], EngineStats(), limit)
+        # the resumed run may re-enumerate duplicates of prior
+        # embeddings (re-seeded pending roots), so its raw limit must
+        # leave room for them: dedup happens on the merged union.
+        run_limit = (None if limit is None
+                     else limit + len(prior_embs))
+        sub_cand = self._restrict_roots(cand_by_pos, order, pending,
+                                        query.n)
+        if not self.share_patterns:
+            res = self._match_isolated(query, sub_cand, order, run_limit)
+            return self._merge_result(prior_embs, res.embeddings,
+                                      res.stats, limit)
+
+        sched = self.scheduler
+        seed_table = None
+        seed_hits = None
+        if prior is not None and prior.table is not None:
+            import jax.numpy as jnp
+            seed_table = TableArrays(
+                **{k: jnp.asarray(prior.table[k]) for k in _TABLE_KEYS})
+            seed_hits = prior.hits
+        qid = sched.submit(query, limit=run_limit, cand=sub_cand,
+                           order=order, parallelism=self.n_shards,
+                           max_rows=max_rows, seed_table=seed_table,
+                           seed_hits=seed_hits, keep_table=True)
+        waves = 0
+        while sched.step():
+            waves += 1
+            if (checkpoint_dir is not None
+                    and waves % self.checkpoint_every_waves == 0):
+                ck = self._snapshot(qid, prior_embs)
+                if ck is not None:
+                    self.save_state(checkpoint_dir, ck)
+        res = sched.finished.pop(qid)
+        sched.poll()
+        self._table = sched.tables.pop(qid, None)
+        self._hits = sched.table_hits.pop(qid, None)
+        out = self._merge_result(prior_embs, res.embeddings, res.stats,
+                                 limit)
+        # final snapshot only on clean completion: an aborted run's
+        # segments are already evicted, so the last periodic snapshot
+        # (still on disk) is the correct restore point.
+        if checkpoint_dir is not None and not res.stats.aborted:
+            self.save_state(checkpoint_dir, Checkpoint(
+                version=CHECKPOINT_VERSION,
+                pending_roots=np.zeros(0, np.int32),
+                embeddings=[np.asarray(e, np.int32)
+                            for e in out.embeddings],
+                table=self._table_dict(), hits=self._hits,
+                phi_floor=self.scheduler.pool.id_counter,
+                n_shards=self.n_shards))
+        return out
+
+    # -- pattern export (cross-host exchange) -------------------------------
+    def export_patterns(self, top_k: int | None = None,
+                        transferable_only: bool = True):
+        """Export the last match's Δ for cross-host replication, capped
+        at ``top_k`` (default ``share_top_k``) entries selected by
+        :func:`select_exchange_patterns` (hit-counter ranked,
+        deterministic)."""
+        if self._table is None:
+            raise RuntimeError("no completed shared match to export")
+        hits = (self._hits if self._hits is not None
+                else np.zeros(np.asarray(self._table.valid).shape,
+                              np.int64))
+        return select_exchange_patterns(
+            self._table, hits,
+            self.share_top_k if top_k is None else top_k,
+            transferable_only=transferable_only)
+
+    # -- internals ----------------------------------------------------------
+    @staticmethod
+    def _pending_roots(prior: Checkpoint, roots: np.ndarray) -> np.ndarray:
+        if prior.pending_roots is not None:
+            return np.asarray(prior.pending_roots, np.int32)
+        # legacy v1: index ranges into the (deterministic) root order
+        pend = []
+        for lo, hi in prior.pending_index_ranges or []:
+            pend.append(roots[int(lo):int(hi)])
+        return (np.concatenate(pend).astype(np.int32) if pend
+                else np.zeros(0, np.int32))
+
+    @staticmethod
+    def _restrict_roots(cand_by_pos, order, pending: np.ndarray,
+                        n: int) -> list:
+        """Query-vertex-indexed candidate list with the root position
+        restricted to ``pending`` (cand_by_pos is position-indexed)."""
+        sub_cand: list = [None] * n
+        for d in range(n):
+            sub_cand[int(order[d])] = (pending if d == 0
+                                       else cand_by_pos[d])
+        return sub_cand
+
+    def _match_isolated(self, query: Graph, sub_cand: list,
+                        order: np.ndarray, limit: int | None) -> MatchResult:
+        """Ablation (``share_patterns=False``): one isolated scheduler
+        query per shard — private slot, private table, no pattern flow
+        between shards. Root ranges are disjoint so results just
+        concatenate."""
+        sched = self.scheduler
+        roots = np.asarray(sub_cand[int(order[0])], np.int32)
+        bounds = np.linspace(0, len(roots),
+                             self.n_shards + 1).astype(int)
+        qids = []
+        for i in range(self.n_shards):
+            lo, hi = int(bounds[i]), int(bounds[i + 1])
+            if hi <= lo:
+                continue
+            shard_cand = list(sub_cand)
+            shard_cand[int(order[0])] = roots[lo:hi]
+            qids.append(sched.submit(query, limit=limit, cand=shard_cand,
+                                     order=order))
+        sched.run()
+        stats = EngineStats()
         embeddings: list[np.ndarray] = []
-        shared_table = None
+        for qid in qids:
+            r = sched.finished.pop(qid)
+            embeddings.extend(r.embeddings)
+            stats.recursions += r.stats.recursions
+            stats.rows_created += r.stats.rows_created
+            stats.deadend_prunes += r.stats.deadend_prunes
+            stats.injectivity_fails += r.stats.injectivity_fails
+            stats.patterns_stored += r.stats.patterns_stored
+            stats.aborted |= r.stats.aborted
+        sched.poll()
+        return MatchResult(embeddings, stats)
 
-        def shard_step(sh: ShardState, eng: WaveEngine) -> bool:
-            """Process one stolen-or-own root chunk; True if worked."""
-            if not sh.pending_ranges:
-                return False
-            lo, hi = sh.pending_ranges.pop()
-            take = min(chunk, hi - lo)
-            if hi - lo > take:
-                sh.pending_ranges.append((lo + take, hi))
-            sub_roots = roots[lo:lo + take]
-            # rebuild a query-vertex-indexed candidate list with the
-            # restricted root range (cand_by_pos is position-indexed)
-            sub_cand: list[np.ndarray] = [None] * query.n
-            for d in range(query.n):
-                sub_cand[int(order[d])] = (sub_roots if d == 0
-                                           else cand_by_pos[d])
-            res = eng.match(query, limit=None, cand=sub_cand, order=order,
-                            seed_table=shared_table)
-            sh.found.extend(res.embeddings)
-            stats.recursions += res.stats.recursions
-            stats.deadend_prunes += res.stats.deadend_prunes
-            return True
-
-        round_i = 0
-        while any(sh.pending_ranges for sh in shards):
-            round_i += 1
-            for sh, eng in zip(shards, self.engines):
-                shard_step(sh, eng)
-            # work stealing: idle shards take from the most loaded
-            loads = [sum(hi - lo for lo, hi in sh.pending_ranges)
-                     for sh in shards]
-            for i, sh in enumerate(shards):
-                if not sh.pending_ranges and max(loads) > chunk:
-                    donor = shards[int(np.argmax(loads))]
-                    lo, hi = donor.pending_ranges.pop()
-                    mid = (lo + hi) // 2
-                    if mid > lo:
-                        donor.pending_ranges.append((lo, mid))
-                    sh.pending_ranges.append((mid, hi))
-                    loads = [sum(h - l for l, h in s.pending_ranges)
-                             for s in shards]
-            # pattern exchange
-            if self.share_patterns:
-                tables = [getattr(e, "_table", None) for e in self.engines]
-                tables = [t for t in tables if t is not None]
-                if tables:
-                    shared_table = self._merge_tables(tables)
-            total_found = sum(len(sh.found) for sh in shards)
-            if limit is not None and total_found >= limit:
-                break
-            if checkpoint_dir:
-                self.save_state(checkpoint_dir, query, shards)
-
-        for sh in shards:
-            embeddings.extend(sh.found)
-        # global dedup (ranges are disjoint so this is a no-op safety net)
+    @staticmethod
+    def _merge_result(prior_embs: list, new_embs: list, stats,
+                      limit: int | None) -> MatchResult:
+        """Union + dedup (restore re-enumerates roots that were mid-
+        flight at snapshot time; ranges are otherwise disjoint)."""
         seen = set()
-        uniq = []
-        for e in embeddings:
+        uniq: list[np.ndarray] = []
+        for e in list(prior_embs) + list(new_embs):
+            e = np.asarray(e, np.int32)
             key = e.tobytes()
             if key not in seen:
                 seen.add(key)
@@ -174,34 +320,110 @@ class DistributedMatcher:
         stats.found = len(uniq)
         return MatchResult(uniq, stats)
 
+    def _snapshot(self, qid: int, prior_embs: list) -> Checkpoint | None:
+        """Checkpoint a *running* shared match at segment granularity:
+        root rows whose subtree is not fully resolved come back as
+        pending (restore re-explores them and dedups)."""
+        sched = self.scheduler
+        q = next((s for s in sched.pool.slots
+                  if s is not None and s.query_id == qid), None)
+        if q is None or not q.active:
+            return None
+        pending = []
+        for seg in q.segments.values():
+            if seg.depth != 1 or seg.parent_seg[0] >= 0:
+                continue
+            rows = ~seg.resolved
+            if rows.any():
+                pending.append(seg.frontier[rows, 0])
+        pending_roots = (np.concatenate(pending).astype(np.int32)
+                         if pending else np.zeros(0, np.int32))
+        from .engine_step import read_table_slot
+        table = read_table_slot(sched.tb, q.slot)
+        return Checkpoint(
+            version=CHECKPOINT_VERSION, pending_roots=pending_roots,
+            embeddings=([np.asarray(e, np.int32) for e in prior_embs]
+                        + [np.asarray(e, np.int32)
+                           for e in q.embeddings]),
+            table={k: np.asarray(getattr(table, k))
+                   for k in _TABLE_KEYS},
+            hits=(q.hit_counts.copy()
+                  if q.hit_counts is not None else None),
+            phi_floor=sched.pool.id_counter, n_shards=self.n_shards)
+
+    def _table_dict(self) -> dict | None:
+        if self._table is None:
+            return None
+        return {k: np.asarray(getattr(self._table, k))
+                for k in _TABLE_KEYS}
+
     # -- checkpoint / elastic restore ---------------------------------------
     @staticmethod
-    def save_state(path: str, query: Graph, shards: list[ShardState]):
+    def save_state(path: str, ck: Checkpoint) -> None:
+        """Write a compressed ``state.npz`` snapshot (atomic rename).
+
+        Format v2: ``version``, ``n_shards``, ``phi_floor``,
+        ``pending_roots`` (data-vertex ids), ``embeddings`` (int32
+        [n_found, n_query]), and the Δ table arrays + hit counters. The
+        shard count is informational — restore redistributes pending
+        roots over whatever ``n_shards`` the restoring matcher uses.
+        """
         p = pathlib.Path(path)
         p.mkdir(parents=True, exist_ok=True)
-        state = {
-            "shards": [
-                {"shard_id": s.shard_id,
-                 "pending": s.pending_ranges,
-                 "found": [e.tolist() for e in s.found]}
-                for s in shards],
+        embs = (np.stack(ck.embeddings).astype(np.int32)
+                if ck.embeddings else np.zeros((0, 0), np.int32))
+        payload = {
+            "version": np.int64(ck.version),
+            "n_shards": np.int64(ck.n_shards),
+            "phi_floor": np.int64(ck.phi_floor),
+            "pending_roots": np.asarray(
+                ck.pending_roots if ck.pending_roots is not None else [],
+                np.int32),
+            "embeddings": embs,
         }
-        tmp = p / "state.json.tmp"
-        tmp.write_text(json.dumps(state))
-        tmp.rename(p / "state.json")
+        if ck.table is not None:
+            for k in _TABLE_KEYS:
+                payload[f"table_{k}"] = np.asarray(ck.table[k])
+            payload["table_hits"] = np.asarray(
+                ck.hits if ck.hits is not None
+                else np.zeros(ck.table["valid"].shape, np.int64))
+        tmp = p / "state.npz.tmp"
+        with open(tmp, "wb") as f:
+            np.savez_compressed(f, **payload)
+        tmp.rename(p / "state.npz")
 
     @staticmethod
-    def load_state(path: str, n_shards: int) -> list[ShardState]:
-        """Elastic restore: redistribute pending ranges over ``n_shards``
-        (which may differ from the saved shard count)."""
-        state = json.loads((pathlib.Path(path) / "state.json").read_text())
-        pending = []
-        found: list[np.ndarray] = []
-        for s in state["shards"]:
-            pending.extend([tuple(r) for r in s["pending"]])
-            found.extend(np.asarray(e, np.int32) for e in s["found"])
-        shards = [ShardState(i, [], []) for i in range(n_shards)]
-        for i, r in enumerate(pending):
-            shards[i % n_shards].pending_ranges.append(r)
-        shards[0].found = found
-        return shards
+    def load_state(path: str) -> Checkpoint | None:
+        """Load the latest snapshot. Prefers ``state.npz`` (v2); falls
+        back to the one-release legacy ``state.json`` (v1: root-index
+        ranges, no Δ table)."""
+        p = pathlib.Path(path)
+        npz = p / "state.npz"
+        if npz.exists():
+            with np.load(npz) as z:
+                table = None
+                hits = None
+                if "table_valid" in z.files:
+                    table = {k: z[f"table_{k}"] for k in _TABLE_KEYS}
+                    hits = z["table_hits"]
+                embs = z["embeddings"]
+                return Checkpoint(
+                    version=int(z["version"]),
+                    pending_roots=z["pending_roots"].astype(np.int32),
+                    embeddings=[e for e in embs.astype(np.int32)],
+                    table=table, hits=hits,
+                    phi_floor=int(z["phi_floor"]),
+                    n_shards=int(z["n_shards"]))
+        legacy = p / "state.json"
+        if legacy.exists():
+            state = json.loads(legacy.read_text())
+            ranges = []
+            found: list[np.ndarray] = []
+            for s in state["shards"]:
+                ranges.extend([tuple(r) for r in s["pending"]])
+                found.extend(np.asarray(e, np.int32) for e in s["found"])
+            return Checkpoint(version=1, pending_roots=None,
+                              embeddings=found, table=None, hits=None,
+                              pending_index_ranges=ranges,
+                              n_shards=len(state["shards"]))
+        return None

@@ -11,10 +11,11 @@ Multi-query waves (DESIGN.md §2): per-query state lives in *banks* stacked
 along a leading slot axis — :class:`QueryBank` ``[S, ...]`` and
 :class:`TableBank` ``[S, ...]`` — and every wave row carries a
 ``query_slot`` and a ``depth`` lane, so one jitted program expands a wave
-whose rows belong to many concurrent queries at different depths. The
-single-query entry points (``expand_wave`` &c., used by the launch dry-run
-and the distributed pattern merge) are thin wrappers over the same
-implementation with ``S == 1``.
+whose rows belong to many concurrent queries at different depths (and,
+with shard-as-segments, to many shards of the same query). The
+single-query entry points (``expand_wave`` &c.) remain as thin S == 1
+wrappers for sequential-style callers and tests; the launch dry-run
+lowers the real multi-query program.
 
 Design notes (see DESIGN.md §2):
   * adjacency and candidate sets are packed uint32 bitmaps; Eq. 2 becomes
@@ -131,6 +132,9 @@ class WaveResultMQ(NamedTuple):
     leftover: jax.Array          # uint32 [F, W]
     n_pruned: jax.Array          # int32 [F] dead-end prunes per row
     n_inj: jax.Array             # int32 [F] injectivity kills per row
+    pruned_v: jax.Array          # int32 [F, KPR] Δ-pruned children (-1 pad)
+    #   the host folds pruned_v into per-key hit counters, which rank
+    #   the deterministic cross-host pattern exchange (DESIGN.md §3)
 
 
 def _popcount_rows(words: jax.Array) -> jax.Array:
@@ -409,6 +413,7 @@ def _expand_rows(g: GraphArrays, qb: QueryBank, tb: TableBank,
         leftover=leftover,
         n_pruned=jnp.where(row_valid, prune.sum(axis=1), 0),
         n_inj=jnp.where(row_valid, n_inj_per_row, 0),
+        pruned_v=jnp.where(prune & row_valid[:, None], child_v, -1),
     )
 
 
@@ -440,7 +445,7 @@ def expand_wave_mq(g: GraphArrays, qb: QueryBank, tb: TableBank,
 def extract_more_mq(tb: TableBank, phi: jax.Array, query_slot: jax.Array,
                     depth: jax.Array, leftover: jax.Array, kpr: int = 64
                     ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array,
-                               jax.Array, jax.Array]:
+                               jax.Array, jax.Array, jax.Array]:
     """Extract up to ``kpr`` more children per row from leftover bitmaps
     of a mixed-query wave.
 
@@ -448,14 +453,15 @@ def extract_more_mq(tb: TableBank, phi: jax.Array, query_slot: jax.Array,
     fresh pass; the dead-end check runs here at extraction time (and may
     see *newer* patterns than the fresh pass did — strictly more pruning).
     Returns (child_v, child_valid, new_leftover, n_leftover,
-             partial_mask, n_pruned[F]).
+             partial_mask, n_pruned[F], pruned_v[F, KPR]).
     """
     child_v, new_leftover, n_leftover = _extract_topk_packed(leftover, kpr)
     prune, prune_mask = deadend_lookup_children_mq(
         tb, phi, query_slot, depth, child_v)
     child_valid = (child_v >= 0) & ~prune
     return (jnp.where(child_valid, child_v, -1), child_valid,
-            new_leftover, n_leftover, prune_mask, prune.sum(axis=1))
+            new_leftover, n_leftover, prune_mask, prune.sum(axis=1),
+            jnp.where(prune, child_v, -1))
 
 
 @jax.jit
@@ -553,6 +559,11 @@ class MegaResult(NamedTuple):
     n_inj: jax.Array             # int32 [C]
     n_emb_row: jax.Array         # int32 [C] embeddings emitted by the row
     dev_stored: jax.Array        # bool [C] Lemma-1 pattern stored in-loop
+    pruned_v: jax.Array          # int32 [C, KPR] Δ-pruned children (-1 pad)
+    # per-slot work-item accounting: how much of the dispatch each
+    # resident query actually consumed (drives shard/occupancy reports)
+    slot_rows: jax.Array         # int32 [S] rows expanded per slot
+    slot_children: jax.Array     # int32 [S] rows+embeddings created per slot
     emb_frontier: jax.Array      # int32 [emb_cap, N_PAD] found embeddings
     emb_slot: jax.Array          # int32 [emb_cap]
     n_emb: jax.Array             # int32
@@ -617,12 +628,16 @@ def run_megastep_mq(g: GraphArrays, qb: QueryBank, tb: TableBank,
     buf_valid = jnp.zeros((c,), bool).at[:f_step].set(row_valid)
 
     zi = jnp.zeros((c,), jnp.int32)
+    n_slots = qb.n_query.shape[0]
     lanes0 = dict(
         refined_empty=jnp.zeros((c,), bool), n_children=zi,
         n_leftover=zi, leftover=jnp.zeros((c, w), jnp.uint32),
         partial_mask=jnp.zeros((c, MASK_WORDS), jnp.uint32),
         n_pruned=zi, n_inj=zi, n_emb_row=zi,
-        dev_stored=jnp.zeros((c,), bool))
+        dev_stored=jnp.zeros((c,), bool),
+        pruned_v=jnp.full((c, kpr), -1, jnp.int32),
+        slot_rows=jnp.zeros((n_slots,), jnp.int32),
+        slot_children=jnp.zeros((n_slots,), jnp.int32))
 
     state = dict(
         tb=tb, buf_frontier=buf_frontier, buf_used=buf_used,
@@ -744,7 +759,13 @@ def run_megastep_mq(g: GraphArrays, qb: QueryBank, tb: TableBank,
             n_pruned=put(s["n_pruned"], m1(res.n_pruned)),
             n_inj=put(s["n_inj"], m1(res.n_inj)),
             n_emb_row=put(s["n_emb_row"], m1(n_emb_row_c)),
-            dev_stored=put(s["dev_stored"], m1(do_store)))
+            dev_stored=put(s["dev_stored"], m1(do_store)),
+            pruned_v=put(s["pruned_v"],
+                         jnp.where(msk[:, None], res.pruned_v, -1)),
+            slot_rows=s["slot_rows"].at[slot_c].add(
+                valid_c.astype(jnp.int32)),
+            slot_children=s["slot_children"].at[slot_c].add(
+                m1(n_child_c + n_emb_row_c)))
 
     s = lax.while_loop(cond, body, state)
     return MegaResult(
@@ -756,14 +777,16 @@ def run_megastep_mq(g: GraphArrays, qb: QueryBank, tb: TableBank,
         n_leftover=s["n_leftover"], leftover=s["leftover"],
         partial_mask=s["partial_mask"], n_pruned=s["n_pruned"],
         n_inj=s["n_inj"], n_emb_row=s["n_emb_row"],
-        dev_stored=s["dev_stored"], emb_frontier=s["emb_frontier"],
+        dev_stored=s["dev_stored"], pruned_v=s["pruned_v"],
+        slot_rows=s["slot_rows"], slot_children=s["slot_children"],
+        emb_frontier=s["emb_frontier"],
         emb_slot=s["emb_slot"], n_emb=s["n_emb"],
         n_ids=s["id_ctr"] - jnp.asarray(id_base, jnp.int32))
 
 
 # ===================================================================
-# single-query wrappers (S == 1) — kept for the launch dry-run cells
-# and the distributed pattern merge, which operate on one query
+# single-query wrappers (S == 1) — kept for sequential-style callers
+# and tests that operate on one query
 # ===================================================================
 def _tbank_of(t: TableArrays) -> TableBank:
     return TableBank(phi=t.phi[None], mu=t.mu[None],

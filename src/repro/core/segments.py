@@ -13,6 +13,16 @@ device scatter.
 and owns the shared embedding-id counter — the scheduler in
 ``vectorized.py`` packs waves from whichever queries have ready segments.
 
+Shard-as-segments (DESIGN.md §3): a query submitted with
+``parallelism = k`` seeds *k* root segments, one per contiguous slice of
+its root-candidate range, and keeps one DFS stack per shard. All shards
+live in one bank slot, draw φ ids from the shared pool counter, and
+write one slot-private dead-end table — so every pattern (μ > 0
+included) learned by one shard prunes every other shard with no
+exchange step. An idle shard steals by splitting the largest pending
+work-item range of the most loaded shard (``balance_shards``);
+per-shard rows/items/steal counters feed the serving reports.
+
 Learning happens *across* waves and across queries' interleavings:
 patterns extracted from failures in earlier-expanded subtrees prune later
 waves. Matching is exact for any schedule because stored patterns are
@@ -61,6 +71,7 @@ class Segment:
     phi: np.ndarray                 # int32 [R, N_PAD + 1]
     parent_seg: np.ndarray          # int32 [R] (-1 for roots)
     parent_row: np.ndarray          # int32 [R]
+    shard: int = 0                  # owning shard (parallelism > 1)
     # resolution state
     outstanding: np.ndarray | None = None   # int64 [R]
     gamma: np.ndarray | None = None         # uint64 [R] accumulated Γ*
@@ -91,16 +102,23 @@ class EngineStats(SearchStats):
     waves: int = 0
     rows_created: int = 0
     patterns_stored: int = 0
+    # shard-as-segments accounting (parallelism > 1, DESIGN.md §3)
+    steals: int = 0
+    shard_rows: list | None = None   # rows created per shard
+    shard_items: list | None = None  # work items dispatched per shard
 
 
 @dataclasses.dataclass
 class WorkItem:
     """A ready slice of one segment: rows [start, stop) awaiting a fresh
-    expansion or a leftover extraction pass."""
+    expansion or a leftover extraction pass. ``shard`` routes the item to
+    one of the query's per-shard DFS stacks (always 0 for
+    ``parallelism == 1``); stolen ranges carry the thief's shard id."""
     seg_id: int
     start: int
     stop: int
     kind: str                       # "fresh" | "leftover"
+    shard: int = 0
 
 
 class QueryState:
@@ -110,7 +128,7 @@ class QueryState:
                  qnbr_bits: np.ndarray, w: int, *, limit: int | None,
                  learn: bool, max_rows: int | None,
                  deadline: float | None, keep_table: bool,
-                 t_submit: float):
+                 t_submit: float, parallelism: int = 1):
         self.slot = slot
         self.query_id = query_id
         self.n = n
@@ -123,10 +141,21 @@ class QueryState:
         self.deadline = deadline        # absolute perf_counter deadline
         self.keep_table = keep_table
         self.t_submit = t_submit
+        self.parallelism = max(1, int(parallelism))
         self.stats = EngineStats()
         self.embeddings: list[np.ndarray] = []
         self.segments: dict[int, Segment] = {}
-        self.stack: list[WorkItem] = []
+        # one DFS stack per shard (shard-as-segments, DESIGN.md §3)
+        self.stacks: list[list[WorkItem]] = [
+            [] for _ in range(self.parallelism)]
+        self._shard_rr = 0
+        self.shard_rows = np.zeros(self.parallelism, np.int64)
+        self.shard_items = np.zeros(self.parallelism, np.int64)
+        # Δ hit counters per (order position, vertex) key, accumulated
+        # from the digests' pruned-child lanes; drives the deterministic
+        # cross-host pattern exchange (allocated by the scheduler when
+        # the table is exported).
+        self.hit_counts: np.ndarray | None = None
         self.store_buf: list[tuple[int, int, int, int, np.uint64]] = []
         self.status = "running"         # "running" | "done"
         self.abort_reason: str | None = None  # "limit" | "rows" | "time"
@@ -135,42 +164,106 @@ class QueryState:
     # -- segment / stack management ------------------------------------
     def new_segment(self, depth: int, frontier: np.ndarray,
                     used: np.ndarray, phi: np.ndarray,
-                    parent_seg: np.ndarray, parent_row: np.ndarray
-                    ) -> Segment:
+                    parent_seg: np.ndarray, parent_row: np.ndarray,
+                    shard: int = 0) -> Segment:
         seg = Segment(self._next_seg, depth, frontier, used, phi,
-                      parent_seg, parent_row)
+                      parent_seg, parent_row, shard)
         seg.init_state(self.w)
         self.segments[self._next_seg] = seg
         self._next_seg += 1
+        self.shard_rows[shard] += len(frontier)
         return seg
 
     def push(self, item: WorkItem) -> None:
-        self.stack.append(item)
+        self.stacks[item.shard].append(item)
 
-    def pop_ready(self) -> WorkItem | None:
-        """Pop the top work item whose segment is still alive."""
-        while self.stack:
-            item = self.stack[-1]
+    def _live_top(self, shard: int) -> WorkItem | None:
+        """Top live work item of one shard stack (discarding stale ones)."""
+        st = self.stacks[shard]
+        while st:
+            item = st[-1]
             if item.seg_id not in self.segments:
-                self.stack.pop()
+                st.pop()
                 continue
-            return self.stack.pop()
+            return item
+        return None
+
+    def pop_ready(self, kind: str | None = None) -> WorkItem | None:
+        """Pop a live work item, round-robin across shard stacks. With
+        ``kind`` set, only an item of that kind is taken (the wave's
+        picks all share one device program)."""
+        for off in range(self.parallelism):
+            shard = (self._shard_rr + off) % self.parallelism
+            item = self._live_top(shard)
+            if item is not None and (kind is None or item.kind == kind):
+                self.stacks[shard].pop()
+                self._shard_rr = (shard + 1) % self.parallelism
+                self.shard_items[shard] += 1
+                return item
         return None
 
     def peek_kind(self) -> str | None:
-        """Kind of the top live work item (discarding stale ones)."""
-        while self.stack:
-            item = self.stack[-1]
-            if item.seg_id not in self.segments:
-                self.stack.pop()
-                continue
-            return item.kind
+        """Kind of the next item pop_ready would take (round-robin)."""
+        for off in range(self.parallelism):
+            item = self._live_top((self._shard_rr + off) % self.parallelism)
+            if item is not None:
+                return item.kind
         return None
+
+    def balance_shards(self) -> int:
+        """Work stealing on work-item ranges (DESIGN.md §3): every idle
+        shard splits the largest pending range of the most loaded shard
+        and takes the upper half. Sound for any split because items are
+        just row ranges of shared segments — the thief's children simply
+        carry its shard id. Returns the number of steals."""
+        if self.parallelism <= 1:
+            return 0
+        loads = [sum(it.stop - it.start for it in st
+                     if it.seg_id in self.segments)
+                 for st in self.stacks]
+        steals = 0
+        for shard in range(self.parallelism):
+            if self._live_top(shard) is not None:
+                continue
+            donor = int(np.argmax(loads))
+            if donor == shard or loads[donor] <= 1:
+                continue
+            best_i, best_len = -1, 1
+            for i, it in enumerate(self.stacks[donor]):
+                if (it.seg_id in self.segments
+                        and it.stop - it.start > best_len):
+                    best_i, best_len = i, it.stop - it.start
+            if best_i < 0:
+                continue
+            it = self.stacks[donor][best_i]
+            mid = (it.start + it.stop) // 2
+            self.stacks[donor][best_i] = WorkItem(
+                it.seg_id, it.start, mid, it.kind, it.shard)
+            self.stacks[shard].append(WorkItem(
+                it.seg_id, mid, it.stop, it.kind, shard))
+            loads[donor] -= it.stop - mid
+            loads[shard] += it.stop - mid
+            steals += 1
+        self.stats.steals += steals
+        return steals
+
+    def note_hits(self, depth, pruned_v) -> None:
+        """Accumulate Δ hit counters from a digest's pruned-child lane
+        (``pruned_v`` int32 [..., KPR], -1 padding; a prune at row depth
+        d on vertex v is one hit on table key (d, v))."""
+        if self.hit_counts is None:
+            return
+        pv = np.asarray(pruned_v)
+        dd = np.broadcast_to(np.asarray(depth)[..., None], pv.shape)
+        sel = pv >= 0
+        if sel.any():
+            np.add.at(self.hit_counts, (dd[sel], pv[sel]), 1)
 
     def evict(self) -> None:
         """Drop all in-flight work (abort / completion)."""
         self.segments.clear()
-        self.stack.clear()
+        for st in self.stacks:
+            st.clear()
         self.store_buf.clear()
 
     # -- Lemma-4 resolution bookkeeping --------------------------------

@@ -24,8 +24,17 @@ reference schedule.
 
 Scheduling policy: admission fills free slots from a bounded FIFO queue;
 wave packing round-robins over active queries, splitting segment slices
-so waves stay full; per-query ``limit`` / ``max_rows`` / ``time_budget_s``
-abort a query and evict its segments without touching its neighbors.
+so waves stay full. The one-item-per-query rule is the fair-share
+*floor*: on the fused megastep schedule a query may contribute up to
+``max(1, wave_size / n_active)`` items per wave (occupancy-aware
+packing — a lone heavy query fills the wave), while the single-step
+schedule keeps the strict one-item store→lookup cadence. A query
+submitted with ``parallelism = k`` runs as k intra-query shards
+(shard-as-segments, DESIGN.md §3): k root segments with per-shard DFS
+stacks, work stealing on work-item ranges, and one shared slot-private
+table so every pattern (μ > 0 included) crosses shards for free.
+Per-query ``limit`` / ``max_rows`` / ``time_budget_s`` abort a query
+and evict its segments without touching its neighbors.
 
 Learning happens *across* waves: patterns extracted from failures in
 earlier-expanded subtrees prune later waves of the same query (tables are
@@ -35,7 +44,8 @@ prune later depth-steps of the same dispatch. Matching is exact for any
 schedule because stored patterns are true dead-ends.
 
 :class:`WaveEngine` is the single-query facade (one slot) kept for the
-sequential-style API and the distributed matcher.
+sequential-style API; the distributed matcher now fronts the scheduler
+directly (shard-as-segments, ``core.distributed``).
 """
 from __future__ import annotations
 
@@ -82,6 +92,8 @@ class _Request:
     seed_table: TableArrays | None
     keep_table: bool
     t_submit: float
+    parallelism: int = 1
+    seed_hits: np.ndarray | None = None   # int64 [N_PAD, V] Δ hit counters
 
 
 @dataclasses.dataclass
@@ -164,6 +176,7 @@ class WaveScheduler:
         self.queue: collections.deque[_Request] = collections.deque()
         self.finished: dict[int, MatchResult] = {}
         self.tables: dict[int, TableArrays] = {}
+        self.table_hits: dict[int, np.ndarray] = {}   # Δ hit counters
         self._fresh_done: list[int] = []
         self._next_qid = 0
         self._rr = 0
@@ -176,6 +189,10 @@ class WaveScheduler:
         self.occ_sum_steady = 0.0
         self.total_prunes = 0
         self.total_rows_created = 0
+        self.total_steals = 0
+        # per-slot work accounting (megastep digest lanes + host waves)
+        self.slot_rows_expanded = np.zeros(self.n_slots, np.int64)
+        self.slot_children_created = np.zeros(self.n_slots, np.int64)
         # host/device time split (serving_bench trajectory)
         self.t_dispatch_s = 0.0     # pack + async dispatch (host)
         self.t_sync_s = 0.0         # blocked materializing digests
@@ -191,16 +208,28 @@ class WaveScheduler:
                time_budget_s: float | None = None,
                use_pruning: bool | None = None,
                seed_table: TableArrays | None = None,
-               keep_table: bool = False) -> int:
+               keep_table: bool = False,
+               parallelism: int = 1,
+               seed_hits: np.ndarray | None = None) -> int:
         """Enqueue a query; returns its scheduler query id.
 
         Raises :class:`QueueFull` when the bounded admission queue is at
         capacity — callers apply backpressure or shed load.
 
-        ``seed_table``: a TableArrays of *transferable* (mu == 0)
-        patterns from other shards — see core.distributed. Patterns with
-        mu > 0 reference foreign embedding-id numbering and MUST NOT be
-        seeded (soundness).
+        ``parallelism``: intra-query shard count (shard-as-segments,
+        DESIGN.md §3). The root-candidate range is split into that many
+        root segments with per-shard DFS stacks and work stealing; all
+        shards share the query's slot-private Δ table, so every pattern
+        (μ > 0 included) one shard learns prunes the others.
+
+        ``seed_table``: a dead-end table to pre-load into the query's
+        slot (cross-host pattern import or checkpoint restore — see
+        core.distributed). μ > 0 seed patterns reference the *writer's*
+        φ numbering: they are only sound if the ids cannot collide with
+        this run's fresh ids — call :meth:`reserve_phi_floor` with the
+        writer's φ ceiling first (checkpoint restore does), otherwise
+        seed μ == 0 patterns only. ``seed_hits`` carries the matching
+        hit counters so exchange ranking stays cumulative.
         """
         if len(self.queue) >= self.max_queue:
             raise QueueFull(
@@ -233,7 +262,8 @@ class WaveScheduler:
             qnbr_bits=qnbr_bits, limit=limit, learn=learn,
             max_rows=max_rows, time_budget_s=time_budget_s,
             seed_table=seed_table, keep_table=keep_table,
-            t_submit=t_submit)
+            t_submit=t_submit, parallelism=max(1, int(parallelism)),
+            seed_hits=seed_hits)
         # trivial queries never need a slot
         if len(req.roots) == 0 or n == 1:
             self._finish_trivial(req)
@@ -263,7 +293,20 @@ class WaveScheduler:
             self.tables[req.query_id] = (req.seed_table
                                          if req.seed_table is not None
                                          else TableArrays.empty(self.data.n))
+            self.table_hits[req.query_id] = (
+                np.asarray(req.seed_hits, np.int64).copy()
+                if req.seed_hits is not None
+                else np.zeros((N_PAD, self.data.n), np.int64))
         self._fresh_done.append(req.query_id)
+
+    def reserve_phi_floor(self, floor: int) -> None:
+        """Raise the pool's embedding-id counter to at least ``floor``.
+
+        Makes seeding μ > 0 patterns sound: a seeded pattern fires only
+        when a row's Φ[μ] equals its stored φ, and once every fresh id
+        is above the writer's ceiling, a foreign φ can never collide
+        with a live prefix id (it simply never matches again)."""
+        self.pool.id_counter = max(self.pool.id_counter, int(floor))
 
     def _admit(self) -> None:
         while self.queue:
@@ -284,23 +327,40 @@ class WaveScheduler:
                            req.qnbr_bits, self.w, limit=req.limit,
                            learn=learn, max_rows=req.max_rows,
                            deadline=deadline, keep_table=req.keep_table,
-                           t_submit=req.t_submit)
+                           t_submit=req.t_submit,
+                           parallelism=req.parallelism)
             q.stats.table_stats = None
+            if req.keep_table:
+                q.hit_counts = (np.asarray(req.seed_hits, np.int64).copy()
+                                if req.seed_hits is not None
+                                else np.zeros((N_PAD, self.data.n),
+                                              np.int64))
             r = len(req.roots)
-            frontier = np.full((r, N_PAD), -1, np.int32)
-            frontier[:, 0] = req.roots
-            used = np.zeros((r, self.w), np.uint32)
-            used[np.arange(r), req.roots // 32] = (
-                np.uint32(1) << (req.roots.astype(np.uint32)
-                                 % np.uint32(32)))
-            phi = np.zeros((r, N_PAD + 1), np.int32)
-            base = self.pool.alloc_ids(r)
-            phi[:, 1] = np.arange(base, base + r)
             q.stats.rows_created += r
-            root_seg = q.new_segment(1, frontier, used, phi,
-                                     np.full(r, -1, np.int32),
-                                     np.zeros(r, np.int32))
-            q.push(WorkItem(root_seg.seg_id, 0, r, "fresh"))
+            # shard-as-segments: one root segment per contiguous slice
+            # of the root-candidate range (parallelism == 1 keeps the
+            # single root segment of the classic schedule)
+            bounds = np.linspace(0, r, q.parallelism + 1).astype(int)
+            for shard in range(q.parallelism):
+                lo, hi = int(bounds[shard]), int(bounds[shard + 1])
+                if hi <= lo:
+                    continue
+                roots = req.roots[lo:hi]
+                k = hi - lo
+                frontier = np.full((k, N_PAD), -1, np.int32)
+                frontier[:, 0] = roots
+                used = np.zeros((k, self.w), np.uint32)
+                used[np.arange(k), roots // 32] = (
+                    np.uint32(1) << (roots.astype(np.uint32)
+                                     % np.uint32(32)))
+                phi = np.zeros((k, N_PAD + 1), np.int32)
+                base = self.pool.alloc_ids(k)
+                phi[:, 1] = np.arange(base, base + k)
+                root_seg = q.new_segment(1, frontier, used, phi,
+                                         np.full(k, -1, np.int32),
+                                         np.zeros(k, np.int32),
+                                         shard=shard)
+                q.push(WorkItem(root_seg.seg_id, 0, k, "fresh", shard))
             self.pool.attach(slot, q)
 
     # ------------------------------------------------------------------
@@ -315,10 +375,16 @@ class WaveScheduler:
         q.evict()
         q.stats.recursions = q.stats.rows_created
         q.stats.wall_time_s = time.perf_counter() - q.t_submit
+        if q.parallelism > 1:
+            q.stats.shard_rows = q.shard_rows.tolist()
+            q.stats.shard_items = q.shard_items.tolist()
         self.total_prunes += q.stats.deadend_prunes
         self.total_rows_created += q.stats.rows_created
+        self.total_steals += q.stats.steals
         if q.keep_table:
             self.tables[q.query_id] = read_table_slot(self.tb, q.slot)
+            if q.hit_counts is not None:
+                self.table_hits[q.query_id] = q.hit_counts
         self.finished[q.query_id] = MatchResult(q.embeddings, q.stats)
         self._fresh_done.append(q.query_id)
         self.pool.release(q.slot)
@@ -346,46 +412,72 @@ class WaveScheduler:
     # ------------------------------------------------------------------
     # wave packing
     # ------------------------------------------------------------------
-    def _pack_wave(self) -> list[tuple[QueryState, Segment, int, int]] | None:
+    def _pack_wave(self
+                   ) -> list[tuple[QueryState, Segment, int, int, int]] | None:
         """Fill one wave with ready rows, round-robin across queries.
 
         All picks share one kind ("fresh" or "leftover") because the two
-        run different device programs; a query whose stack top is the
-        other kind simply waits for a later wave. Each query contributes
-        at most one work item per wave: waves fill *across* queries, not
-        by draining one query's stack — that keeps the per-query
-        store→lookup cadence of depth-first search (patterns learned from
-        one segment slice prune the next slice) while mixed traffic keeps
-        the wave full. Returns [(query, segment, start, stop)] or None
-        when no work exists.
+        run different device programs; a query whose ready items are all
+        of the other kind simply waits for a later wave.
+
+        Occupancy-aware packing: the classic one-work-item-per-query
+        round-robin is the *fair-share floor*, not a ceiling. On the
+        fused megastep schedule a query may contribute up to
+        ``max(1, wave_size / n_active)`` items per wave, so a lone heavy
+        query fills the wave instead of idling rows. The synchronous
+        single-step schedule (``megastep_depth == 1`` or the prune-EMA
+        fallback) keeps the strict one-item cadence — in failure-heavy
+        regimes patterns learned from one slice must prune the next
+        slice of the same query, which multi-item packing would defeat.
+
+        Within a query, items are drawn round-robin across its shard
+        stacks (shard-as-segments), after rebalancing idle shards via
+        work stealing. Returns [(query, segment, start, stop, shard)] or
+        None when no work exists.
         """
         active = self.pool.active_queries()
         if not active:
             return None
-        order = active[self._rr % len(active):] + \
-            active[:self._rr % len(active)]
+        for q in active:
+            if q.parallelism > 1:
+                q.balance_shards()
+        start = self._rr % len(active)
+        order = active[start:] + active[:start]
         self._rr += 1
+        if (self.megastep_depth <= 1
+                or self._prune_ema > self.adaptive_prune_threshold):
+            item_cap = 1
+        else:
+            item_cap = max(1, self.wave_size // len(active))
         kind = None
-        picks: list[tuple[QueryState, Segment, int, int]] = []
+        picks: list[tuple[QueryState, Segment, int, int, int]] = []
         remaining = self.wave_size
-        for q in order:
-            if remaining == 0:
-                break
-            top = q.peek_kind()
-            if top is None:
-                continue
-            if kind is None:
-                kind = top
-            if top != kind:
-                continue
-            item = q.pop_ready()
-            take = min(remaining, item.stop - item.start)
-            if take < item.stop - item.start:
-                q.push(WorkItem(item.seg_id, item.start + take,
-                                item.stop, item.kind))
-            picks.append((q, q.segments[item.seg_id], item.start,
-                          item.start + take))
-            remaining -= take
+        taken = dict.fromkeys(range(len(order)), 0)
+        progress = True
+        while remaining > 0 and progress:
+            progress = False
+            for qi, q in enumerate(order):
+                if remaining == 0:
+                    break
+                if taken[qi] >= item_cap:
+                    continue
+                if kind is None:
+                    kind = q.peek_kind()
+                    if kind is None:
+                        continue
+                item = q.pop_ready(kind)
+                if item is None:
+                    taken[qi] = item_cap     # nothing of this kind now
+                    continue
+                take = min(remaining, item.stop - item.start)
+                if take < item.stop - item.start:
+                    q.push(WorkItem(item.seg_id, item.start + take,
+                                    item.stop, item.kind, item.shard))
+                picks.append((q, q.segments[item.seg_id], item.start,
+                              item.start + take, item.shard))
+                remaining -= take
+                taken[qi] += 1
+                progress = True
         if not picks:
             return None
         self._wave_kind = kind
@@ -401,9 +493,9 @@ class WaveScheduler:
         valid = np.zeros(f_pad, bool)
         slot_v = np.zeros(f_pad, np.int32)
         depth_v = np.zeros(f_pad, np.int32)
-        metas: list[tuple[QueryState, Segment, int, int, int, int]] = []
+        metas: list[tuple[QueryState, Segment, int, int, int, int, int]] = []
         off = 0
-        for q, seg, s, e in picks:
+        for q, seg, s, e, shard in picks:
             k = e - s
             fr[off:off + k] = seg.frontier[s:e]
             us[off:off + k] = seg.used[s:e]
@@ -413,7 +505,7 @@ class WaveScheduler:
             depth_v[off:off + k] = seg.depth
             if kind == "leftover":
                 lo[off:off + k] = seg.pending_leftover[s:e]
-            metas.append((q, seg, s, e, off, k))
+            metas.append((q, seg, s, e, off, k, shard))
             off += k
         self.waves += 1
         self.rows_packed += off
@@ -572,7 +664,7 @@ class WaveScheduler:
             backend=self._kernel_backend)
         self.tb = res.tb            # handle only — not materialized
         slot_map = {q.slot: q for q, *_ in metas}
-        for q, *_ in metas:         # one item per query per wave
+        for q in slot_map.values():
             q.stats.waves += 1
         return _Inflight("mega", res, metas, slot_map)
 
@@ -597,6 +689,7 @@ class WaveScheduler:
         ninj = np.asarray(res.n_inj)
         nembr = np.asarray(res.n_emb_row)
         dstored = np.asarray(res.dev_stored)
+        pruned_v = np.asarray(res.pruned_v)
         n_emb = int(res.n_emb)
         embF = np.asarray(res.emb_frontier)[:n_emb]
         embS = np.asarray(res.emb_slot)[:n_emb]
@@ -607,9 +700,18 @@ class WaveScheduler:
         slot_map = rec.slot_map
         involved: dict[int, QueryState] = {}
         sweeps: dict[int, list] = {}
+        # per-slot work accounting surfaced by the digest
+        self.slot_rows_expanded += np.asarray(res.slot_rows, np.int64)
+        self.slot_children_created += np.asarray(res.slot_children,
+                                                 np.int64)
+        # shard of every ring row: input rows from their pick's work
+        # item, in-loop rows inherit their parent's shard (parents
+        # always precede children, so K passes reach every chain)
+        shard_of = np.zeros(tail, np.int32)
 
         # ---- 1) input-row bookkeeping (rows [0, f_in) of the ring) -----
-        for q, seg, s, e, woff, k in rec.metas:
+        for q, seg, s, e, woff, k, shard in rec.metas:
+            shard_of[woff:woff + k] = shard
             if not q.active:
                 continue
             involved[q.query_id] = q
@@ -625,9 +727,18 @@ class WaveScheduler:
             q.stats.injectivity_fails += int(ninj[sl].sum())
             q.stats.patterns_stored += int(dstored[sl].sum())
             if (nleft[sl] > 0).any():
-                q.push(WorkItem(seg.seg_id, s, e, "leftover"))
+                q.push(WorkItem(seg.seg_id, s, e, "leftover", shard))
             sweeps.setdefault(q.query_id, []).append(
                 (seg, np.arange(s, e), rempty[sl]))
+
+        # ---- Δ hit counters (pruned-child lanes, any ring row) ---------
+        if any(q.hit_counts is not None for q in slot_map.values()):
+            for sl_v, q in slot_map.items():
+                if q.hit_counts is None:
+                    continue
+                rows = np.nonzero(slot_a[:tail] == sl_v)[0]
+                if len(rows):
+                    q.note_hits(depth_a[rows], pruned_v[rows])
 
         # ---- 2) embeddings found in-loop (+ limit aborts) --------------
         if n_emb:
@@ -653,11 +764,14 @@ class WaveScheduler:
             # parents always precede children in the ring.
             seg_of = np.full(tail, -1, np.int64)
             row_of = np.full(tail, -1, np.int64)
-            for q, seg, s, e, woff, k in rec.metas:
+            for q, seg, s, e, woff, k, shard in rec.metas:
                 seg_of[woff:woff + k] = seg.seg_id
                 row_of[woff:woff + k] = np.arange(s, e)
             new_idx = np.arange(f_in, tail)
             new_idx = new_idx[valid_a[f_in:tail]]
+            # propagate shards down parent chains (≤ K links deep)
+            for _ in range(self.megastep_depth):
+                shard_of[new_idx] = shard_of[parent_a[new_idx]]
             sl_arr = slot_a[new_idx]
             for sl_v in np.unique(sl_arr):
                 q = slot_map.get(int(sl_v))
@@ -666,34 +780,41 @@ class WaveScheduler:
                     continue
                 involved[q.query_id] = q
                 qd = depth_a[qsel]
+                qsh = shard_of[qsel]
                 for d_v in np.unique(qd):          # ascending: parents
-                    sel = qsel[qd == d_v]          # precede children
-                    exp_sel = sel[sel < head]
-                    sel2 = np.concatenate([exp_sel, sel[sel >= head]])
-                    r = len(sel2)
-                    n_exp = len(exp_sel)
-                    q.stats.rows_created += r
-                    cseg = q.new_segment(
-                        int(d_v), bufF[sel2], bufU[sel2], bufP[sel2],
-                        seg_of[parent_a[sel2]].astype(np.int32),
-                        row_of[parent_a[sel2]].astype(np.int32))
-                    cseg.expanded[:n_exp] = True
-                    cseg.gamma[:n_exp] = pmask[exp_sel]
-                    cseg.pending_leftover[:] = leftover[sel2]
-                    cseg.outstanding[:] = nchild[sel2]
-                    cseg.reported[:] = nembr[sel2] > 0
-                    cseg.stored[:] = dstored[sel2]
-                    q.stats.deadend_prunes += int(nprun[exp_sel].sum())
-                    q.stats.injectivity_fails += int(ninj[exp_sel].sum())
-                    q.stats.patterns_stored += int(dstored[sel2].sum())
-                    seg_of[sel2] = cseg.seg_id
-                    row_of[sel2] = np.arange(r)
-                    if n_exp < r:
-                        q.push(WorkItem(cseg.seg_id, n_exp, r, "fresh"))
-                    if n_exp and (nleft[exp_sel] > 0).any():
-                        q.push(WorkItem(cseg.seg_id, 0, n_exp, "leftover"))
-                    sweeps.setdefault(q.query_id, []).append(
-                        (cseg, np.arange(n_exp), rempty[exp_sel]))
+                    dsel = qsel[qd == d_v]         # precede children
+                    dsh = qsh[qd == d_v]
+                    for sh_v in np.unique(dsh):    # segments stay
+                        sel = dsel[dsh == sh_v]    # shard-pure
+                        exp_sel = sel[sel < head]
+                        sel2 = np.concatenate([exp_sel, sel[sel >= head]])
+                        r = len(sel2)
+                        n_exp = len(exp_sel)
+                        q.stats.rows_created += r
+                        cseg = q.new_segment(
+                            int(d_v), bufF[sel2], bufU[sel2], bufP[sel2],
+                            seg_of[parent_a[sel2]].astype(np.int32),
+                            row_of[parent_a[sel2]].astype(np.int32),
+                            shard=int(sh_v))
+                        cseg.expanded[:n_exp] = True
+                        cseg.gamma[:n_exp] = pmask[exp_sel]
+                        cseg.pending_leftover[:] = leftover[sel2]
+                        cseg.outstanding[:] = nchild[sel2]
+                        cseg.reported[:] = nembr[sel2] > 0
+                        cseg.stored[:] = dstored[sel2]
+                        q.stats.deadend_prunes += int(nprun[exp_sel].sum())
+                        q.stats.injectivity_fails += int(ninj[exp_sel].sum())
+                        q.stats.patterns_stored += int(dstored[sel2].sum())
+                        seg_of[sel2] = cseg.seg_id
+                        row_of[sel2] = np.arange(r)
+                        if n_exp < r:
+                            q.push(WorkItem(cseg.seg_id, n_exp, r, "fresh",
+                                            int(sh_v)))
+                        if n_exp and (nleft[exp_sel] > 0).any():
+                            q.push(WorkItem(cseg.seg_id, 0, n_exp,
+                                            "leftover", int(sh_v)))
+                        sweeps.setdefault(q.query_id, []).append(
+                            (cseg, np.arange(n_exp), rempty[exp_sel]))
 
         # ---- 4) Lemma-4 resolution sweep over every expanded row -------
         for qid, q in involved.items():
@@ -736,7 +857,7 @@ class WaveScheduler:
         res = extract_more_mq(self.tb, ph, slot_v, depth_v, lo,
                               kpr=4 * self.kpr)
         slot_map = {q.slot: q for q, *_ in metas}
-        for q, *_ in metas:
+        for q in slot_map.values():
             q.stats.waves += 1
         return _Inflight("leftover", res, metas, slot_map,
                          fr=fr, us=us, ph=ph, depth_v=depth_v)
@@ -750,6 +871,7 @@ class WaveScheduler:
         n_leftover = np.asarray(res[3])
         partial = mask64(np.asarray(res[4]))
         n_pruned = np.asarray(res[5])
+        pruned_v = np.asarray(res[6])
         t1 = time.perf_counter()
         self.t_sync_s += t1 - t0
         f_pad = self.wave_size
@@ -758,7 +880,8 @@ class WaveScheduler:
             n_children=child_valid.sum(axis=1).astype(np.int32),
             n_leftover=n_leftover, partial=partial, child_v=child_v,
             child_valid=child_valid, leftover=leftover,
-            n_pruned=n_pruned, n_inj=np.zeros(f_pad, np.int32))
+            n_pruned=n_pruned, n_inj=np.zeros(f_pad, np.int32),
+            pruned_v=pruned_v)
         self._process_wave("leftover", rec.metas, rec.fr, rec.us, rec.ph,
                            rec.depth_v, digest)
         self.t_host_s += time.perf_counter() - t1
@@ -776,10 +899,12 @@ class WaveScheduler:
         fr, us, ph, lo, valid, slot_v, depth_v, metas = \
             self._build_wave(picks, kind)
         self._flush_stores()
-        for q, *_ in metas:         # one item per query per wave
+        for q in {q.slot: q for q, *_ in metas}.values():
             q.stats.waves += 1
 
         if kind == "fresh":
+            self.slot_rows_expanded += np.bincount(
+                slot_v[valid], minlength=self.n_slots).astype(np.int64)
             res = expand_wave_mq(
                 self.g, self.qb, self.tb, fr, us, ph, valid, slot_v,
                 depth_v, kpr=self.kpr, backend=self._kernel_backend)
@@ -794,7 +919,8 @@ class WaveScheduler:
                 child_valid=np.asarray(res.child_valid),
                 leftover=np.asarray(res.leftover),
                 n_pruned=np.asarray(res.n_pruned),
-                n_inj=np.asarray(res.n_inj))
+                n_inj=np.asarray(res.n_inj),
+                pruned_v=np.asarray(res.pruned_v))
         else:
             res = extract_more_mq(self.tb, ph, slot_v, depth_v, lo,
                                   kpr=4 * self.kpr)
@@ -809,7 +935,8 @@ class WaveScheduler:
                 child_v=np.asarray(res[0]), child_valid=child_valid,
                 leftover=np.asarray(res[2]),
                 n_pruned=np.asarray(res[5]),
-                n_inj=np.zeros(self.wave_size, np.int32))
+                n_inj=np.zeros(self.wave_size, np.int32),
+                pruned_v=np.asarray(res[6]))
         t2 = time.perf_counter()
         self.t_sync_s += t2 - t1
         self._process_wave(kind, metas, fr, us, ph, depth_v, digest)
@@ -830,13 +957,14 @@ class WaveScheduler:
         leftover = digest["leftover"]
         n_pruned = digest["n_pruned"]
         n_inj = digest["n_inj"]
+        pruned_v = digest["pruned_v"]
 
         # mask out rows of evicted queries (aborted while this wave was
         # in flight) and last-level rows — their children are
         # embeddings, not rows.
         last_level = np.zeros(f_pad, bool)
         dead_rows = np.zeros(f_pad, bool)
-        for q, seg, s, e, woff, k in metas:
+        for q, seg, s, e, woff, k, shard in metas:
             if seg.depth + 1 == q.n:
                 last_level[woff:woff + k] = True
             if not q.active:
@@ -865,7 +993,7 @@ class WaveScheduler:
 
         # ---- per-item host bookkeeping ---------------------------------
         wave_rows_created = 0
-        for q, seg, s, e, woff, k in metas:
+        for q, seg, s, e, woff, k, shard in metas:
             if not q.active:
                 continue
             sl = slice(woff, woff + k)
@@ -873,13 +1001,15 @@ class WaveScheduler:
             seg.gamma[rows] |= partial[sl]
             seg.pending_leftover[rows] = leftover[sl]
             q.stats.deadend_prunes += int(n_pruned[sl].sum())
+            if q.hit_counts is not None:
+                q.note_hits(depth_v[sl], pruned_v[sl])
             if kind == "fresh":
                 seg.expanded[rows] = True
                 q.stats.injectivity_fails += int(n_inj[sl].sum())
 
             # re-queue leftover before children (LIFO: children first)
             if (n_leftover[sl] > 0).any():
-                q.push(WorkItem(seg.seg_id, s, e, "leftover"))
+                q.push(WorkItem(seg.seg_id, s, e, "leftover", shard))
 
             item_last = seg.depth + 1 == q.n
             if item_last:
@@ -909,11 +1039,13 @@ class WaveScheduler:
                     n_new = len(sel)
                     q.stats.rows_created += n_new
                     wave_rows_created += n_new
+                    self.slot_children_created[q.slot] += n_new
                     cseg = q.new_segment(
                         seg.depth + 1, cf[sel], cu[sel], cp[sel],
                         np.full(n_new, seg.seg_id, np.int32),
-                        (par[sel] - woff + s).astype(np.int32))
-                    q.push(WorkItem(cseg.seg_id, 0, n_new, "fresh"))
+                        (par[sel] - woff + s).astype(np.int32),
+                        shard=shard)
+                    q.push(WorkItem(cseg.seg_id, 0, n_new, "fresh", shard))
 
             # immediate resolutions
             items = []
@@ -967,7 +1099,12 @@ class WaveScheduler:
             q.stats.deadend_prunes for q in self.pool.active_queries())
         rows = self.total_rows_created + sum(
             q.stats.rows_created for q in self.pool.active_queries())
+        steals = self.total_steals + sum(
+            q.stats.steals for q in self.pool.active_queries())
         return {
+            "steals": steals,
+            "slot_rows_expanded": self.slot_rows_expanded.tolist(),
+            "slot_children_created": self.slot_children_created.tolist(),
             "waves": self.waves,
             "rows_packed": self.rows_packed,
             "wave_size": self.wave_size,
@@ -1010,17 +1147,20 @@ class WaveEngine:
               order: np.ndarray | None = None,
               max_rows: int | None = None,
               time_budget_s: float | None = None,
-              seed_table: TableArrays | None = None) -> MatchResult:
-        """``seed_table``: a TableArrays of *transferable* (mu == 0)
-        patterns from other shards — see core.distributed."""
+              seed_table: TableArrays | None = None,
+              parallelism: int = 1) -> MatchResult:
+        """``seed_table``: a dead-end table to pre-load (see
+        :meth:`WaveScheduler.submit` for the μ > 0 soundness rule);
+        ``parallelism``: intra-query shard count (shard-as-segments)."""
         qid = self.scheduler.submit(
             query, limit=limit, cand=cand, order=order, max_rows=max_rows,
             time_budget_s=time_budget_s, seed_table=seed_table,
-            keep_table=True)
+            keep_table=True, parallelism=parallelism)
         self.scheduler.run()
         res = self.scheduler.finished.pop(qid)
         self.scheduler.poll()
         self._table = self.scheduler.tables.pop(qid, None)
+        self._hits = self.scheduler.table_hits.pop(qid, None)
         return res
 
 

@@ -430,58 +430,80 @@ def _din_cells(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
 
 # ================================================================= matcher
 def _matcher_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
+    """Lower the *real* multi-query wave program (``expand_wave_mq``)
+    that the shared-wave scheduler dispatches — slot-stacked query/table
+    banks plus per-row slot/depth lanes — not the 1-slot single-query
+    facade. The distributed shard-as-segments matcher rides exactly this
+    program, so the dry-run/roofline numbers describe production waves
+    with mixed-query (and mixed-shard) rows."""
     from ..core.engine_step import (MASK_WORDS, N_PAD, GraphArrays,
-                                    QueryArrays, TableArrays, expand_wave)
+                                    QueryBank, TableBank, expand_wave_mq)
     d = cell.dims
     v = d["n_vertices"]
     w = (v + 31) // 32
     f = d["wave_size"]
     kpr = d["kpr"]
+    s = d.get("n_slots", 16)
     dpa = dp(mesh)
     g = GraphArrays(adj_bitmap=sds((v, w), jnp.uint32),
                     n_vertices=sds((), jnp.int32))
-    q = QueryArrays(cand_bitmap=sds((N_PAD, w), jnp.uint32),
-                    nbr_mask=sds((N_PAD, N_PAD), bool),
-                    n_query=sds((), jnp.int32))
-    t = TableArrays(phi=sds((N_PAD, v), jnp.int32),
-                    mu=sds((N_PAD, v), jnp.int32),
-                    mask=sds((N_PAD, v, MASK_WORDS), jnp.uint32),
-                    valid=sds((N_PAD, v), bool))
+    qb = QueryBank(cand_bitmap=sds((s, N_PAD, w), jnp.uint32),
+                   nbr_mask=sds((s, N_PAD, N_PAD), bool),
+                   n_query=sds((s,), jnp.int32),
+                   learn=sds((s,), bool))
+    tb = TableBank(phi=sds((s, N_PAD, v), jnp.int32),
+                   mu=sds((s, N_PAD, v), jnp.int32),
+                   mask=sds((s, N_PAD, v, MASK_WORDS), jnp.uint32),
+                   valid=sds((s, N_PAD, v), bool))
     frontier = sds((f, N_PAD), jnp.int32)
     used = sds((f, w), jnp.uint32)
     phi = sds((f, N_PAD + 1), jnp.int32)
     row_valid = sds((f,), bool)
-    depth = sds((), jnp.int32)
+    query_slot = sds((f,), jnp.int32)
+    depth = sds((f,), jnp.int32)
 
     gspec = GraphArrays(adj_bitmap=P("model", None), n_vertices=P())
-    qspec = QueryArrays(cand_bitmap=P(None, None), nbr_mask=P(None, None),
-                        n_query=P())
-    tspec = TableArrays(phi=P(None, "model"), mu=P(None, "model"),
-                        mask=P(None, "model", None), valid=P(None, "model"))
+    # banks replicate the (small) slot axis; tables shard vertices over
+    # the model axis like the graph bitmap they are keyed by
+    qbspec = QueryBank(cand_bitmap=P(None, None, None),
+                       nbr_mask=P(None, None, None),
+                       n_query=P(None), learn=P(None))
+    tbspec = TableBank(phi=P(None, None, "model"),
+                       mu=P(None, None, "model"),
+                       mask=P(None, None, "model", None),
+                       valid=P(None, None, "model"))
     fspec = (_sanitize(P(dpa, None), (f, N_PAD), mesh),
              _sanitize(P(dpa, None), (f, w), mesh),
              _sanitize(P(dpa, None), (f, N_PAD + 1), mesh),
+             _sanitize(P(dpa), (f,), mesh),
+             _sanitize(P(dpa), (f,), mesh),
              _sanitize(P(dpa), (f,), mesh))
 
-    def step(g, q, t, frontier, used, phi, row_valid, depth):
-        return expand_wave(g, q, t, frontier, used, phi, row_valid,
-                           depth, kpr=kpr)
+    def step(g, qb, tb, frontier, used, phi, row_valid, query_slot,
+             depth):
+        return expand_wave_mq(g, qb, tb, frontier, used, phi, row_valid,
+                              query_slot, depth, kpr=kpr)
 
     out_spec = jax.tree.map(lambda _: P(), jax.eval_shape(
-        step, g, q, t, frontier, used, phi, row_valid, depth))
-    # children arrays follow the frontier's data sharding
+        step, g, qb, tb, frontier, used, phi, row_valid, query_slot,
+        depth))
+    # per-row result lanes follow the frontier's data sharding
     out_spec = out_spec._replace(
         child_v=_sanitize(P(dpa, None), (f, kpr), mesh),
         child_valid=_sanitize(P(dpa, None), (f, kpr), mesh),
+        pruned_v=_sanitize(P(dpa, None), (f, kpr), mesh),
         leftover=_sanitize(P(dpa, None), (f, w), mesh),
         partial_mask=_sanitize(P(dpa, None), (f, MASK_WORDS), mesh),
         refined_empty=_sanitize(P(dpa), (f,), mesh),
         n_children=_sanitize(P(dpa), (f,), mesh),
-        n_leftover=_sanitize(P(dpa), (f,), mesh))
+        n_leftover=_sanitize(P(dpa), (f,), mesh),
+        n_pruned=_sanitize(P(dpa), (f,), mesh),
+        n_inj=_sanitize(P(dpa), (f,), mesh))
 
     return Cell(spec.arch_id, cell.name, step,
-                (g, q, t, frontier, used, phi, row_valid, depth),
-                (gspec, qspec, tspec) + fspec + (P(),),
+                (g, qb, tb, frontier, used, phi, row_valid, query_slot,
+                 depth),
+                (gspec, qbspec, tbspec) + fspec,
                 out_spec)
 
 

@@ -39,6 +39,9 @@ class QueryResult:
     timed_out: bool              # True iff status == "timeout"
     aborted: bool = False        # any early stop (limit OR budget)
     status: str = "ok"
+    # full engine stats (EngineStats on the engine backend — includes
+    # per-shard rows/items/steal counters for parallelism > 1)
+    stats: object = None
 
 
 def _status_of(stats, limit: int | None) -> str:
@@ -80,22 +83,45 @@ class QueryServer:
                          embeddings=res.embeddings, latency_s=latency_s,
                          recursions=res.stats.recursions,
                          timed_out=status == "timeout",
-                         aborted=res.stats.aborted, status=status)
+                         aborted=res.stats.aborted, status=status,
+                         stats=res.stats)
         self.latencies.append(latency_s)
         self.n_timeouts += qr.timed_out
         return qr
 
-    def submit(self, query_id: int, query: Graph) -> QueryResult:
+    def submit(self, query_id: int, query: Graph,
+               parallelism: int = 1) -> QueryResult:
         """Synchronous single-query submit (runs the query to completion)."""
-        return self.submit_batch([query], ids=[query_id])[0]
+        return self.submit_batch([query], ids=[query_id],
+                                 parallelism=parallelism)[0]
 
     def submit_batch(self, queries: list[Graph],
-                     ids: list[int] | None = None) -> list[QueryResult]:
+                     ids: list[int] | None = None,
+                     parallelism: int | list[int] | None = None
+                     ) -> list[QueryResult]:
         """Run a batch of queries; on the engine backend all of them share
         the scheduler's waves concurrently (continuous batching: as
-        queries finish, queued ones are admitted into their slots)."""
+        queries finish, queued ones are admitted into their slots).
+
+        ``parallelism``: intra-query shard count (shard-as-segments,
+        DESIGN.md §3) — an int applied to every query or a per-query
+        list. A heavy query submitted with ``parallelism=k`` seeds k
+        root segments with work stealing between them, so it fills
+        waves instead of idling rows next to light traffic. Ignored by
+        the sequential backend (one recursion, nothing to shard).
+        """
         if ids is None:
             ids = list(range(len(queries)))
+        if parallelism is None:
+            par = [1] * len(queries)
+        elif isinstance(parallelism, int):
+            par = [parallelism] * len(queries)
+        else:
+            par = list(parallelism)
+            if len(par) != len(queries):
+                raise ValueError(
+                    f"parallelism list length {len(par)} != "
+                    f"{len(queries)} queries")
         if self.backend != "engine":
             out = []
             for qid, q in zip(ids, queries):
@@ -108,7 +134,7 @@ class QueryServer:
             return out
 
         sched = self.scheduler
-        pending = list(zip(ids, queries))
+        pending = list(zip(ids, queries, par))
         t_submit: dict[int, float] = {}
         ext_id: dict[int, int] = {}          # scheduler id -> external id
         results: dict[int, QueryResult] = {}
@@ -126,19 +152,20 @@ class QueryServer:
         while len(results) < len(pending):
             # bounded-queue backpressure: top the queue up, then step
             while next_i < len(pending) and len(sched.queue) < sched.max_queue:
-                eid, q = pending[next_i]
+                eid, q, k = pending[next_i]
                 t_submit[eid] = time.perf_counter()
                 ext_id[sched.submit(
                     q, limit=self.limit,
                     max_rows=self.max_recursions,
-                    time_budget_s=self.time_budget_s)] = eid
+                    time_budget_s=self.time_budget_s,
+                    parallelism=k)] = eid
                 next_i += 1
             if not sched.step() and next_i >= len(pending):
                 drain_finished()
                 break
             drain_finished()
         drain_finished()
-        return [results[eid] for eid, _ in pending]
+        return [results[eid] for eid, *_ in pending]
 
     # ------------------------------------------------------------------
     def slo_report(self) -> dict:

@@ -1,12 +1,27 @@
-"""Distributed matcher: partition/steal/share/restore must preserve the
-exact result set (Theorem 1 extended to the distributed schedule)."""
+"""Distributed matching as shard-as-segments on the shared-wave
+scheduler: partition/steal/share/restore must preserve the exact result
+set (Theorem 1 extended to the distributed schedule), and full Δ sharing
+must be *observable* — the unified architecture's prune counts may never
+fall below the old per-engine implementation's."""
+import json
+import pathlib
+
 import numpy as np
 import pytest
 
 from repro.core.backtrack import backtrack_deadend
-from repro.core.distributed import DistributedMatcher
+from repro.core.distributed import (DistributedMatcher,
+                                    select_exchange_patterns)
+from repro.core.vectorized import WaveEngine
 from repro.data.graph_gen import (er_labeled_graph, random_walk_query,
                                   trap_graph)
+
+# deadend_prunes of the deleted per-engine DistributedMatcher (isolated
+# 1-slot WaveEngines + lossy mu==0-only exchange) on trap(40) with
+# n_shards=4, wave_size=32, kpr=4 — measured at commit 6455815. The
+# shard-as-segments rebuild shares the full Δ (mu > 0 included), so its
+# prune count must never fall below this.
+OLD_PER_ENGINE_TRAP40_PRUNES = 1320
 
 
 def embset(embs):
@@ -23,30 +38,196 @@ def test_distributed_matches_sequential(n_shards):
     assert embset(res.embeddings) == embset(ref.embeddings)
 
 
-def test_distributed_pattern_sharing_reduces_rows():
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_distributed_megastep_matches_sequential(n_shards):
+    """Oracle equality with the fused K-deep megastep forced on
+    (threshold > 1 keeps every fresh wave on the deep schedule), on both
+    uniform and failure-heavy workloads."""
+    data = er_labeled_graph(40, 130, 2, seed=2)
+    query = random_walk_query(data, 4, seed=3)
+    tq, tg = trap_graph(n_b=20, n_c=20, n_good=2, tail_len=2, seed=0)
+    for q, g in ((query, data), (tq, tg)):
+        ref = backtrack_deadend(q, g, limit=None)
+        dm = DistributedMatcher(g, n_shards=n_shards, wave_size=32, kpr=4,
+                                megastep_depth=4,
+                                adaptive_prune_threshold=2.0)
+        res = dm.match(q, limit=None)
+        assert embset(res.embeddings) == embset(ref.embeddings)
+
+
+def test_full_delta_sharing_observable_on_trap():
+    """The acceptance pin: distributed match with n_shards > 1 (+ the
+    megastep machinery) enumerates exactly the sequential oracle's set,
+    and its prune count is >= the old per-engine implementation's —
+    full Δ sharing must be observable, not just claimed. (On this trap
+    every learned pattern has mu == 1, so the old mu==0-only collective
+    shared *nothing*; the unified table is what closes the gap.)"""
+    query, data = trap_graph(n_b=40, n_c=40, n_good=2, tail_len=2, seed=0)
+    ref = backtrack_deadend(query, data, limit=None)
+    dm = DistributedMatcher(data, n_shards=4, wave_size=32, kpr=4)
+    res = dm.match(query, limit=None)
+    assert embset(res.embeddings) == embset(ref.embeddings)
+    assert res.stats.deadend_prunes >= OLD_PER_ENGINE_TRAP40_PRUNES
+    # distributed prune rate matches a single-engine run of the same
+    # wave shape (sharding is a schedule change, not a pruning change)
+    eng = WaveEngine(data, wave_size=32, kpr=4)
+    single = eng.match(query, limit=None)
+    assert res.stats.deadend_prunes >= 0.95 * single.stats.deadend_prunes
+    d_rate = res.stats.deadend_prunes / max(1, res.stats.rows_created)
+    s_rate = single.stats.deadend_prunes / max(1, single.stats.rows_created)
+    assert d_rate >= 0.9 * s_rate
+
+
+def test_sharing_beats_isolated_shards():
+    """share_patterns=False (the pre-unification ablation: isolated
+    per-shard queries, private tables) must enumerate the same set but
+    prune less / expand more than the shared-table architecture."""
     query, data = trap_graph(n_b=40, n_c=40, n_good=2, tail_len=2, seed=0)
     shared = DistributedMatcher(data, n_shards=4, wave_size=32, kpr=4,
                                 share_patterns=True)
     lone = DistributedMatcher(data, n_shards=4, wave_size=32, kpr=4,
                               share_patterns=False)
-    r1 = shared.match(query, limit=None, rounds=16)
-    r2 = lone.match(query, limit=None, rounds=16)
+    r1 = shared.match(query, limit=None)
+    r2 = lone.match(query, limit=None)
     assert embset(r1.embeddings) == embset(r2.embeddings)
-    # transferable mu=0 patterns exist in the trap (bad c's die for any
-    # prefix mapping u1 -> hub), so sharing must not hurt
-    assert r1.stats.recursions <= r2.stats.recursions * 1.05
+    assert r1.stats.deadend_prunes >= r2.stats.deadend_prunes
+    assert r1.stats.rows_created <= r2.stats.rows_created
 
 
-def test_distributed_checkpoint_and_elastic_restore(tmp_path):
-    data = er_labeled_graph(36, 100, 2, seed=5)
-    query = random_walk_query(data, 4, seed=6)
+def test_work_stealing_mid_query():
+    """Uneven root ranges: idle shards must steal work-item ranges from
+    loaded shards (steal counter > 0) without perturbing the result."""
+    query, data = trap_graph(n_b=40, n_c=40, n_good=2, tail_len=2, seed=0)
+    ref = backtrack_deadend(query, data, limit=None)
+    dm = DistributedMatcher(data, n_shards=8, wave_size=16, kpr=4)
+    res = dm.match(query, limit=None)
+    assert embset(res.embeddings) == embset(ref.embeddings)
+    assert res.stats.steals > 0
+    assert res.stats.shard_rows is not None
+    assert len(res.stats.shard_rows) == 8
+    assert sum(res.stats.shard_rows) == res.stats.rows_created
+
+
+def test_checkpoint_npz_roundtrip(tmp_path):
+    """A completed checkpointed run writes a v2 .npz snapshot with empty
+    pending set, the full embedding set, and the learned Δ table."""
+    query, data = trap_graph(n_b=20, n_c=20, n_good=2, tail_len=2, seed=0)
+    ref = backtrack_deadend(query, data, limit=None)
+    dm = DistributedMatcher(data, n_shards=4, wave_size=32, kpr=4,
+                            checkpoint_every_waves=2)
+    res = dm.match(query, limit=None, checkpoint_dir=str(tmp_path))
+    assert embset(res.embeddings) == embset(ref.embeddings)
+    assert (tmp_path / "state.npz").exists()
+    ck = DistributedMatcher.load_state(str(tmp_path))
+    assert ck.version == 2
+    assert len(ck.pending_roots) == 0
+    assert embset(ck.embeddings) == embset(ref.embeddings)
+    assert ck.table is not None and ck.table["valid"].any()
+    assert ck.hits is not None and ck.hits.sum() > 0
+    assert ck.phi_floor > 1
+
+
+def test_elastic_restore_onto_different_shard_count(tmp_path):
+    """Abort a 4-shard run mid-flight (row budget), then resume the last
+    snapshot on 3 shards: the resumed run must complete with exactly the
+    oracle's embedding set, keeping its learned Δ (seeded table + raised
+    phi floor)."""
+    query, data = trap_graph(n_b=40, n_c=40, n_good=2, tail_len=2, seed=0)
+    ref = backtrack_deadend(query, data, limit=None)
+    dm = DistributedMatcher(data, n_shards=4, wave_size=32, kpr=4,
+                            checkpoint_every_waves=2)
+    partial = dm.match(query, limit=None, checkpoint_dir=str(tmp_path),
+                       max_rows=120)
+    assert partial.stats.aborted and partial.stats.abort_reason == "rows"
+    ck = DistributedMatcher.load_state(str(tmp_path))
+    assert len(ck.pending_roots) > 0      # genuinely mid-run
+    dm2 = DistributedMatcher(data, n_shards=3, wave_size=32, kpr=4)
+    res = dm2.match(query, limit=None, checkpoint_dir=str(tmp_path),
+                    resume=True)
+    assert embset(res.embeddings) == embset(ref.embeddings)
+    # restore raised the phi floor above the writer's ceiling, so the
+    # seeded mu > 0 patterns were sound to keep
+    assert dm2.scheduler.pool.id_counter >= ck.phi_floor
+
+
+def test_resume_with_limit_yields_full_quota(tmp_path):
+    """A resumed run under a finite limit must deliver `limit` *unique*
+    embeddings when that many exist: the raw per-run limit leaves room
+    for duplicates of the checkpoint's prior embeddings (dedup happens
+    on the merged union)."""
+    query, data = trap_graph(n_b=40, n_c=40, n_good=2, tail_len=2, seed=0)
+    ref = backtrack_deadend(query, data, limit=None)
+    n_full = len(ref.embeddings)
+    assert n_full > 20
+    dm = DistributedMatcher(data, n_shards=4, wave_size=32, kpr=4,
+                            checkpoint_every_waves=2)
+    partial = dm.match(query, limit=None, checkpoint_dir=str(tmp_path),
+                       max_rows=120)
+    assert partial.stats.aborted
+    dm2 = DistributedMatcher(data, n_shards=2, wave_size=32, kpr=4)
+    res = dm2.match(query, limit=n_full - 5, checkpoint_dir=str(tmp_path),
+                    resume=True)
+    assert res.stats.found == n_full - 5
+    assert embset(res.embeddings) <= embset(ref.embeddings)
+    assert len(embset(res.embeddings)) == n_full - 5   # unique quota
+
+
+def test_legacy_json_checkpoint_read_path(tmp_path):
+    """One-release compatibility: a v1 state.json (root-candidate index
+    ranges) still restores — pending ranges map onto the deterministic
+    root order of the recomputed candidates."""
+    from repro.core.backtrack import _prepare
+    query, data = trap_graph(n_b=20, n_c=20, n_good=2, tail_len=2, seed=0)
+    ref = backtrack_deadend(query, data, limit=None)
+    cand_by_pos, _, _, _ = _prepare(query, data, None, None)
+    n_roots = len(cand_by_pos[0])
+    state = {"shards": [
+        {"shard_id": 0, "pending": [[0, n_roots // 2]], "found": []},
+        {"shard_id": 1, "pending": [[n_roots // 2, n_roots]], "found": []},
+    ]}
+    pathlib.Path(tmp_path, "state.json").write_text(json.dumps(state))
+    dm = DistributedMatcher(data, n_shards=3, wave_size=32, kpr=4)
+    res = dm.match(query, limit=None, checkpoint_dir=str(tmp_path),
+                   resume=True)
+    assert embset(res.embeddings) == embset(ref.embeddings)
+
+
+def test_exchange_selection_deterministic_by_hits():
+    """The cross-host pattern exchange ranks by Δ hit counters with a
+    deterministic (pos, vertex) tie-break — two identical runs export
+    the identical top-k, and no exported entry has fewer hits than an
+    excluded one."""
+    query, data = trap_graph(n_b=40, n_c=40, n_good=2, tail_len=2, seed=0)
+
+    def run():
+        dm = DistributedMatcher(data, n_shards=4, wave_size=32, kpr=4)
+        dm.match(query, limit=None)
+        return dm
+
+    dm1, dm2 = run(), run()
+    t1, h1, (p1, v1) = dm1.export_patterns(top_k=8,
+                                           transferable_only=False)
+    t2, h2, (p2, v2) = dm2.export_patterns(top_k=8,
+                                           transferable_only=False)
+    assert np.array_equal(p1, p2) and np.array_equal(v1, v2)
+    assert len(p1) == 8
+    full_hits = dm1._hits
+    valid = np.asarray(dm1._table.valid)
+    excluded = valid.copy()
+    excluded[p1, v1] = False
+    if excluded.any():
+        assert h1[p1, v1].min() >= full_hits[excluded].max()
+
+
+def test_exchange_transferable_only_filters_mu():
+    """transferable_only export keeps mu == 0 entries only (sound
+    without a phi floor); the full export keeps everything valid."""
+    query, data = trap_graph(n_b=40, n_c=40, n_good=2, tail_len=2, seed=0)
     dm = DistributedMatcher(data, n_shards=4, wave_size=32, kpr=4)
-    # save a synthetic mid-run state and restore onto a DIFFERENT count
-    from repro.core.distributed import ShardState
-    shards = [ShardState(0, [(0, 3), (3, 7)], []),
-              ShardState(1, [(7, 9)], [])]
-    dm.save_state(str(tmp_path), query, shards)
-    restored = dm.load_state(str(tmp_path), n_shards=3)
-    assert len(restored) == 3
-    all_ranges = sorted(r for s in restored for r in s.pending_ranges)
-    assert all_ranges == [(0, 3), (3, 7), (7, 9)]
+    dm.match(query, limit=None)
+    tab, hits, (pos, vert) = dm.export_patterns(transferable_only=True)
+    if len(pos):
+        assert (tab["mu"][pos, vert] == 0).all()
+    full, _, (fp, fv) = dm.export_patterns(transferable_only=False)
+    assert len(fp) >= len(pos)
+    assert len(fp) == np.asarray(dm._table.valid).sum()

@@ -148,6 +148,40 @@ def test_trivial_queries_in_batch(workload):
     assert not capped.timed_out
 
 
+def test_parallel_query_alongside_mixed_traffic(workload):
+    """A heavy query submitted with parallelism=4 (shard-as-segments)
+    next to plain traffic: everyone stays exact, and the heavy query
+    reports per-shard rows/items that add up to its total."""
+    data, queries, oracle = workload
+    heavy, heavy_data = trap_graph(n_b=20, n_c=20, n_good=2, tail_len=2,
+                                   seed=0)
+    srv = QueryServer(data, backend="engine", limit=None, n_slots=4,
+                      wave_size=32, kpr=4)
+    results = srv.submit_batch(queries[:4] + [queries[4]],
+                               parallelism=[1, 1, 1, 1, 4])
+    for r, ref in zip(results, oracle[:5]):
+        assert embset(r.embeddings) == embset(ref.embeddings)
+    par = results[-1]
+    assert par.stats.shard_rows is not None
+    assert len(par.stats.shard_rows) == 4
+    assert sum(par.stats.shard_rows) == par.stats.rows_created
+    assert sum(par.stats.shard_items) > 0
+    # scheduler-level steal/occupancy accounting is exposed for reports
+    rep = srv.slo_report()
+    assert "steals" in rep and "slot_rows_expanded" in rep
+    # dedicated heavy-workload server: parallelism on a trap query stays
+    # exact too (per-shard Δ sharing inside one slot)
+    ref_heavy = backtrack_deadend(heavy, heavy_data, limit=None)
+    srv2 = QueryServer(heavy_data, backend="engine", limit=None,
+                       n_slots=2, wave_size=32, kpr=4)
+    r_heavy = srv2.submit(0, heavy, parallelism=8)
+    assert embset(r_heavy.embeddings) == embset(ref_heavy.embeddings)
+    # a mis-sized per-query parallelism list must fail fast, not
+    # silently drop queries (zip truncation)
+    with pytest.raises(ValueError):
+        srv.submit_batch(queries[:3], parallelism=[4])
+
+
 def test_slo_report_has_occupancy(workload):
     data, queries, _ = workload
     srv = QueryServer(data, backend="engine", limit=None, n_slots=4,
