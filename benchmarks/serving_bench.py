@@ -10,7 +10,9 @@ DESIGN.md §4). Tracks the serving-perf trajectory across PRs:
     megastep depth the run used (so trajectories stay comparable when
     the fusion depth changes between PRs). A distributed workload
     (shard-as-segments, DESIGN.md §3) additionally records qps and
-    prune rate vs shard count on the trap query.
+    prune rate vs shard count on the trap query, and a repeated-template
+    workload (DESIGN.md §6) records the cold vs warm-started prune rate
+    on the corridor graph — the cross-query pattern-cache win.
 
     PYTHONPATH=src python -m benchmarks.serving_bench
     PYTHONPATH=src python -m benchmarks.serving_bench --smoke   # CI
@@ -107,6 +109,13 @@ def run(csv_rows: list | None = None, budget_s: float = 90.0,
         "dispatch_time_s": rep["dispatch_time_s"],
         "device_sync_time_s": rep["device_sync_time_s"],
         "host_time_s": rep["host_time_s"],
+        # bounded hashed Δ store (patterns.store): O(capacity) resident
+        # memory, eviction only ever loses pruning
+        "pattern_capacity": rep["pattern_capacity"],
+        "store_evictions": rep["store_evictions"],
+        "store_overwrites": rep["store_overwrites"],
+        "store_load_factor": rep["store_load_factor"],
+        "pattern_cache": rep["pattern_cache"],
     }
     # --- trap workload: clients hammering the paper's Fig. 1 hard
     # case — the regime where dead-end learning dominates, so the prune
@@ -170,6 +179,43 @@ def run(csv_rows: list | None = None, budget_s: float = 90.0,
         })
     payload["distributed_workload"] = dist_rows
 
+    # --- repeated-template workload: the serving scenario the pattern
+    # cache exists for — millions of users resubmitting the same query
+    # template. The corridor graph's dead-ends are prefix-independent
+    # (all μ == 0) and invisible to the candidate filters, so a cold run
+    # can't prune at all (each bait is entered exactly once) while a
+    # warm-started rerun prunes every bait at the first extraction.
+    from repro.data.graph_gen import corridor_graph
+    n_bait = 24 if smoke else 128
+    n_rep = 3 if smoke else 24
+    rq, rg = corridor_graph(n_bait=n_bait)
+    make_server(rg, limit=None).submit_batch([rq])       # compile warm-up
+    rserver = make_server(rg, limit=None)
+    cold = rserver.submit_batch([rq])[0]                 # populates cache
+    t0 = time.perf_counter()
+    warm = rserver.submit_batch([rq] * n_rep)
+    rwall = time.perf_counter() - t0
+    rrep = rserver.slo_report()
+
+    def rate(results):
+        prunes = sum(r.stats.deadend_prunes for r in results)
+        rows = sum(r.stats.rows_created for r in results)
+        return prunes / max(1, prunes + rows)
+
+    payload["repeated_template_workload"] = {
+        "n_bait": n_bait,
+        "n_repeats": n_rep,
+        "wall_time_s": rwall,
+        "queries_per_sec": n_rep / rwall if rwall > 0 else 0.0,
+        "cold_prune_rate": rate([cold]),
+        "warm_prune_rate": rate(warm),
+        "cold_rows": cold.stats.rows_created,
+        "warm_rows_per_query": (sum(r.stats.rows_created for r in warm)
+                                / len(warm)),
+        "warm_started": rrep["warm_started"],
+        "cache": rrep["pattern_cache"],
+    }
+
     if out_path is not None:
         out_path.write_text(json.dumps(payload, indent=2) + "\n")
     if csv_rows is not None:
@@ -194,6 +240,14 @@ def run(csv_rows: list | None = None, budget_s: float = 90.0,
             f"qps={d['queries_per_sec']:.1f};"
             f"prune_rate={d['prune_rate']:.2f};"
             f"steals={d['steals']}"))
+        rt = payload["repeated_template_workload"]
+        csv_rows.append((
+            f"template_corridor{n_bait}x{n_rep}",
+            rt["wall_time_s"] * 1e6 / n_rep,
+            f"qps={rt['queries_per_sec']:.1f};"
+            f"cold_prune={rt['cold_prune_rate']:.2f};"
+            f"warm_prune={rt['warm_prune_rate']:.2f};"
+            f"warm_started={rt['warm_started']}"))
     return payload
 
 

@@ -1,0 +1,62 @@
+"""Assert the serving-bench smoke payload's shape and print a one-line
+summary (wired into scripts/ci.sh — the smoke run used to be piped to
+/dev/null, which let metric regressions ship silently).
+
+Reads the JSON payload from stdin, checks the expected top-level keys
+(including the pattern-store / pattern-cache metrics), and checks the
+repeated-template workload actually demonstrates the warm-start win
+(warm prune rate above cold).
+"""
+import json
+import sys
+
+REQUIRED = [
+    "n_queries", "queries_per_sec", "total_embeddings", "p50_ms", "p99_ms",
+    "waves", "mean_wave_occupancy", "steady_wave_occupancy", "prune_rate",
+    "megastep_depth", "dispatch_time_s", "device_sync_time_s",
+    "host_time_s",
+    # bounded hashed Δ store + cross-query template cache
+    "pattern_capacity", "store_evictions", "store_overwrites",
+    "store_load_factor", "pattern_cache",
+    "trap_workload", "distributed_workload", "repeated_template_workload",
+]
+REQUIRED_TEMPLATE = [
+    "n_bait", "n_repeats", "cold_prune_rate", "warm_prune_rate",
+    "cold_rows", "warm_rows_per_query", "warm_started", "cache",
+]
+
+
+def main() -> int:
+    payload = json.load(sys.stdin)
+    missing = [k for k in REQUIRED if k not in payload]
+    if missing:
+        print(f"smoke payload missing keys: {missing}", file=sys.stderr)
+        return 1
+    rt = payload["repeated_template_workload"]
+    missing = [k for k in REQUIRED_TEMPLATE if k not in rt]
+    if missing:
+        print(f"repeated_template_workload missing keys: {missing}",
+              file=sys.stderr)
+        return 1
+    if not rt["warm_prune_rate"] > rt["cold_prune_rate"]:
+        print("warm-start regression: warm prune rate "
+              f"{rt['warm_prune_rate']:.3f} <= cold "
+              f"{rt['cold_prune_rate']:.3f}", file=sys.stderr)
+        return 1
+    if rt["warm_started"] < rt["n_repeats"]:
+        print(f"warm_started={rt['warm_started']} < "
+              f"n_repeats={rt['n_repeats']}: template cache not hitting",
+              file=sys.stderr)
+        return 1
+    print("serving_bench --smoke: OK "
+          f"(qps={payload['queries_per_sec']:.1f}, "
+          f"prune_rate={payload['prune_rate']:.2f}, "
+          f"warm_prune={rt['warm_prune_rate']:.2f} vs "
+          f"cold={rt['cold_prune_rate']:.2f}, "
+          f"warm_started={rt['warm_started']}, "
+          f"evictions={payload['store_evictions']})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

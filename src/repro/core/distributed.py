@@ -18,9 +18,11 @@ Parallel model:
     range of the most loaded shard (straggler mitigation on row ranges,
     see ``segments.QueryState.balance_shards``);
   * progress is checkpointable at segment granularity — unresolved root
-    rows, found embeddings, and the full Δ table (with its hit
-    counters) snapshot to compressed ``.npz``; restore may change the
-    shard count (elasticity) and keeps the learned Δ;
+    rows, found embeddings, and the learned Δ as a compact *entries*
+    snapshot (``patterns.store``: pos/v/φ/μ/Γ/hits arrays over valid
+    entries only, layout- and capacity-independent) in compressed
+    ``.npz``; restore may change the shard count (elasticity) *and* the
+    pattern-store capacity, and keeps the learned Δ;
   * *cross-host* replication (each host runs its own scheduler over a
     replica of the data graph) exchanges a capped pattern set selected
     deterministically by Δ hit counters (:func:`select_exchange_patterns`)
@@ -44,18 +46,19 @@ import pathlib
 
 import numpy as np
 
+from ..patterns.store import ENTRY_KEYS, select_entries
 from .backtrack import MatchResult, _prepare
-from .engine_step import TableArrays
 from .graph import Graph
 from .segments import EngineStats
 from .vectorized import WaveScheduler
 
-CHECKPOINT_VERSION = 2
-_TABLE_KEYS = ("phi", "mu", "mask", "valid")
+CHECKPOINT_VERSION = 3
+# legacy v2 dense-table npz keys (one-release read compatibility)
+_V2_TABLE_KEYS = ("phi", "mu", "mask", "valid")
 
 
-def select_exchange_patterns(table, hits: np.ndarray, top_k: int,
-                             transferable_only: bool = True):
+def select_exchange_patterns(entries: dict, top_k: int,
+                             transferable_only: bool = True) -> dict:
     """Deterministic top-k pattern selection for the cross-host exchange
     (DESIGN.md §3).
 
@@ -74,28 +77,12 @@ def select_exchange_patterns(table, hits: np.ndarray, top_k: int,
     keep ``transferable_only=True`` and ship μ == 0 patterns, whose
     match condition Φ[0] == 0 holds in every engine.
 
-    ``table`` is a TableArrays or a dict of numpy arrays. Returns
-    ``(exported_table_dict, exported_hits, (pos, vert))`` where the
-    table dict holds only the selected entries (zeros elsewhere).
+    ``entries`` is a pattern entries dict (``patterns.store``); the
+    returned dict holds only the selected entries, still sorted by
+    (pos, v).
     """
-    arr = {k: np.asarray(table[k] if isinstance(table, dict)
-                         else getattr(table, k)) for k in _TABLE_KEYS}
-    hits = np.asarray(hits)
-    sel = arr["valid"].copy()
-    if transferable_only:
-        sel &= arr["mu"] == 0
-    pos, vert = np.nonzero(sel)
-    if top_k is not None and len(pos) > top_k:
-        h = hits[pos, vert]
-        rank = np.lexsort((vert, pos, -h))      # -hits, then pos, vert
-        keep = np.sort(rank[:top_k])
-        pos, vert = pos[keep], vert[keep]
-    out = {k: np.zeros_like(arr[k]) for k in _TABLE_KEYS}
-    for k in _TABLE_KEYS:
-        out[k][pos, vert] = arr[k][pos, vert]
-    out_hits = np.zeros_like(hits)
-    out_hits[pos, vert] = hits[pos, vert]
-    return out, out_hits, (pos, vert)
+    return select_entries(entries, top_k,
+                          transferable_only=transferable_only)
 
 
 @dataclasses.dataclass
@@ -105,15 +92,16 @@ class Checkpoint:
     ``pending_roots`` are *data-vertex ids* of root candidates whose
     subtree was not fully resolved at snapshot time — restore re-seeds
     exactly those roots (onto any shard count) and deduplicates
-    re-enumerated embeddings. ``table``/``hits`` carry the learned Δ;
+    re-enumerated embeddings. ``entries`` carries the learned Δ in the
+    layout-independent entries form (``patterns.store``, hit counters
+    included) so restore works under any pattern-store capacity;
     ``phi_floor`` is the writer's φ ceiling, which the restoring
     scheduler reserves so μ > 0 patterns stay sound.
     """
     version: int
-    pending_roots: np.ndarray | None          # int32 [P] (v2)
+    pending_roots: np.ndarray | None          # int32 [P] (v2+)
     embeddings: list                          # list of int32 [n_query]
-    table: dict | None                        # numpy TableArrays fields
-    hits: np.ndarray | None                   # int64 [N_PAD, V]
+    entries: dict | None                      # Δ entries dict (v3)
     phi_floor: int = 1
     n_shards: int = 0
     # legacy (v1 JSON): root-candidate *index* ranges instead of ids
@@ -130,21 +118,24 @@ class DistributedMatcher:
                  share_top_k: int = 4096,
                  megastep_depth: int = 6,
                  adaptive_prune_threshold: float = 0.05,
-                 checkpoint_every_waves: int = 8):
+                 checkpoint_every_waves: int = 8,
+                 pattern_capacity: int = 4096,
+                 pattern_cache: bool = True):
         self.data = data
         self.n_shards = int(n_shards)
         self.share_patterns = share_patterns
         self.share_top_k = share_top_k
         self.checkpoint_every_waves = int(checkpoint_every_waves)
         # shared mode: ONE resident query whose n_shards root segments
-        # share one slot-private table. Ablation mode: one isolated
-        # scheduler query (own slot, own table) per shard.
+        # share one slot-private Δ store. Ablation mode: one isolated
+        # scheduler query (own slot, own store) per shard.
         self.scheduler = WaveScheduler(
             data, n_slots=(1 if share_patterns else self.n_shards),
             wave_size=wave_size, kpr=kpr, megastep_depth=megastep_depth,
-            adaptive_prune_threshold=adaptive_prune_threshold)
-        self._table: TableArrays | None = None
-        self._hits: np.ndarray | None = None
+            adaptive_prune_threshold=adaptive_prune_threshold,
+            pattern_capacity=pattern_capacity,
+            pattern_cache=pattern_cache)
+        self._entries: dict | None = None     # last match's Δ snapshot
 
     # -- main entry ---------------------------------------------------------
     def match(self, query: Graph, limit: int | None = 1000,
@@ -160,6 +151,14 @@ class DistributedMatcher:
         ``max_rows`` bounds the row budget (mainly to exercise
         mid-flight aborts + restore in tests).
         """
+        if checkpoint_dir is not None and not self.share_patterns:
+            # fail fast, before load_state/reserve_phi_floor touch any
+            # state: the isolated-shard ablation has no snapshot path,
+            # and a silently ignored checkpoint_dir would lose progress
+            # on abort (or resume stale state from an earlier run)
+            raise ValueError(
+                "checkpointing requires share_patterns=True "
+                "(the isolated-shard ablation does not snapshot)")
         cand_by_pos, order, _, _ = _prepare(query, self.data, None, None)
         roots = np.asarray(cand_by_pos[0], np.int32)
         prior = None
@@ -167,7 +166,7 @@ class DistributedMatcher:
             prior = self.load_state(checkpoint_dir)
         if prior is not None:
             pending = self._pending_roots(prior, roots)
-            if prior.table is not None:
+            if prior.entries is not None:
                 self.scheduler.reserve_phi_floor(prior.phi_floor)
         else:
             pending = roots
@@ -189,17 +188,11 @@ class DistributedMatcher:
                                       res.stats, limit)
 
         sched = self.scheduler
-        seed_table = None
-        seed_hits = None
-        if prior is not None and prior.table is not None:
-            import jax.numpy as jnp
-            seed_table = TableArrays(
-                **{k: jnp.asarray(prior.table[k]) for k in _TABLE_KEYS})
-            seed_hits = prior.hits
+        seed_patterns = (prior.entries if prior is not None else None)
         qid = sched.submit(query, limit=run_limit, cand=sub_cand,
                            order=order, parallelism=self.n_shards,
-                           max_rows=max_rows, seed_table=seed_table,
-                           seed_hits=seed_hits, keep_table=True)
+                           max_rows=max_rows, seed_patterns=seed_patterns,
+                           keep_table=True)
         waves = 0
         while sched.step():
             waves += 1
@@ -210,8 +203,7 @@ class DistributedMatcher:
                     self.save_state(checkpoint_dir, ck)
         res = sched.finished.pop(qid)
         sched.poll()
-        self._table = sched.tables.pop(qid, None)
-        self._hits = sched.table_hits.pop(qid, None)
+        self._entries = sched.tables.pop(qid, None)
         out = self._merge_result(prior_embs, res.embeddings, res.stats,
                                  limit)
         # final snapshot only on clean completion: an aborted run's
@@ -223,25 +215,23 @@ class DistributedMatcher:
                 pending_roots=np.zeros(0, np.int32),
                 embeddings=[np.asarray(e, np.int32)
                             for e in out.embeddings],
-                table=self._table_dict(), hits=self._hits,
+                entries=self._entries,
                 phi_floor=self.scheduler.pool.id_counter,
                 n_shards=self.n_shards))
         return out
 
     # -- pattern export (cross-host exchange) -------------------------------
     def export_patterns(self, top_k: int | None = None,
-                        transferable_only: bool = True):
+                        transferable_only: bool = True) -> dict:
         """Export the last match's Δ for cross-host replication, capped
         at ``top_k`` (default ``share_top_k``) entries selected by
         :func:`select_exchange_patterns` (hit-counter ranked,
-        deterministic)."""
-        if self._table is None:
+        deterministic). Returns a pattern entries dict ready for a
+        receiving scheduler's ``seed_patterns``."""
+        if self._entries is None:
             raise RuntimeError("no completed shared match to export")
-        hits = (self._hits if self._hits is not None
-                else np.zeros(np.asarray(self._table.valid).shape,
-                              np.int64))
         return select_exchange_patterns(
-            self._table, hits,
+            self._entries,
             self.share_top_k if top_k is None else top_k,
             transferable_only=transferable_only)
 
@@ -338,35 +328,31 @@ class DistributedMatcher:
                 pending.append(seg.frontier[rows, 0])
         pending_roots = (np.concatenate(pending).astype(np.int32)
                          if pending else np.zeros(0, np.int32))
-        from .engine_step import read_table_slot
-        table = read_table_slot(sched.tb, q.slot)
+        from ..patterns.store import store_to_entries
+        from .engine_step import read_store_slot
+        entries = store_to_entries(read_store_slot(sched.tb, q.slot),
+                                   q.hit_counts)
         return Checkpoint(
             version=CHECKPOINT_VERSION, pending_roots=pending_roots,
             embeddings=([np.asarray(e, np.int32) for e in prior_embs]
                         + [np.asarray(e, np.int32)
                            for e in q.embeddings]),
-            table={k: np.asarray(getattr(table, k))
-                   for k in _TABLE_KEYS},
-            hits=(q.hit_counts.copy()
-                  if q.hit_counts is not None else None),
+            entries=entries,
             phi_floor=sched.pool.id_counter, n_shards=self.n_shards)
-
-    def _table_dict(self) -> dict | None:
-        if self._table is None:
-            return None
-        return {k: np.asarray(getattr(self._table, k))
-                for k in _TABLE_KEYS}
 
     # -- checkpoint / elastic restore ---------------------------------------
     @staticmethod
     def save_state(path: str, ck: Checkpoint) -> None:
         """Write a compressed ``state.npz`` snapshot (atomic rename).
 
-        Format v2: ``version``, ``n_shards``, ``phi_floor``,
+        Format v3: ``version``, ``n_shards``, ``phi_floor``,
         ``pending_roots`` (data-vertex ids), ``embeddings`` (int32
-        [n_found, n_query]), and the Δ table arrays + hit counters. The
-        shard count is informational — restore redistributes pending
-        roots over whatever ``n_shards`` the restoring matcher uses.
+        [n_found, n_query]), and the Δ *entries* arrays
+        (``delta_pos/v/phi/mu/mask/hits`` — valid entries only, so the
+        snapshot is O(patterns), not O(positions × vertices), and
+        restores under any store capacity). The shard count is
+        informational — restore redistributes pending roots over
+        whatever ``n_shards`` the restoring matcher uses.
         """
         p = pathlib.Path(path)
         p.mkdir(parents=True, exist_ok=True)
@@ -381,12 +367,9 @@ class DistributedMatcher:
                 np.int32),
             "embeddings": embs,
         }
-        if ck.table is not None:
-            for k in _TABLE_KEYS:
-                payload[f"table_{k}"] = np.asarray(ck.table[k])
-            payload["table_hits"] = np.asarray(
-                ck.hits if ck.hits is not None
-                else np.zeros(ck.table["valid"].shape, np.int64))
+        if ck.entries is not None:
+            for k in ENTRY_KEYS:
+                payload[f"delta_{k}"] = np.asarray(ck.entries[k])
         tmp = p / "state.npz.tmp"
         with open(tmp, "wb") as f:
             np.savez_compressed(f, **payload)
@@ -394,24 +377,27 @@ class DistributedMatcher:
 
     @staticmethod
     def load_state(path: str) -> Checkpoint | None:
-        """Load the latest snapshot. Prefers ``state.npz`` (v2); falls
-        back to the one-release legacy ``state.json`` (v1: root-index
-        ranges, no Δ table)."""
+        """Load the latest snapshot. Prefers ``state.npz`` (v3 entries;
+        v2 dense-table snapshots are converted on read); falls back to
+        the legacy ``state.json`` (v1: root-index ranges, no Δ)."""
         p = pathlib.Path(path)
         npz = p / "state.npz"
         if npz.exists():
             with np.load(npz) as z:
-                table = None
-                hits = None
-                if "table_valid" in z.files:
-                    table = {k: z[f"table_{k}"] for k in _TABLE_KEYS}
-                    hits = z["table_hits"]
+                entries = None
+                if "delta_pos" in z.files:
+                    entries = {k: z[f"delta_{k}"] for k in ENTRY_KEYS}
+                elif "table_valid" in z.files:
+                    entries = _entries_from_dense_v2(
+                        {k: z[f"table_{k}"] for k in _V2_TABLE_KEYS},
+                        z["table_hits"] if "table_hits" in z.files
+                        else None)
                 embs = z["embeddings"]
                 return Checkpoint(
                     version=int(z["version"]),
                     pending_roots=z["pending_roots"].astype(np.int32),
                     embeddings=[e for e in embs.astype(np.int32)],
-                    table=table, hits=hits,
+                    entries=entries,
                     phi_floor=int(z["phi_floor"]),
                     n_shards=int(z["n_shards"]))
         legacy = p / "state.json"
@@ -423,7 +409,22 @@ class DistributedMatcher:
                 ranges.extend([tuple(r) for r in s["pending"]])
                 found.extend(np.asarray(e, np.int32) for e in s["found"])
             return Checkpoint(version=1, pending_roots=None,
-                              embeddings=found, table=None, hits=None,
+                              embeddings=found, entries=None,
                               pending_index_ranges=ranges,
                               n_shards=len(state["shards"]))
         return None
+
+
+def _entries_from_dense_v2(table: dict, hits: np.ndarray | None) -> dict:
+    """Convert a legacy v2 dense ``[N_PAD, V]`` table snapshot to the
+    entries form (one-release read compatibility)."""
+    valid = np.asarray(table["valid"])
+    pos, vert = np.nonzero(valid)
+    from ..patterns.store import mask64
+    return {"pos": pos.astype(np.int32), "v": vert.astype(np.int32),
+            "phi": np.asarray(table["phi"])[pos, vert].astype(np.int32),
+            "mu": np.asarray(table["mu"])[pos, vert].astype(np.int32),
+            "mask": mask64(np.asarray(table["mask"])[pos, vert]),
+            "hits": (np.asarray(hits)[pos, vert].astype(np.int64)
+                     if hits is not None
+                     else np.zeros(len(pos), np.int64))}

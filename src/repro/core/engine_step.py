@@ -8,14 +8,14 @@ whole wave, child extraction, pattern scatter — happens here on fixed
 shapes so a single compiled program serves every query.
 
 Multi-query waves (DESIGN.md §2): per-query state lives in *banks* stacked
-along a leading slot axis — :class:`QueryBank` ``[S, ...]`` and
-:class:`TableBank` ``[S, ...]`` — and every wave row carries a
-``query_slot`` and a ``depth`` lane, so one jitted program expands a wave
-whose rows belong to many concurrent queries at different depths (and,
-with shard-as-segments, to many shards of the same query). The
-single-query entry points (``expand_wave`` &c.) remain as thin S == 1
-wrappers for sequential-style callers and tests; the launch dry-run
-lowers the real multi-query program.
+along a leading slot axis — :class:`QueryBank` ``[S, ...]`` and the
+bounded hashed Δ store :class:`~repro.patterns.store.PatternStoreBank`
+``[S, capacity]`` — and every wave row carries a ``query_slot`` and a
+``depth`` lane, so one jitted program expands a wave whose rows belong to
+many concurrent queries at different depths (and, with shard-as-segments,
+to many shards of the same query). Sequential-style callers go through
+the 1-slot ``WaveEngine`` facade; the launch dry-run lowers the real
+multi-query program.
 
 Design notes (see DESIGN.md §2):
   * adjacency and candidate sets are packed uint32 bitmaps; Eq. 2 becomes
@@ -25,9 +25,13 @@ Design notes (see DESIGN.md §2):
     XLA fuses well on CPU and is what the dry-run lowers by default).
   * dead-end masks are bitmasks over query order positions, two uint32
     words (supports |V_Q| <= 64).
-  * the numeric pattern check Φ[μ] == φ (paper Eq. 7) is a double gather
-    and a compare, evaluated for every (row, candidate-vertex) pair of the
-    wave in one shot.
+  * the numeric pattern check Φ[μ] == φ (paper Eq. 7) is a hashed probe
+    (``patterns.store.hash_probe``: multiplicative hash + PROBE-slot
+    linear window), a gather and a compare, evaluated for every
+    (row, extracted-child) pair of the wave in one shot. The store is
+    O(configured capacity) — the last data-graph-sized resident array
+    is gone — and lookups bump per-entry hit counters that guide
+    eviction when an insert finds its probe window full.
 """
 from __future__ import annotations
 
@@ -38,7 +42,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-MASK_WORDS = 2          # dead-end masks cover up to 64 query positions
+from ..patterns.store import (MASK_WORDS, PatternStore, PatternStoreBank,
+                              StoreCounters, hash_insert, hash_probe)
+
 N_PAD = 64              # padded query size
 FULL = jnp.uint32(0xFFFFFFFF)
 
@@ -47,13 +53,6 @@ class GraphArrays(NamedTuple):
     """Device view of the data graph."""
     adj_bitmap: jax.Array    # uint32 [V, W] packed adjacency
     n_vertices: jax.Array    # int32 scalar
-
-
-class QueryArrays(NamedTuple):
-    """Device view of one query (already permuted to matching order)."""
-    cand_bitmap: jax.Array   # uint32 [N_PAD, W] candidates per position
-    nbr_mask: jax.Array      # bool [N_PAD, N_PAD] query adjacency (by pos)
-    n_query: jax.Array       # int32 scalar
 
 
 class QueryBank(NamedTuple):
@@ -70,54 +69,6 @@ class QueryBank(NamedTuple):
             nbr_mask=jnp.zeros((n_slots, N_PAD, N_PAD), bool),
             n_query=jnp.zeros((n_slots,), jnp.int32),
             learn=jnp.zeros((n_slots,), bool))
-
-
-class TableArrays(NamedTuple):
-    """The dead-end pattern table Δ, keyed by (order position, vertex)."""
-    phi: jax.Array           # int32 [N_PAD, V]  stored prefix id φ
-    mu: jax.Array            # int32 [N_PAD, V]  prefix length μ
-    mask: jax.Array          # uint32 [N_PAD, V, MASK_WORDS] mask Γ
-    valid: jax.Array         # bool [N_PAD, V]
-
-    @staticmethod
-    def empty(n_vertices: int) -> "TableArrays":
-        v = n_vertices
-        return TableArrays(
-            phi=jnp.zeros((N_PAD, v), jnp.int32),
-            mu=jnp.zeros((N_PAD, v), jnp.int32),
-            mask=jnp.zeros((N_PAD, v, MASK_WORDS), jnp.uint32),
-            valid=jnp.zeros((N_PAD, v), bool),
-        )
-
-
-class TableBank(NamedTuple):
-    """Per-slot dead-end tables, Δ[slot, order position, vertex]."""
-    phi: jax.Array           # int32 [S, N_PAD, V]
-    mu: jax.Array            # int32 [S, N_PAD, V]
-    mask: jax.Array          # uint32 [S, N_PAD, V, MASK_WORDS]
-    valid: jax.Array         # bool [S, N_PAD, V]
-
-    @staticmethod
-    def empty(n_slots: int, n_vertices: int) -> "TableBank":
-        s, v = n_slots, n_vertices
-        return TableBank(
-            phi=jnp.zeros((s, N_PAD, v), jnp.int32),
-            mu=jnp.zeros((s, N_PAD, v), jnp.int32),
-            mask=jnp.zeros((s, N_PAD, v, MASK_WORDS), jnp.uint32),
-            valid=jnp.zeros((s, N_PAD, v), bool),
-        )
-
-
-class WaveResult(NamedTuple):
-    refined_empty: jax.Array     # bool [F]   Eq.2 candidate set empty
-    n_children: jax.Array        # int32 [F]  surviving children this pass
-    n_leftover: jax.Array        # int32 [F]  children beyond the per-row cap
-    partial_mask: jax.Array      # uint32 [F, MASK_WORDS] inj+prune Γ* terms
-    child_v: jax.Array           # int32 [F, KPR] child vertices (-1 pad)
-    child_valid: jax.Array       # bool [F, KPR]
-    leftover: jax.Array          # uint32 [F, W] unexpanded survivor bits
-    n_pruned: jax.Array          # int32 [] dead-end prunes in this wave
-    n_inj: jax.Array             # int32 [] injectivity kills in this wave
 
 
 class WaveResultMQ(NamedTuple):
@@ -251,34 +202,47 @@ def _extract_topk_packed(live: jax.Array, kpr: int
 
 
 # ===================================================================
-# slot management: load one query (+ its table) into a bank slot
+# slot management: load one query (+ its Δ store) into a bank slot
 # ===================================================================
-@jax.jit
-def load_slot(qb: QueryBank, tb: TableBank, slot: jax.Array,
+# Donation everywhere the store bank is threaded: the bank is the one
+# large mutable device structure, and without donation every program
+# that returns it copies all seven [S, C] lanes per dispatch (~4x the
+# useful work on the single-step path). Callers always replace their
+# handle with the returned one, so the old buffers are dead by
+# construction.
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def load_slot(qb: QueryBank, tb: PatternStoreBank, slot: jax.Array,
               cand_bitmap: jax.Array, nbr_mask: jax.Array,
-              n_query: jax.Array, table: TableArrays,
-              learn: jax.Array = True) -> tuple[QueryBank, TableBank]:
-    """Install a query in bank slot ``slot`` (admission). ``table`` is the
-    slot's initial dead-end table: empty, or seeded with transferable
-    patterns (see core.distributed). ``learn`` gates the megastep's
-    in-loop pattern stores for this slot."""
+              n_query: jax.Array, store: PatternStore,
+              learn: jax.Array = True
+              ) -> tuple[QueryBank, PatternStoreBank]:
+    """Install a query in bank slot ``slot`` (admission). ``store`` is
+    the slot's initial hashed Δ store: empty, or seeded with transferable
+    patterns (template-cache warm start, checkpoint restore, cross-host
+    import — see patterns.cache / core.distributed). ``learn`` gates the
+    megastep's in-loop pattern stores for this slot."""
     qb2 = QueryBank(
         cand_bitmap=qb.cand_bitmap.at[slot].set(cand_bitmap),
         nbr_mask=qb.nbr_mask.at[slot].set(nbr_mask),
         n_query=qb.n_query.at[slot].set(n_query),
         learn=qb.learn.at[slot].set(learn))
-    tb2 = TableBank(
-        phi=tb.phi.at[slot].set(table.phi),
-        mu=tb.mu.at[slot].set(table.mu),
-        mask=tb.mask.at[slot].set(table.mask),
-        valid=tb.valid.at[slot].set(table.valid))
+    tb2 = PatternStoreBank(
+        key_pos=tb.key_pos.at[slot].set(store.key_pos),
+        key_v=tb.key_v.at[slot].set(store.key_v),
+        phi=tb.phi.at[slot].set(store.phi),
+        mu=tb.mu.at[slot].set(store.mu),
+        mask=tb.mask.at[slot].set(store.mask),
+        valid=tb.valid.at[slot].set(store.valid),
+        hits=tb.hits.at[slot].set(store.hits))
     return qb2, tb2
 
 
-def read_table_slot(tb: TableBank, slot: int) -> TableArrays:
-    """Read one slot's table back out (pattern export on completion)."""
-    return TableArrays(phi=tb.phi[slot], mu=tb.mu[slot],
-                       mask=tb.mask[slot], valid=tb.valid[slot])
+def read_store_slot(tb: PatternStoreBank, slot: int) -> PatternStore:
+    """Read one slot's Δ store back out (pattern export on completion)."""
+    return PatternStore(key_pos=tb.key_pos[slot], key_v=tb.key_v[slot],
+                        phi=tb.phi[slot], mu=tb.mu[slot],
+                        mask=tb.mask[slot], valid=tb.valid[slot],
+                        hits=tb.hits[slot])
 
 
 # ===================================================================
@@ -318,26 +282,30 @@ def refine_eq2_mq(g: GraphArrays, qb: QueryBank, query_slot: jax.Array,
     return lax.fori_loop(0, N_PAD, body, acc0)
 
 
-def deadend_lookup_children_mq(tb: TableBank, phi: jax.Array,
+def deadend_lookup_children_mq(tb: PatternStoreBank, phi: jax.Array,
                                query_slot: jax.Array, depth: jax.Array,
                                child_v: jax.Array
-                               ) -> tuple[jax.Array, jax.Array]:
+                               ) -> tuple[jax.Array, jax.Array,
+                                          PatternStoreBank]:
     """Paper-Eq.7 check for extracted children only (§Perf iteration 2:
-    O(F·kpr) gathers instead of the O(F·V) dense sweep), table rows keyed
-    per query slot.
+    O(F·kpr·PROBE) hashed probes instead of the O(F·V) dense sweep),
+    store rows keyed per query slot.
 
     child_v: int32 [F, KPR] candidate vertices (-1 = empty slot).
-    Returns (prune bool [F, KPR], Γ* contribution uint32 [F, MASK_WORDS]).
+    Returns (prune bool [F, KPR], Γ* contribution uint32 [F, MASK_WORDS],
+    the store bank with the matched entries' hit counters bumped — the
+    counters feed eviction ranking and the host's exchange/cache
+    ranking, so lookups thread the bank functionally).
     """
-    cv = child_v.clip(0)
-    q2 = query_slot[:, None]
-    d2 = depth[:, None]
-    mu_g = tb.mu[q2, d2, cv]                 # [F, KPR]
-    phi_g = tb.phi[q2, d2, cv]
-    valid_g = tb.valid[q2, d2, cv] & (child_v >= 0)
-    my_phi = jnp.take_along_axis(phi, mu_g, axis=1)
-    prune = valid_g & (my_phi == phi_g)
-    masks = tb.mask[q2, d2, cv]              # [F, KPR, MASK_WORDS]
+    f, kpr = child_v.shape
+    cv = child_v.clip(0).reshape(-1)                        # [F*KPR]
+    sl = jnp.broadcast_to(query_slot[:, None], (f, kpr)).reshape(-1)
+    kp = jnp.broadcast_to(depth[:, None], (f, kpr)).reshape(-1)
+    found, phi_g, mu_g, mask_g, idx = hash_probe(tb, sl, kp, cv)
+    valid_g = found.reshape(f, kpr) & (child_v >= 0)
+    my_phi = jnp.take_along_axis(phi, mu_g.reshape(f, kpr), axis=1)
+    prune = valid_g & (my_phi == phi_g.reshape(f, kpr))
+    masks = mask_g.reshape(f, kpr, MASK_WORDS)
     masks = jnp.where(prune[:, :, None],
                       masks | _position_bits(depth)[:, None, :],
                       jnp.uint32(0))
@@ -348,18 +316,24 @@ def deadend_lookup_children_mq(tb: TableBank, phi: jax.Array,
     weights = jnp.uint32(1) << shifts
     contrib = (got.astype(jnp.uint32) * weights).sum(
         axis=-1, dtype=jnp.uint32)           # [F, MASK_WORDS]
-    return prune, contrib
+    n_slots = tb.valid.shape[0]
+    hit_slot = jnp.where(prune.reshape(-1), sl, n_slots)   # miss -> dropped
+    tb2 = tb._replace(hits=tb.hits.at[hit_slot, idx].add(1, mode="drop"))
+    return prune, contrib, tb2
 
 
-def _expand_rows(g: GraphArrays, qb: QueryBank, tb: TableBank,
+def _expand_rows(g: GraphArrays, qb: QueryBank, tb: PatternStoreBank,
                  frontier: jax.Array, used: jax.Array, phi: jax.Array,
                  row_valid: jax.Array, query_slot: jax.Array,
                  depth: jax.Array, kpr: int,
-                 backend: str = "jnp") -> WaveResultMQ:
+                 backend: str = "jnp"
+                 ) -> tuple[WaveResultMQ, PatternStoreBank]:
     """One expansion pass over F mixed-query rows (shared by
     :func:`expand_wave_mq` and the megastep loop body): Eq. 2 refinement,
     injectivity Γ* terms, packed top-kpr child extraction, and the
-    Lemma 3 / Eq. 7 dead-end check on the extracted children."""
+    Lemma 3 / Eq. 7 dead-end check on the extracted children. Returns
+    the wave result plus the store bank with lookup hit counters
+    bumped."""
     f = frontier.shape[0]
 
     refined = refine_eq2_mq(g, qb, query_slot, frontier, depth,
@@ -397,7 +371,7 @@ def _expand_rows(g: GraphArrays, qb: QueryBank, tb: TableBank,
     # children turns the O(F*V) dense sweep into O(F*kpr) gathers;
     # prunable candidates still in `leftover` are checked when a later
     # pass extracts them.
-    prune, prune_mask = deadend_lookup_children_mq(
+    prune, prune_mask, tb = deadend_lookup_children_mq(
         tb, phi, query_slot, depth, child_v)
     child_valid = (child_v >= 0) & ~prune
     n_children = child_valid.sum(axis=1).astype(jnp.int32)
@@ -414,15 +388,17 @@ def _expand_rows(g: GraphArrays, qb: QueryBank, tb: TableBank,
         n_pruned=jnp.where(row_valid, prune.sum(axis=1), 0),
         n_inj=jnp.where(row_valid, n_inj_per_row, 0),
         pruned_v=jnp.where(prune & row_valid[:, None], child_v, -1),
-    )
+    ), tb
 
 
-@functools.partial(jax.jit, static_argnames=("kpr", "backend"))
-def expand_wave_mq(g: GraphArrays, qb: QueryBank, tb: TableBank,
+@functools.partial(jax.jit, donate_argnums=(2,),
+                   static_argnames=("kpr", "backend"))
+def expand_wave_mq(g: GraphArrays, qb: QueryBank, tb: PatternStoreBank,
                    frontier: jax.Array, used: jax.Array, phi: jax.Array,
                    row_valid: jax.Array, query_slot: jax.Array,
                    depth: jax.Array, kpr: int = 16,
-                   backend: str = "jnp") -> WaveResultMQ:
+                   backend: str = "jnp"
+                   ) -> tuple[WaveResultMQ, PatternStoreBank]:
     """Expand every row of a mixed-query wave by one query position.
 
     Args:
@@ -436,16 +412,21 @@ def expand_wave_mq(g: GraphArrays, qb: QueryBank, tb: TableBank,
       kpr:        static per-row child cap for this pass (leftovers are
                   re-expanded by the host in later passes).
       backend:    static kernel backend for the Eq. 2 contraction.
+
+    Returns (result, store bank with Δ lookup hit counters bumped).
     """
     return _expand_rows(g, qb, tb, frontier, used, phi, row_valid,
                         query_slot, depth, kpr, backend)
 
 
-@functools.partial(jax.jit, static_argnames=("kpr",))
-def extract_more_mq(tb: TableBank, phi: jax.Array, query_slot: jax.Array,
-                    depth: jax.Array, leftover: jax.Array, kpr: int = 64
+@functools.partial(jax.jit, donate_argnums=(0,),
+                   static_argnames=("kpr",))
+def extract_more_mq(tb: PatternStoreBank, phi: jax.Array,
+                    query_slot: jax.Array, depth: jax.Array,
+                    leftover: jax.Array, kpr: int = 64
                     ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array,
-                               jax.Array, jax.Array, jax.Array]:
+                               jax.Array, jax.Array, jax.Array,
+                               PatternStoreBank]:
     """Extract up to ``kpr`` more children per row from leftover bitmaps
     of a mixed-query wave.
 
@@ -453,15 +434,15 @@ def extract_more_mq(tb: TableBank, phi: jax.Array, query_slot: jax.Array,
     fresh pass; the dead-end check runs here at extraction time (and may
     see *newer* patterns than the fresh pass did — strictly more pruning).
     Returns (child_v, child_valid, new_leftover, n_leftover,
-             partial_mask, n_pruned[F], pruned_v[F, KPR]).
+             partial_mask, n_pruned[F], pruned_v[F, KPR], tb).
     """
     child_v, new_leftover, n_leftover = _extract_topk_packed(leftover, kpr)
-    prune, prune_mask = deadend_lookup_children_mq(
+    prune, prune_mask, tb = deadend_lookup_children_mq(
         tb, phi, query_slot, depth, child_v)
     child_valid = (child_v >= 0) & ~prune
     return (jnp.where(child_valid, child_v, -1), child_valid,
             new_leftover, n_leftover, prune_mask, prune.sum(axis=1),
-            jnp.where(prune, child_v, -1))
+            jnp.where(prune, child_v, -1), tb)
 
 
 @jax.jit
@@ -504,27 +485,23 @@ def assemble_children_mq(frontier: jax.Array, used: jax.Array,
     return cf, cu, cp, parent, valid
 
 
-@jax.jit
-def store_patterns_mq(tb: TableBank, query_slot: jax.Array,
+@functools.partial(jax.jit, donate_argnums=(0,))
+def store_patterns_mq(tb: PatternStoreBank, query_slot: jax.Array,
                       key_pos: jax.Array, key_v: jax.Array,
                       phis: jax.Array, mus: jax.Array, masks: jax.Array,
-                      valid: jax.Array) -> TableBank:
-    """Batched Δ[slot, u_k, v] <- (φ, μ, Γ) scatter (paper Eq. 6) across
-    all slots at once.
+                      valid: jax.Array
+                      ) -> tuple[PatternStoreBank, StoreCounters]:
+    """Batched Δ[slot, (u_k, v)] <- (φ, μ, Γ) hashed insert (paper Eq. 6)
+    across all slots at once.
 
-    Invalid (padding) entries are routed out of bounds and dropped by the
-    scatter, so they can never clobber a real pattern.
+    Invalid (padding) entries are routed out of bounds and dropped, so
+    they can never clobber a real pattern. Returns the updated bank and
+    per-slot insert counters (stored / overwrites / evictions / in-batch
+    drops) — eviction is counter-guided and always sound (advisory-table
+    invariant: losing a pattern only loses pruning, see patterns.store).
     """
-    v_dim = tb.phi.shape[2]
-    qs = jnp.where(valid, query_slot, 0)
-    kp = jnp.where(valid, key_pos, 0)
-    kv = jnp.where(valid, key_v, v_dim)      # OOB -> dropped
-    phi_new = tb.phi.at[qs, kp, kv].set(phis, mode="drop")
-    mu_new = tb.mu.at[qs, kp, kv].set(mus, mode="drop")
-    mask_new = tb.mask.at[qs, kp, kv].set(masks, mode="drop")
-    valid_new = tb.valid.at[qs, kp, kv].set(True, mode="drop")
-    return TableBank(phi=phi_new, mu=mu_new, mask=mask_new,
-                     valid=valid_new)
+    return hash_insert(tb, query_slot, key_pos, key_v, phis, mus, masks,
+                       valid)
 
 
 # ===================================================================
@@ -540,7 +517,7 @@ class MegaResult(NamedTuple):
     no work is ever lost to an overflow. All per-row lanes are indexed
     by ring position and are zero for rows never expanded.
     """
-    tb: TableBank                # updated (host flush + in-loop stores)
+    tb: PatternStoreBank         # updated (host flush + in-loop stores)
     buf_frontier: jax.Array      # int32 [C, N_PAD]
     buf_used: jax.Array          # uint32 [C, W]
     buf_phi: jax.Array           # int32 [C, N_PAD + 1]
@@ -564,15 +541,21 @@ class MegaResult(NamedTuple):
     # resident query actually consumed (drives shard/occupancy reports)
     slot_rows: jax.Array         # int32 [S] rows expanded per slot
     slot_children: jax.Array     # int32 [S] rows+embeddings created per slot
+    # per-slot Δ store insert accounting (host flush + in-loop stores of
+    # this dispatch; occupancy is read off the live bank at report time)
+    pat_stored: jax.Array        # int32 [S]
+    pat_overwrites: jax.Array    # int32 [S]
+    pat_evictions: jax.Array     # int32 [S]
+    pat_dropped: jax.Array       # int32 [S]
     emb_frontier: jax.Array      # int32 [emb_cap, N_PAD] found embeddings
     emb_slot: jax.Array          # int32 [emb_cap]
     n_emb: jax.Array             # int32
     n_ids: jax.Array             # int32 fresh embedding ids consumed
 
 
-@functools.partial(jax.jit, static_argnames=(
+@functools.partial(jax.jit, donate_argnums=(2,), static_argnames=(
     "kpr", "k_depth", "capacity", "emb_cap", "backend"))
-def run_megastep_mq(g: GraphArrays, qb: QueryBank, tb: TableBank,
+def run_megastep_mq(g: GraphArrays, qb: QueryBank, tb: PatternStoreBank,
                     frontier: jax.Array, used: jax.Array, phi: jax.Array,
                     row_valid: jax.Array, query_slot: jax.Array,
                     depth: jax.Array,
@@ -615,8 +598,8 @@ def run_megastep_mq(g: GraphArrays, qb: QueryBank, tb: TableBank,
     assert emb_cap >= f_step * kpr, "emb buffer cannot hold one chunk"
 
     # ---- host-batched pattern stores ride the dispatch -----------------
-    tb = store_patterns_mq(tb, st_slot, st_kpos, st_kv, st_phi, st_mu,
-                           st_mask, st_valid)
+    tb, pat0 = store_patterns_mq(tb, st_slot, st_kpos, st_kv, st_phi,
+                                 st_mu, st_mask, st_valid)
 
     buf_frontier = jnp.full((c, N_PAD), -1, jnp.int32).at[:f_step].set(
         frontier)
@@ -647,6 +630,7 @@ def run_megastep_mq(g: GraphArrays, qb: QueryBank, tb: TableBank,
         emb_frontier=jnp.full((emb_cap, N_PAD), -1, jnp.int32),
         emb_slot=jnp.zeros((emb_cap,), jnp.int32),
         n_emb=jnp.int32(0), id_ctr=jnp.asarray(id_base, jnp.int32),
+        pat=pat0,
         **lanes0)
 
     def cond(s):
@@ -665,8 +649,8 @@ def run_megastep_mq(g: GraphArrays, qb: QueryBank, tb: TableBank,
         valid_c = in_chunk & lax.dynamic_slice_in_dim(
             s["buf_valid"], head, f_step)
 
-        res = _expand_rows(g, qb, s["tb"], cf, cu, cp, valid_c, slot_c,
-                           depth_c, kpr, backend)
+        res, tb_l = _expand_rows(g, qb, s["tb"], cf, cu, cp, valid_c,
+                                 slot_c, depth_c, kpr, backend)
 
         is_last = depth_c + 1 == qb.n_query[slot_c]          # [F]
 
@@ -730,8 +714,8 @@ def run_megastep_mq(g: GraphArrays, qb: QueryBank, tb: TableBank,
         key_v = jnp.take_along_axis(cf, key_pos[:, None], axis=1)[:, 0]
         mu = _mask_bitlen(gamma_w & _below_bits_rows(key_pos))
         phi_id = jnp.take_along_axis(cp, mu[:, None], axis=1)[:, 0]
-        tb2 = store_patterns_mq(s["tb"], slot_c, key_pos, key_v, phi_id,
-                                mu, gamma_w, do_store)
+        tb2, pat_c = store_patterns_mq(tb_l, slot_c, key_pos, key_v,
+                                       phi_id, mu, gamma_w, do_store)
 
         # ---- digest lanes for this chunk -------------------------------
         def put(lane, vals):
@@ -751,6 +735,7 @@ def run_megastep_mq(g: GraphArrays, qb: QueryBank, tb: TableBank,
             head=jnp.minimum(head + f_step, tail), tail=tail + n_new,
             it=s["it"] + 1, emb_frontier=emb_frontier, emb_slot=emb_slot,
             n_emb=s["n_emb"] + n_emb_new, id_ctr=s["id_ctr"] + n_new,
+            pat=s["pat"].add(pat_c),
             refined_empty=put(s["refined_empty"], res.refined_empty),
             n_children=put(s["n_children"], m1(n_child_c)),
             n_leftover=put(s["n_leftover"], m1(res.n_leftover)),
@@ -779,79 +764,13 @@ def run_megastep_mq(g: GraphArrays, qb: QueryBank, tb: TableBank,
         n_inj=s["n_inj"], n_emb_row=s["n_emb_row"],
         dev_stored=s["dev_stored"], pruned_v=s["pruned_v"],
         slot_rows=s["slot_rows"], slot_children=s["slot_children"],
+        pat_stored=s["pat"].stored, pat_overwrites=s["pat"].overwrites,
+        pat_evictions=s["pat"].evictions, pat_dropped=s["pat"].dropped,
         emb_frontier=s["emb_frontier"],
         emb_slot=s["emb_slot"], n_emb=s["n_emb"],
         n_ids=s["id_ctr"] - jnp.asarray(id_base, jnp.int32))
 
 
-# ===================================================================
-# single-query wrappers (S == 1) — kept for sequential-style callers
-# and tests that operate on one query
-# ===================================================================
-def _tbank_of(t: TableArrays) -> TableBank:
-    return TableBank(phi=t.phi[None], mu=t.mu[None],
-                     mask=t.mask[None], valid=t.valid[None])
-
-
-def _bank_of(q: QueryArrays, t: TableArrays) -> tuple[QueryBank, TableBank]:
-    qb = QueryBank(cand_bitmap=q.cand_bitmap[None],
-                   nbr_mask=q.nbr_mask[None],
-                   n_query=jnp.asarray(q.n_query)[None],
-                   learn=jnp.ones((1,), bool))
-    return qb, _tbank_of(t)
-
-
-@functools.partial(jax.jit, static_argnames=("kpr",))
-def expand_wave(g: GraphArrays, q: QueryArrays, t: TableArrays,
-                frontier: jax.Array, used: jax.Array, phi: jax.Array,
-                row_valid: jax.Array, depth: jax.Array,
-                kpr: int = 16) -> WaveResult:
-    """Single-query :func:`expand_wave_mq` with a shared scalar depth."""
-    f = frontier.shape[0]
-    qb, tb = _bank_of(q, t)
-    res = expand_wave_mq(
-        g, qb, tb, frontier, used, phi, row_valid,
-        jnp.zeros((f,), jnp.int32),
-        jnp.full((f,), depth, jnp.int32), kpr=kpr)
-    return WaveResult(
-        refined_empty=res.refined_empty, n_children=res.n_children,
-        n_leftover=res.n_leftover, partial_mask=res.partial_mask,
-        child_v=res.child_v, child_valid=res.child_valid,
-        leftover=res.leftover,
-        n_pruned=res.n_pruned.sum(), n_inj=res.n_inj.sum())
-
-
-@functools.partial(jax.jit, static_argnames=("kpr",))
-def extract_more(t: TableArrays, phi: jax.Array, depth: jax.Array,
-                 leftover: jax.Array, kpr: int = 64
-                 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array,
-                            jax.Array, jax.Array]:
-    """Single-query :func:`extract_more_mq`; returns a scalar prune count."""
-    f = leftover.shape[0]
-    out = extract_more_mq(_tbank_of(t), phi, jnp.zeros((f,), jnp.int32),
-                          jnp.full((f,), depth, jnp.int32), leftover,
-                          kpr=kpr)
-    return out[:5] + (out[5].sum(),)
-
-
-@jax.jit
-def assemble_children(frontier: jax.Array, used: jax.Array, phi: jax.Array,
-                      child_v: jax.Array, child_valid: jax.Array,
-                      depth: jax.Array, id_base: jax.Array
-                      ) -> tuple[jax.Array, jax.Array, jax.Array,
-                                 jax.Array, jax.Array]:
-    """Single-query :func:`assemble_children_mq` with a scalar depth."""
-    f = child_v.shape[0]
-    return assemble_children_mq(frontier, used, phi, child_v, child_valid,
-                                jnp.full((f,), depth, jnp.int32), id_base)
-
-
-@jax.jit
-def store_patterns(t: TableArrays, key_pos: jax.Array, key_v: jax.Array,
-                   phis: jax.Array, mus: jax.Array, masks: jax.Array,
-                   valid: jax.Array) -> TableArrays:
-    """Single-query :func:`store_patterns_mq` (paper Eq. 6)."""
-    tb2 = store_patterns_mq(_tbank_of(t), jnp.zeros_like(key_pos),
-                            key_pos, key_v, phis, mus, masks, valid)
-    return TableArrays(phi=tb2.phi[0], mu=tb2.mu[0],
-                       mask=tb2.mask[0], valid=tb2.valid[0])
+# (the old single-query S == 1 wrappers — expand_wave &c. — are gone:
+# nothing called them anymore, and every sequential-style caller goes
+# through the 1-slot WaveEngine facade instead)

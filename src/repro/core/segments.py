@@ -34,23 +34,10 @@ import dataclasses
 
 import numpy as np
 
+from ..patterns.store import mask64, words_from64  # noqa: F401 (re-export)
 from .backtrack import SearchStats
-from .engine_step import MASK_WORDS
 
 _ID_LIMIT = 2**31 - 2**22
-
-
-def mask64(words: np.ndarray) -> np.ndarray:
-    """uint32 [..., 2] -> uint64 [...]."""
-    w = words.astype(np.uint64)
-    return w[..., 0] | (w[..., 1] << np.uint64(32))
-
-
-def words_from64(m: np.ndarray) -> np.ndarray:
-    out = np.zeros(m.shape + (MASK_WORDS,), np.uint32)
-    out[..., 0] = (m & np.uint64(0xFFFFFFFF)).astype(np.uint32)
-    out[..., 1] = (m >> np.uint64(32)).astype(np.uint32)
-    return out
 
 
 def bit_of(p) -> np.uint64:
@@ -106,6 +93,9 @@ class EngineStats(SearchStats):
     steals: int = 0
     shard_rows: list | None = None   # rows created per shard
     shard_items: list | None = None  # work items dispatched per shard
+    # cross-query template cache (patterns.cache, DESIGN.md §6)
+    cache_hit: bool = False          # Δ was warm-started from the cache
+    warm_patterns: int = 0           # entries seeded at admission
 
 
 @dataclasses.dataclass
@@ -152,10 +142,15 @@ class QueryState:
         self.shard_rows = np.zeros(self.parallelism, np.int64)
         self.shard_items = np.zeros(self.parallelism, np.int64)
         # Δ hit counters per (order position, vertex) key, accumulated
-        # from the digests' pruned-child lanes; drives the deterministic
-        # cross-host pattern exchange (allocated by the scheduler when
+        # from the digests' pruned-child lanes into a sparse dict (the
+        # old dense [N_PAD, V] array scaled with the data graph); drives
+        # the deterministic cross-host pattern exchange and survives
+        # device-side eviction/aging (allocated by the scheduler when
         # the table is exported).
-        self.hit_counts: np.ndarray | None = None
+        self.hit_counts: dict[tuple[int, int], int] | None = None
+        # canonical template fingerprint (patterns.cache) — set at
+        # admission so retirement can snapshot under the same key
+        self.fingerprint: bytes | None = None
         self.store_buf: list[tuple[int, int, int, int, np.uint64]] = []
         self.status = "running"         # "running" | "done"
         self.abort_reason: str | None = None  # "limit" | "rows" | "time"
@@ -257,7 +252,14 @@ class QueryState:
         dd = np.broadcast_to(np.asarray(depth)[..., None], pv.shape)
         sel = pv >= 0
         if sel.any():
-            np.add.at(self.hit_counts, (dd[sel], pv[sel]), 1)
+            # collapse to one packed int64 key so the dedup is a single
+            # vectorized unique; the Python loop only walks the (few)
+            # distinct keys, not every pruned child
+            flat = (dd[sel].astype(np.int64) << np.int64(32)) | pv[sel]
+            uniq, counts = np.unique(flat, return_counts=True)
+            for f, c in zip(uniq.tolist(), counts.tolist()):
+                key = (int(f >> 32), int(f & 0xFFFFFFFF))
+                self.hit_counts[key] = self.hit_counts.get(key, 0) + c
 
     def evict(self) -> None:
         """Drop all in-flight work (abort / completion)."""

@@ -37,11 +37,17 @@ Per-query ``limit`` / ``max_rows`` / ``time_budget_s`` abort a query
 and evict its segments without touching its neighbors.
 
 Learning happens *across* waves: patterns extracted from failures in
-earlier-expanded subtrees prune later waves of the same query (tables are
-slot-private, so queries never see each other's patterns), and the
+earlier-expanded subtrees prune later waves of the same query (stores are
+slot-private, so live queries never see each other's patterns), and the
 megastep additionally stores Lemma-1 patterns *inside* the loop, so they
-prune later depth-steps of the same dispatch. Matching is exact for any
-schedule because stored patterns are true dead-ends.
+prune later depth-steps of the same dispatch. Δ itself is the bounded
+hashed store of :mod:`repro.patterns.store` — O(configured capacity)
+device memory regardless of data-graph size, with counter-guided
+eviction — and learning additionally crosses *queries* through the
+template cache (:mod:`repro.patterns.cache`, DESIGN.md §6): a retiring
+learner snapshots its hot transferable patterns and an admission of an
+identical template warm-starts from them. Matching is exact for any
+schedule, capacity, or seed because stored patterns are true dead-ends.
 
 :class:`WaveEngine` is the single-query facade (one slot) kept for the
 sequential-style API; the distributed matcher now fronts the scheduler
@@ -57,11 +63,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels.config import get_backend
+from ..patterns import (DeadEndStats, PatternCache, PatternStore,
+                        PatternStoreBank, age_hits, empty_entries,
+                        entries_to_store, store_to_entries)
 from .backtrack import MatchResult, _prepare
 from .engine_step import (MASK_WORDS, N_PAD, GraphArrays, MegaResult,
-                          QueryBank, TableArrays, TableBank,
-                          assemble_children_mq, expand_wave_mq,
-                          extract_more_mq, load_slot, read_table_slot,
+                          QueryBank, assemble_children_mq, expand_wave_mq,
+                          extract_more_mq, load_slot, read_store_slot,
                           run_megastep_mq, store_patterns_mq)
 from .graph import Graph, pack_bitmap
 from .segments import (EngineStats, QueryState, Segment, SegmentPool,
@@ -89,11 +97,14 @@ class _Request:
     learn: bool
     max_rows: int | None
     time_budget_s: float | None
-    seed_table: TableArrays | None
+    seed_patterns: dict | None     # entries dict (patterns.store)
     keep_table: bool
     t_submit: float
+    # canonical template key (patterns.cache); None when the scheduler
+    # runs cache-less — the SHA-1 over the packed candidate bitmap is
+    # not free at web-scale V, so it is only computed when consumed
+    fingerprint: bytes | None
     parallelism: int = 1
-    seed_hits: np.ndarray | None = None   # int64 [N_PAD, V] Δ hit counters
 
 
 @dataclasses.dataclass
@@ -135,7 +146,12 @@ class WaveScheduler:
                  kpr: int = 16, use_pruning: bool = True,
                  max_queue: int = 4096, megastep_depth: int = 6,
                  store_flush_min: int = 16, store_pad: int = 256,
-                 adaptive_prune_threshold: float = 0.05):
+                 adaptive_prune_threshold: float = 0.05,
+                 pattern_capacity: int = 4096,
+                 pattern_cache: bool = True,
+                 pattern_cache_templates: int = 64,
+                 pattern_cache_top_k: int = 512,
+                 hit_decay_every: int = 256):
         self.data = data
         self.n_slots = int(n_slots)
         self.wave_size = int(wave_size)
@@ -145,6 +161,36 @@ class WaveScheduler:
         self.megastep_depth = int(megastep_depth)
         self.store_flush_min = int(store_flush_min)
         self.store_pad = int(store_pad)
+        # bounded hashed Δ store (patterns.store): per-slot capacity is a
+        # power of two, independent of the data-graph vertex count.
+        # Eviction is counter-guided and always sound; ``hit_decay_every``
+        # waves the device hit counters are halved so eviction tracks
+        # recent usefulness.
+        self.pattern_capacity = int(pattern_capacity)
+        self.hit_decay_every = int(hit_decay_every)
+        # cross-query template cache (patterns.cache): retiring learners
+        # snapshot their hot transferable (μ == 0) patterns; admissions
+        # of an identical template warm-start from them.
+        self.pattern_cache = (
+            PatternCache(pattern_cache_templates, pattern_cache_top_k)
+            if pattern_cache else None)
+        # deferred cache snapshots: a retiring learner's slot store is
+        # captured as async device slices (no host block on the in-
+        # flight pipeline) and folded into the cache only if the same
+        # template is admitted again — never-repeated templates pay
+        # nothing. Bounded LRU alongside the cache itself.
+        self._pending_snaps: collections.OrderedDict[bytes, tuple] = \
+            collections.OrderedDict()
+        self.warm_started = 0           # queries admitted with a warm Δ
+        self.warm_patterns_seeded = 0
+        # aggregate device store counters (megastep digests + flushes).
+        # Flush counters accumulate as an unmaterialized device sum and
+        # fold at ownership-change points (query finish) and stats reads
+        # — materializing per flush would serialize the async pipeline.
+        self.store_counters = {"stored": 0, "overwrites": 0,
+                               "evictions": 0, "dropped": 0}
+        self._flush_ctr_dev = None          # lazy StoreCounters sum
+        self._last_aged_wave = 0
         # adaptive depth: a per-wave prune-rate EMA decides between the
         # fused K-deep megastep (cheap traffic: latency hiding wins) and
         # the synchronous single-step schedule (failure-heavy traffic:
@@ -170,13 +216,15 @@ class WaveScheduler:
             adj_bitmap=jnp.asarray(data.adj_bitmap),
             n_vertices=jnp.int32(data.n))
         self.qb = QueryBank.empty(self.n_slots, self.w)
-        self.tb = TableBank.empty(self.n_slots, data.n)
-        self._empty_table = TableArrays.empty(data.n)   # reused, immutable
+        self.tb = PatternStoreBank.empty(self.n_slots,
+                                         self.pattern_capacity)
+        self._empty_store = PatternStore.empty(
+            self.pattern_capacity)                      # reused, immutable
         self.pool = SegmentPool(self.n_slots)
         self.queue: collections.deque[_Request] = collections.deque()
         self.finished: dict[int, MatchResult] = {}
-        self.tables: dict[int, TableArrays] = {}
-        self.table_hits: dict[int, np.ndarray] = {}   # Δ hit counters
+        # per-query Δ snapshots (entries dicts, keep_table only)
+        self.tables: dict[int, dict] = {}
         self._fresh_done: list[int] = []
         self._next_qid = 0
         self._rr = 0
@@ -207,10 +255,9 @@ class WaveScheduler:
                max_rows: int | None = None,
                time_budget_s: float | None = None,
                use_pruning: bool | None = None,
-               seed_table: TableArrays | None = None,
+               seed_patterns: dict | None = None,
                keep_table: bool = False,
-               parallelism: int = 1,
-               seed_hits: np.ndarray | None = None) -> int:
+               parallelism: int = 1) -> int:
         """Enqueue a query; returns its scheduler query id.
 
         Raises :class:`QueueFull` when the bounded admission queue is at
@@ -222,14 +269,16 @@ class WaveScheduler:
         shards share the query's slot-private Δ table, so every pattern
         (μ > 0 included) one shard learns prunes the others.
 
-        ``seed_table``: a dead-end table to pre-load into the query's
-        slot (cross-host pattern import or checkpoint restore — see
-        core.distributed). μ > 0 seed patterns reference the *writer's*
-        φ numbering: they are only sound if the ids cannot collide with
-        this run's fresh ids — call :meth:`reserve_phi_floor` with the
-        writer's φ ceiling first (checkpoint restore does), otherwise
-        seed μ == 0 patterns only. ``seed_hits`` carries the matching
-        hit counters so exchange ranking stays cumulative.
+        ``seed_patterns``: a pattern *entries* dict (patterns.store) to
+        pre-load into the query's slot, hit counters included (cross-host
+        pattern import or checkpoint restore — see core.distributed).
+        μ > 0 seed patterns reference the *writer's* φ numbering: they
+        are only sound if the ids cannot collide with this run's fresh
+        ids — call :meth:`reserve_phi_floor` with the writer's φ ceiling
+        first (checkpoint restore does), otherwise seed μ == 0 patterns
+        only. Queries with no explicit seed may be warm-started from the
+        cross-query template cache (μ == 0 entries only — sound without
+        a floor).
         """
         if len(self.queue) >= self.max_queue:
             raise QueueFull(
@@ -255,19 +304,26 @@ class WaveScheduler:
                 bits |= bit_of(int(p))
             qnbr_bits[d] = bits
         learn = self.use_pruning if use_pruning is None else use_pruning
+        cand_packed = pack_bitmap(cand_dense)
         req = _Request(
             query_id=qid, n=n, order=np.asarray(order, np.int32),
             roots=np.asarray(cand_by_pos[0], np.int32),
-            cand_bitmap=pack_bitmap(cand_dense), nbr_mask=nbr_mask,
+            cand_bitmap=cand_packed, nbr_mask=nbr_mask,
             qnbr_bits=qnbr_bits, limit=limit, learn=learn,
             max_rows=max_rows, time_budget_s=time_budget_s,
-            seed_table=seed_table, keep_table=keep_table,
-            t_submit=t_submit, parallelism=max(1, int(parallelism)),
-            seed_hits=seed_hits)
-        # trivial queries never need a slot
+            seed_patterns=seed_patterns, keep_table=keep_table,
+            t_submit=t_submit, fingerprint=None,
+            parallelism=max(1, int(parallelism)))
+        # trivial queries never need a slot (and never touch the cache)
         if len(req.roots) == 0 or n == 1:
             self._finish_trivial(req)
         else:
+            # the fingerprint digests the packed candidate bitmap — not
+            # free at web-scale V, so only queries that can actually
+            # consume the cache (learning, cache enabled) pay for it
+            if self.pattern_cache is not None and learn:
+                req.fingerprint = PatternCache.fingerprint(
+                    n, cand_packed, nbr_mask)
             self.queue.append(req)
         return qid
 
@@ -290,13 +346,9 @@ class WaveScheduler:
         stats.wall_time_s = time.perf_counter() - req.t_submit
         self.finished[req.query_id] = MatchResult(embeddings, stats)
         if req.keep_table:
-            self.tables[req.query_id] = (req.seed_table
-                                         if req.seed_table is not None
-                                         else TableArrays.empty(self.data.n))
-            self.table_hits[req.query_id] = (
-                np.asarray(req.seed_hits, np.int64).copy()
-                if req.seed_hits is not None
-                else np.zeros((N_PAD, self.data.n), np.int64))
+            self.tables[req.query_id] = (req.seed_patterns
+                                         if req.seed_patterns is not None
+                                         else empty_entries())
         self._fresh_done.append(req.query_id)
 
     def reserve_phi_floor(self, floor: int) -> None:
@@ -315,11 +367,31 @@ class WaveScheduler:
                 return
             req = self.queue.popleft()
             learn = req.learn and self.pool.learning_enabled
-            table = (req.seed_table if req.seed_table is not None
-                     else self._empty_table)
+            # Δ seed priority: explicit entries (restore / cross-host
+            # import) > template-cache warm start (μ == 0 only, sound
+            # without a φ floor) > empty store. Warm starts are gated on
+            # ``learn`` so the no-pruning ablation stays pattern-free.
+            entries = req.seed_patterns
+            warm = False
+            if entries is None and req.learn \
+                    and self.pattern_cache is not None:
+                pend = self._pending_snaps.pop(req.fingerprint, None)
+                if pend is not None:
+                    # the template recurred: materialize the deferred
+                    # snapshot into its cache line now
+                    snap_store, snap_hits = pend
+                    self.pattern_cache.put(
+                        req.fingerprint,
+                        store_to_entries(snap_store, snap_hits))
+                entries = self.pattern_cache.get(req.fingerprint)
+                warm = entries is not None
+            if entries is not None and len(entries["pos"]) > 0:
+                store = entries_to_store(entries, self.pattern_capacity)
+            else:
+                store = self._empty_store
             self.qb, self.tb = load_slot(
                 self.qb, self.tb, np.int32(slot), req.cand_bitmap,
-                req.nbr_mask, np.int32(req.n), table, learn)
+                req.nbr_mask, np.int32(req.n), store, learn)
             now = time.perf_counter()
             deadline = (None if req.time_budget_s is None
                         else now + req.time_budget_s)
@@ -329,12 +401,21 @@ class WaveScheduler:
                            deadline=deadline, keep_table=req.keep_table,
                            t_submit=req.t_submit,
                            parallelism=req.parallelism)
-            q.stats.table_stats = None
+            q.fingerprint = req.fingerprint
+            q.stats.table_stats = DeadEndStats(
+                capacity=self.pattern_capacity)
+            if warm:
+                q.stats.cache_hit = True
+                q.stats.warm_patterns = len(entries["pos"])
+                self.warm_started += 1
+                self.warm_patterns_seeded += len(entries["pos"])
             if req.keep_table:
-                q.hit_counts = (np.asarray(req.seed_hits, np.int64).copy()
-                                if req.seed_hits is not None
-                                else np.zeros((N_PAD, self.data.n),
-                                              np.int64))
+                q.hit_counts = {}
+                if entries is not None:
+                    for p, v, h in zip(entries["pos"].tolist(),
+                                       entries["v"].tolist(),
+                                       entries["hits"].tolist()):
+                        q.hit_counts[(int(p), int(v))] = int(h)
             r = len(req.roots)
             q.stats.rows_created += r
             # shard-as-segments: one root segment per contiguous slice
@@ -367,10 +448,15 @@ class WaveScheduler:
     # completion / abort
     # ------------------------------------------------------------------
     def _finish(self, q: QueryState) -> None:
-        if q.keep_table and q.store_buf:
+        want_cache = (self.pattern_cache is not None and q.learn
+                      and q.fingerprint is not None)
+        if (q.keep_table or want_cache) and q.store_buf:
             # make patterns from the final resolutions visible in the
-            # exported table (distributed pattern sharing)
+            # snapshot (distributed sharing / template cache)
             self._flush_stores(force=True)
+        # materialize AFTER the final flush: the retiring query's last
+        # insert counters must fold while it still owns its slot
+        self._materialize_flush_counters()
         q.status = "done"
         q.evict()
         q.stats.recursions = q.stats.rows_created
@@ -381,10 +467,48 @@ class WaveScheduler:
         self.total_prunes += q.stats.deadend_prunes
         self.total_rows_created += q.stats.rows_created
         self.total_steals += q.stats.steals
+        ts = q.stats.table_stats
+        if isinstance(ts, DeadEndStats):
+            # hits = Δ prunes; lookups stays 0 on the engine path
+            # (see DeadEndStats — the digest has no lookup count)
+            ts.hits = q.stats.deadend_prunes
         if q.keep_table:
-            self.tables[q.query_id] = read_table_slot(self.tb, q.slot)
-            if q.hit_counts is not None:
-                self.table_hits[q.query_id] = q.hit_counts
+            entries = store_to_entries(read_store_slot(self.tb, q.slot),
+                                       q.hit_counts)
+            if isinstance(ts, DeadEndStats):
+                ts.occupancy = len(entries["pos"])
+            self.tables[q.query_id] = entries
+            if want_cache:
+                # already materialized for the table export — fold the
+                # retiring learner's hot transferable patterns into the
+                # template's cache line right away
+                self.pattern_cache.put(q.fingerprint, entries)
+        elif want_cache:
+            # defer: capture the slot store as async device slices (no
+            # pipeline stall here) — materialized into a cache line
+            # only if the same template is admitted again
+            snap = read_store_slot(self.tb, q.slot)
+            hits = dict(q.hit_counts) if q.hit_counts is not None else None
+            prev = self._pending_snaps.pop(q.fingerprint, None)
+            if prev is not None:
+                # same template already has a pending snapshot (e.g. a
+                # richer earlier run): fold it into the cache line —
+                # put() merges by key — instead of discarding it
+                self.pattern_cache.put(q.fingerprint,
+                                       store_to_entries(*prev))
+            self._pending_snaps[q.fingerprint] = (snap, hits)
+            # tight bound: each pending snapshot pins a full-capacity
+            # slice set on device (unlike the top_k-capped cache lines),
+            # so size to the slot count, not to max_templates. An
+            # LRU-evicted snapshot is materialized into its (compact)
+            # cache line rather than discarded — otherwise interleaved
+            # traffic over more templates than the pending bound would
+            # never populate the cache at all.
+            while len(self._pending_snaps) > max(8, 2 * self.n_slots):
+                old_fp, (old_snap, old_hits) = \
+                    self._pending_snaps.popitem(last=False)
+                self.pattern_cache.put(
+                    old_fp, store_to_entries(old_snap, old_hits))
         self.finished[q.query_id] = MatchResult(q.embeddings, q.stats)
         self._fresh_done.append(q.query_id)
         self.pool.release(q.slot)
@@ -397,6 +521,17 @@ class WaveScheduler:
         q.stats.abort_reason = reason
         q.abort_reason = reason
         self._finish(q)
+
+    def _reset_learning_on_overflow(self) -> None:
+        """Embedding-id overflow: clear all stores and pause learning
+        (sound — only pruning is lost); the pool re-enables learning
+        once it drains. Shared by both schedule paths."""
+        if self.pool.id_overflow and self.pool.learning_enabled:
+            self.tb = PatternStoreBank.empty(self.n_slots,
+                                             self.pattern_capacity)
+            self.pool.learning_enabled = False
+            for qq in self.pool.active_queries():
+                qq.learn = False
 
     def _check_budgets(self, now: float | None = None) -> None:
         for q in self.pool.active_queries():
@@ -531,11 +666,31 @@ class WaveScheduler:
                 if q.store_buf]
 
     @staticmethod
-    def _pack_store_batch(bufs: list, n_pad: int, max_take: int | None):
-        """Pack up to ``max_take`` queued (key_pos, key_v, φ, μ, Γ)
-        tuples from per-query buffers into padded scatter arrays (the
-        validity lane marks padding; the device scatter drops invalid
-        rows). Consumed entries are removed from the buffers."""
+    def _drain_dedup(bufs: list, max_take: int | None) -> dict:
+        """Drain up to ``max_take`` queued (key_pos, key_v, φ, μ, Γ)
+        tuples from per-query buffers, deduplicated by (slot, key): the
+        device insert is last-write-wins per key anyway, and one wave of
+        a failure-heavy query queues the same key many times — host
+        dedup shrinks the device batch ~4x on the trap workload.
+        Consumed entries are removed from the buffers."""
+        dedup: dict = {}
+        i = 0
+        for q, buf in bufs:
+            take = (len(buf) if max_take is None
+                    else min(len(buf), max_take - i))
+            for key_pos, key_v, phi_id, mu_len, gamma in buf[:take]:
+                dedup[(q.slot, key_pos, key_v)] = (phi_id, mu_len, gamma)
+            i += take
+            del buf[:take]
+            if max_take is not None and i == max_take:
+                break
+        return dedup
+
+    @staticmethod
+    def _pack_store_batch(dedup: dict, n_pad: int):
+        """Pack deduplicated entries into padded insert arrays (the
+        validity lane marks padding; the device insert drops invalid
+        rows)."""
         slots = np.zeros(n_pad, np.int32)
         kpos = np.zeros(n_pad, np.int32)
         kv = np.zeros(n_pad, np.int32)
@@ -543,29 +698,42 @@ class WaveScheduler:
         mus = np.zeros(n_pad, np.int32)
         masks = np.zeros(n_pad, np.uint64)
         valid = np.zeros(n_pad, bool)
-        i = 0
-        for q, buf in bufs:
-            take = (len(buf) if max_take is None
-                    else min(len(buf), max_take - i))
-            for key_pos, key_v, phi_id, mu_len, gamma in buf[:take]:
-                slots[i] = q.slot
-                kpos[i] = key_pos
-                kv[i] = key_v
-                phis[i] = phi_id
-                mus[i] = mu_len
-                masks[i] = gamma
-                valid[i] = True
-                i += 1
-            del buf[:take]
-            if max_take is not None and i == max_take:
-                break
+        for i, ((slot, key_pos, key_v), (phi_id, mu_len, gamma)) \
+                in enumerate(dedup.items()):
+            slots[i] = slot
+            kpos[i] = key_pos
+            kv[i] = key_v
+            phis[i] = phi_id
+            mus[i] = mu_len
+            masks[i] = gamma
+            valid[i] = True
         return slots, kpos, kv, phis, mus, words_from64(masks), valid
 
+    def _fold_store_counters(self, counters, slot_map: dict | None) -> None:
+        """Fold per-slot device insert counters (int32 [S] lanes) into
+        the scheduler totals and the owning queries' DeadEndStats."""
+        lanes = {"stored": np.asarray(counters[0], np.int64),
+                 "overwrites": np.asarray(counters[1], np.int64),
+                 "evictions": np.asarray(counters[2], np.int64),
+                 "dropped": np.asarray(counters[3], np.int64)}
+        for k, v in lanes.items():
+            self.store_counters[k] += int(v.sum())
+        if slot_map is None:
+            slot_map = {q.slot: q for q in self.pool.active_queries()}
+        for slot, q in slot_map.items():
+            ts = q.stats.table_stats
+            if not isinstance(ts, DeadEndStats):
+                continue
+            ts.stores += int(lanes["stored"][slot])
+            ts.overwrites += int(lanes["overwrites"][slot])
+            ts.evictions += int(lanes["evictions"][slot])
+            ts.dropped += int(lanes["dropped"][slot])
+
     def _flush_stores(self, force: bool = False) -> None:
-        """Standalone batched Δ scatter (single-step path and forced
+        """Standalone batched Δ insert (single-step path and forced
         flushes). Skips the dispatch entirely when nothing is pending,
         and below ``store_flush_min`` unless forced; arrays are padded
-        to power-of-two buckets so the jitted scatter compiles O(log)
+        to power-of-two buckets so the jitted insert compiles O(log)
         variants instead of one per distinct batch length."""
         bufs = self._pending_stores()
         if not bufs:
@@ -577,11 +745,24 @@ class WaveScheduler:
         total = sum(len(buf) for _, buf in bufs)
         if not force and total < self.store_flush_min:
             return
+        dedup = self._drain_dedup(bufs, None)
         n_pad = 16
-        while n_pad < total:
+        while n_pad < len(dedup):
             n_pad *= 2
-        self.tb = store_patterns_mq(
-            self.tb, *self._pack_store_batch(bufs, n_pad, None))
+        self.tb, counters = store_patterns_mq(
+            self.tb, *self._pack_store_batch(dedup, n_pad))
+        self._flush_ctr_dev = (counters if self._flush_ctr_dev is None
+                               else self._flush_ctr_dev.add(counters))
+
+    def _materialize_flush_counters(self) -> None:
+        """Fold the accumulated flush counters into stats. Correct
+        per-query attribution holds because this runs at every
+        ownership-change point (each query finish), so between two folds
+        every slot has a single owner."""
+        if self._flush_ctr_dev is None:
+            return
+        ctr, self._flush_ctr_dev = self._flush_ctr_dev, None
+        self._fold_store_counters(ctr, None)
 
     def _drain_store_batch(self):
         """Drain up to ``store_pad`` host-queued pattern stores into the
@@ -592,8 +773,8 @@ class WaveScheduler:
             for q, buf in bufs:
                 buf.clear()
             bufs = []
-        return self._pack_store_batch(bufs, self.store_pad,
-                                      self.store_pad)
+        return self._pack_store_batch(
+            self._drain_dedup(bufs, self.store_pad), self.store_pad)
 
     # ------------------------------------------------------------------
     # one scheduling step (double-buffered pipeline)
@@ -608,6 +789,12 @@ class WaveScheduler:
         """
         self._check_budgets()
         self._admit()
+        if self.waves - self._last_aged_wave >= self.hit_decay_every:
+            # age the device hit counters so eviction ranks *recent*
+            # usefulness (stale hot entries decay back into candidates);
+            # runs on every schedule path, single-step included
+            self.tb = age_hits(self.tb)
+            self._last_aged_wave = self.waves
         if self.megastep_depth <= 1:
             return self._step_single()
         if self._prune_ema > self.adaptive_prune_threshold:
@@ -649,13 +836,7 @@ class WaveScheduler:
         # input wave is a fresh row. Reserving up front lets the next
         # dispatch go out before this digest is read.
         id_base = self.pool.alloc_ids(self._ring_capacity - self.wave_size)
-        if self.pool.id_overflow and self.pool.learning_enabled:
-            # id overflow: clear all tables, pause learning (sound);
-            # the pool re-enables learning once it drains.
-            self.tb = TableBank.empty(self.n_slots, self.data.n)
-            self.pool.learning_enabled = False
-            for qq in self.pool.active_queries():
-                qq.learn = False
+        self._reset_learning_on_overflow()
         res = run_megastep_mq(
             self.g, self.qb, self.tb, fr, us, ph, valid, slot_v, depth_v,
             *st, np.int32(id_base), bool(self.pool.learning_enabled),
@@ -663,9 +844,12 @@ class WaveScheduler:
             capacity=self._ring_capacity, emb_cap=self._emb_cap,
             backend=self._kernel_backend)
         self.tb = res.tb            # handle only — not materialized
-        slot_map = {q.slot: q for q, *_ in metas}
-        for q in slot_map.values():
+        for q in {q.slot: q for q, *_ in metas}.values():
             q.stats.waves += 1
+        # slot map over ALL dispatch-time owners, not just the wave's
+        # picks: the drained store batch carries buffered patterns from
+        # every active query, so digest counter attribution must too
+        slot_map = {q.slot: q for q in self.pool.active_queries()}
         return _Inflight("mega", res, metas, slot_map)
 
     def _retire_mega(self, rec: _Inflight) -> None:
@@ -695,6 +879,11 @@ class WaveScheduler:
         embS = np.asarray(res.emb_slot)[:n_emb]
         t1 = time.perf_counter()
         self.t_sync_s += t1 - t0
+
+        # ---- Δ store accounting (digest counter lanes) -----------------
+        self._fold_store_counters(
+            (res.pat_stored, res.pat_overwrites, res.pat_evictions,
+             res.pat_dropped), rec.slot_map)
 
         f_in = self.wave_size
         slot_map = rec.slot_map
@@ -769,9 +958,11 @@ class WaveScheduler:
                 row_of[woff:woff + k] = np.arange(s, e)
             new_idx = np.arange(f_in, tail)
             new_idx = new_idx[valid_a[f_in:tail]]
-            # propagate shards down parent chains (≤ K links deep)
-            for _ in range(self.megastep_depth):
-                shard_of[new_idx] = shard_of[parent_a[new_idx]]
+            # propagate shards down parent chains (≤ K links deep) —
+            # skipped on the default path where every shard id is 0
+            if any(q.parallelism > 1 for q in slot_map.values()):
+                for _ in range(self.megastep_depth):
+                    shard_of[new_idx] = shard_of[parent_a[new_idx]]
             sl_arr = slot_a[new_idx]
             for sl_v in np.unique(sl_arr):
                 q = slot_map.get(int(sl_v))
@@ -856,6 +1047,7 @@ class WaveScheduler:
             self._build_wave(picks, "leftover")
         res = extract_more_mq(self.tb, ph, slot_v, depth_v, lo,
                               kpr=4 * self.kpr)
+        self.tb = res[7]            # handle with hit counters bumped
         slot_map = {q.slot: q for q, *_ in metas}
         for q in slot_map.values():
             q.stats.waves += 1
@@ -905,7 +1097,7 @@ class WaveScheduler:
         if kind == "fresh":
             self.slot_rows_expanded += np.bincount(
                 slot_v[valid], minlength=self.n_slots).astype(np.int64)
-            res = expand_wave_mq(
+            res, self.tb = expand_wave_mq(
                 self.g, self.qb, self.tb, fr, us, ph, valid, slot_v,
                 depth_v, kpr=self.kpr, backend=self._kernel_backend)
             self.t_dispatch_s += time.perf_counter() - t0
@@ -924,6 +1116,7 @@ class WaveScheduler:
         else:
             res = extract_more_mq(self.tb, ph, slot_v, depth_v, lo,
                                   kpr=4 * self.kpr)
+            self.tb = res[7]        # handle with hit counters bumped
             self.t_dispatch_s += time.perf_counter() - t0
             t1 = time.perf_counter()
             child_valid = np.asarray(res[1])
@@ -983,13 +1176,7 @@ class WaveScheduler:
             cp = np.asarray(cp)
             par = np.asarray(par)
             cvalid = np.asarray(cvalid)
-            if self.pool.id_overflow and self.pool.learning_enabled:
-                # id overflow: clear all tables, pause learning (sound);
-                # the pool re-enables learning once it drains.
-                self.tb = TableBank.empty(self.n_slots, self.data.n)
-                self.pool.learning_enabled = False
-                for qq in self.pool.active_queries():
-                    qq.learn = False
+            self._reset_learning_on_overflow()
 
         # ---- per-item host bookkeeping ---------------------------------
         wave_rows_created = 0
@@ -1095,6 +1282,8 @@ class WaveScheduler:
         """Aggregate wave statistics for SLO / occupancy reporting.
         Prune/row totals include still-active queries, so mid-run polling
         sees live numbers."""
+        self._materialize_flush_counters()
+        occupancy = np.asarray(self.tb.valid.sum(axis=1), np.int64)
         prunes = self.total_prunes + sum(
             q.stats.deadend_prunes for q in self.pool.active_queries())
         rows = self.total_rows_created + sum(
@@ -1124,6 +1313,22 @@ class WaveScheduler:
             "dispatch_time_s": self.t_dispatch_s,
             "device_sync_time_s": self.t_sync_s,
             "host_time_s": self.t_host_s,
+            # bounded hashed Δ store + cross-query template cache
+            # (occupancy reads the live bank so every schedule path —
+            # single-step included — reports real store pressure)
+            "pattern_capacity": self.pattern_capacity,
+            "store_stored": self.store_counters["stored"],
+            "store_overwrites": self.store_counters["overwrites"],
+            "store_evictions": self.store_counters["evictions"],
+            "store_dropped": self.store_counters["dropped"],
+            "store_occupancy": occupancy.tolist(),
+            "store_load_factor": float(
+                occupancy.max() / self.pattern_capacity
+                if self.n_slots else 0.0),
+            "warm_started": self.warm_started,
+            "warm_patterns_seeded": self.warm_patterns_seeded,
+            "pattern_cache": (self.pattern_cache.report()
+                              if self.pattern_cache is not None else None),
         }
 
 
@@ -1137,39 +1342,44 @@ class WaveEngine:
     """
 
     def __init__(self, data: Graph, wave_size: int = 512, kpr: int = 16,
-                 use_pruning: bool = True, megastep_depth: int = 6):
+                 use_pruning: bool = True, megastep_depth: int = 6,
+                 pattern_capacity: int = 4096,
+                 pattern_cache: bool = True):
         self.scheduler = WaveScheduler(
             data, n_slots=1, wave_size=wave_size, kpr=kpr,
-            use_pruning=use_pruning, megastep_depth=megastep_depth)
+            use_pruning=use_pruning, megastep_depth=megastep_depth,
+            pattern_capacity=pattern_capacity,
+            pattern_cache=pattern_cache)
 
     def match(self, query: Graph, limit: int | None = 1000,
               cand: list[np.ndarray] | None = None,
               order: np.ndarray | None = None,
               max_rows: int | None = None,
               time_budget_s: float | None = None,
-              seed_table: TableArrays | None = None,
+              seed_patterns: dict | None = None,
               parallelism: int = 1) -> MatchResult:
-        """``seed_table``: a dead-end table to pre-load (see
+        """``seed_patterns``: a pattern entries dict to pre-load (see
         :meth:`WaveScheduler.submit` for the μ > 0 soundness rule);
         ``parallelism``: intra-query shard count (shard-as-segments)."""
         qid = self.scheduler.submit(
             query, limit=limit, cand=cand, order=order, max_rows=max_rows,
-            time_budget_s=time_budget_s, seed_table=seed_table,
+            time_budget_s=time_budget_s, seed_patterns=seed_patterns,
             keep_table=True, parallelism=parallelism)
         self.scheduler.run()
         res = self.scheduler.finished.pop(qid)
         self.scheduler.poll()
-        self._table = self.scheduler.tables.pop(qid, None)
-        self._hits = self.scheduler.table_hits.pop(qid, None)
+        self._entries = self.scheduler.tables.pop(qid, None)
         return res
 
 
 def match_vectorized(query: Graph, data: Graph, limit: int | None = 1000,
                      use_pruning: bool = True, wave_size: int = 512,
                      kpr: int = 16, megastep_depth: int = 6,
+                     pattern_capacity: int = 4096,
                      **kw) -> MatchResult:
     """One-shot convenience wrapper around :class:`WaveEngine`."""
     return WaveEngine(data, wave_size=wave_size, kpr=kpr,
                       use_pruning=use_pruning,
-                      megastep_depth=megastep_depth
+                      megastep_depth=megastep_depth,
+                      pattern_capacity=pattern_capacity
                       ).match(query, limit=limit, **kw)

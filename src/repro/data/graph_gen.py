@@ -188,3 +188,57 @@ def trap_graph(n_b: int = 30, n_c: int = 30, n_good: int = 2,
     add_tail(0)                       # keep v0 arc-consistent for u4
     data = Graph.from_edges(nxt, edges, labels, 4)
     return query, data
+
+
+def corridor_graph(n_bait: int = 64, n_spines: int = 2, seed: int = 0
+                   ) -> tuple[Graph, Graph]:
+    """Repeated-template workload: prefix-independent dead-end corridors.
+
+    Query: a 7-vertex path with distinct labels 0-1-2-3-4-5-6.
+    Data: one root r (label 0) on a real spine r-s1-...-s6 (labels 1..6),
+    plus ``n_bait`` *bait corridors*: chains b1-b2-b3-b4-b5 (labels 1..5)
+    with b1 attached to r and the chain cut before label 6. Every bait
+    passes the label/degree/NLF filters and survives the bounded
+    CFL-lite refinement (the emptiness needs 4 propagation hops, one
+    more than its round budget), so the search must discover each
+    corridor's death by descending into it — and the failure depends
+    *only* on (position 1, b1): the learned Lemma-1 patterns all have
+    μ == 0.
+
+    That makes this the showcase for cross-query pattern reuse: within
+    one run each bait is entered exactly once (learning can't help —
+    there is a single root), so the cold prune rate is ~0, while a
+    warm-started rerun of the same template prunes all ``n_bait`` baits
+    at the first extraction. ``trap_graph`` is the opposite pin: all its
+    patterns are μ == 1 and intra-query learning is what matters.
+    ``n_spines`` (>= 2) real spines carry the true embeddings.
+
+    Returns (query, data).
+    """
+    del seed                          # deterministic by construction
+    n = 7
+    q_edges = [(i, i + 1) for i in range(n - 1)]
+    query = Graph.from_edges(n, q_edges, list(range(n)), n)
+
+    edges: list[tuple[int, int]] = []
+    labels: list[int] = [0]           # vertex 0: the root r
+    nxt = 1
+    # >= 2 real spines keep every non-root candidate set larger than
+    # C[u0] = {r}, so the rarity-first ordering starts at the root and
+    # walks the path — the schedule that actually enters the corridors
+    for _ in range(max(2, n_spines)):     # real spines s1..s6
+        spine_prev = 0
+        for lab in range(1, 7):
+            edges.append((spine_prev, nxt))
+            labels.append(lab)
+            spine_prev = nxt
+            nxt += 1
+    for _ in range(n_bait):           # bait corridors b1..b5
+        prev = 0
+        for lab in range(1, 6):
+            edges.append((prev, nxt))
+            labels.append(lab)
+            prev = nxt
+            nxt += 1
+    data = Graph.from_edges(nxt, edges, labels, n)
+    return query, data

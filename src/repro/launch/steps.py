@@ -431,19 +431,21 @@ def _din_cells(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
 # ================================================================= matcher
 def _matcher_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
     """Lower the *real* multi-query wave program (``expand_wave_mq``)
-    that the shared-wave scheduler dispatches — slot-stacked query/table
-    banks plus per-row slot/depth lanes — not the 1-slot single-query
-    facade. The distributed shard-as-segments matcher rides exactly this
-    program, so the dry-run/roofline numbers describe production waves
-    with mixed-query (and mixed-shard) rows."""
+    that the shared-wave scheduler dispatches — slot-stacked query banks
+    and hashed Δ store plus per-row slot/depth lanes — not the 1-slot
+    single-query facade. The distributed shard-as-segments matcher rides
+    exactly this program, so the dry-run/roofline numbers describe
+    production waves with mixed-query (and mixed-shard) rows."""
     from ..core.engine_step import (MASK_WORDS, N_PAD, GraphArrays,
-                                    QueryBank, TableBank, expand_wave_mq)
+                                    QueryBank, expand_wave_mq)
+    from ..patterns.store import PatternStoreBank
     d = cell.dims
     v = d["n_vertices"]
     w = (v + 31) // 32
     f = d["wave_size"]
     kpr = d["kpr"]
     s = d.get("n_slots", 16)
+    cap = d.get("pattern_capacity", 65_536)
     dpa = dp(mesh)
     g = GraphArrays(adj_bitmap=sds((v, w), jnp.uint32),
                     n_vertices=sds((), jnp.int32))
@@ -451,10 +453,13 @@ def _matcher_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
                    nbr_mask=sds((s, N_PAD, N_PAD), bool),
                    n_query=sds((s,), jnp.int32),
                    learn=sds((s,), bool))
-    tb = TableBank(phi=sds((s, N_PAD, v), jnp.int32),
-                   mu=sds((s, N_PAD, v), jnp.int32),
-                   mask=sds((s, N_PAD, v, MASK_WORDS), jnp.uint32),
-                   valid=sds((s, N_PAD, v), bool))
+    tb = PatternStoreBank(key_pos=sds((s, cap), jnp.int32),
+                          key_v=sds((s, cap), jnp.int32),
+                          phi=sds((s, cap), jnp.int32),
+                          mu=sds((s, cap), jnp.int32),
+                          mask=sds((s, cap, MASK_WORDS), jnp.uint32),
+                          valid=sds((s, cap), bool),
+                          hits=sds((s, cap), jnp.int32))
     frontier = sds((f, N_PAD), jnp.int32)
     used = sds((f, w), jnp.uint32)
     phi = sds((f, N_PAD + 1), jnp.int32)
@@ -463,15 +468,17 @@ def _matcher_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
     depth = sds((f,), jnp.int32)
 
     gspec = GraphArrays(adj_bitmap=P("model", None), n_vertices=P())
-    # banks replicate the (small) slot axis; tables shard vertices over
-    # the model axis like the graph bitmap they are keyed by
+    # banks replicate the (small) slot axis; the hashed Δ store is
+    # O(capacity) — data-graph independent and a few MB at web scale —
+    # so it replicates too (the dense [S, N_PAD, V] bank it replaced had
+    # to shard its vertex axis over the model axis)
     qbspec = QueryBank(cand_bitmap=P(None, None, None),
                        nbr_mask=P(None, None, None),
                        n_query=P(None), learn=P(None))
-    tbspec = TableBank(phi=P(None, None, "model"),
-                       mu=P(None, None, "model"),
-                       mask=P(None, None, "model", None),
-                       valid=P(None, None, "model"))
+    tbspec = PatternStoreBank(key_pos=P(None, None), key_v=P(None, None),
+                              phi=P(None, None), mu=P(None, None),
+                              mask=P(None, None, None),
+                              valid=P(None, None), hits=P(None, None))
     fspec = (_sanitize(P(dpa, None), (f, N_PAD), mesh),
              _sanitize(P(dpa, None), (f, w), mesh),
              _sanitize(P(dpa, None), (f, N_PAD + 1), mesh),
@@ -484,11 +491,12 @@ def _matcher_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
         return expand_wave_mq(g, qb, tb, frontier, used, phi, row_valid,
                               query_slot, depth, kpr=kpr)
 
-    out_spec = jax.tree.map(lambda _: P(), jax.eval_shape(
+    res_spec, tb_out_spec = jax.tree.map(lambda _: P(), jax.eval_shape(
         step, g, qb, tb, frontier, used, phi, row_valid, query_slot,
         depth))
-    # per-row result lanes follow the frontier's data sharding
-    out_spec = out_spec._replace(
+    # per-row result lanes follow the frontier's data sharding; the
+    # returned store handle stays replicated like its input
+    res_spec = res_spec._replace(
         child_v=_sanitize(P(dpa, None), (f, kpr), mesh),
         child_valid=_sanitize(P(dpa, None), (f, kpr), mesh),
         pruned_v=_sanitize(P(dpa, None), (f, kpr), mesh),
@@ -504,7 +512,7 @@ def _matcher_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
                 (g, qb, tb, frontier, used, phi, row_valid, query_slot,
                  depth),
                 (gspec, qbspec, tbspec) + fspec,
-                out_spec)
+                (res_spec, tb_out_spec))
 
 
 # ================================================================ dispatch

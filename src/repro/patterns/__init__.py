@@ -1,0 +1,30 @@
+"""First-class failure-pattern subsystem (paper §4.4 grown up).
+
+The paper's speedup lives in the dead-end pattern table Δ; this package
+makes Δ a subsystem instead of an engine detail:
+
+* ``store``  — the bounded hashed device store (O(capacity) memory,
+  in-kernel probe/insert lanes, counter-guided eviction) plus the
+  layout-independent host *entries* form used by exchange, checkpoints
+  and the cache.
+* ``cache``  — the cross-query template cache: retiring queries snapshot
+  their hot transferable patterns, recurring templates warm-start.
+* ``tables`` — the sequential host reference tables (set-semantic and
+  numeric) that anchor the soundness arguments and the oracle tests.
+"""
+from .cache import CacheStats, PatternCache
+from .store import (ENTRY_KEYS, MASK_WORDS, PROBE, PatternStore,
+                    PatternStoreBank, StoreCounters, age_hits,
+                    empty_entries, entries_to_store, hash_insert,
+                    hash_probe, mask64, probe_slots, select_entries,
+                    store_to_entries, words_from64)
+from .tables import DeadEndStats, NumericDeadEndTable, SetDeadEndTable
+
+__all__ = [
+    "CacheStats", "PatternCache",
+    "ENTRY_KEYS", "MASK_WORDS", "PROBE", "PatternStore",
+    "PatternStoreBank", "StoreCounters", "age_hits", "empty_entries",
+    "entries_to_store", "hash_insert", "hash_probe", "mask64",
+    "probe_slots", "select_entries", "store_to_entries", "words_from64",
+    "DeadEndStats", "NumericDeadEndTable", "SetDeadEndTable",
+]

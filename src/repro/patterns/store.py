@@ -1,0 +1,438 @@
+"""Bounded hashed device store for failure patterns (Δ, paper §4.4).
+
+The dead-end table used to be a dense ``[S, N_PAD, V]`` bank — resident
+memory grew with the data-graph vertex count and most of it sat empty
+(patterns are sparse: one per *discovered* dead-end key, not one per
+possible key). This module replaces it with a bounded open-addressing
+hash store:
+
+* :class:`PatternStoreBank` — per-slot arrays ``[S, C]`` where ``C`` is
+  the configured capacity (a power of two). Each entry holds the key
+  ``(order position, data vertex)`` explicitly plus the paper's numeric
+  pattern ``(φ, μ, Γ)`` and a device-side hit counter.
+* :func:`hash_probe` / :func:`hash_insert` — the in-kernel probe and
+  insert lanes: multiplicative hash of the key, linear probing over a
+  fixed ``PROBE``-slot window. Inserts reuse a matching-key slot
+  (overwrite), else the first empty slot, else **evict** the
+  lowest-hit-counter slot of the window (counter-guided eviction).
+  Batched inserts resolve in-batch conflicts deterministically
+  (last-write-wins per target slot, all lanes consistent) and return
+  per-slot counters (stored / overwrites / evictions / drops) so the
+  digest can surface them.
+
+Soundness: the table is *advisory* (see ``core.deadend``) — a lost,
+evicted, or dropped pattern only loses pruning opportunity, never
+correctness, because every stored pattern is a true dead-end and lookups
+only ever *skip* work. Capacity and probe-window pressure therefore
+trade memory for prune rate, not for exactness; the
+tiny-capacity oracle-equality tests pin this.
+
+Host helpers convert between the device layout and a compact *entries*
+dict (``pos/v/phi/mu/mask/hits`` arrays over valid entries only) used by
+the cross-host exchange, checkpoints, and the template cache — the
+entries form is layout-independent, so a snapshot written under one
+capacity restores under any other.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+MASK_WORDS = 2          # dead-end masks cover up to 64 query positions
+PROBE = 8               # linear-probe window length (static)
+
+ENTRY_KEYS = ("pos", "v", "phi", "mu", "mask", "hits")
+
+
+class PatternStore(NamedTuple):
+    """One query slot's hashed Δ store (capacity C entries)."""
+    key_pos: jax.Array       # int32 [C] order position of the key (-1 empty)
+    key_v: jax.Array         # int32 [C] data vertex of the key
+    phi: jax.Array           # int32 [C] stored prefix id φ
+    mu: jax.Array            # int32 [C] prefix length μ
+    mask: jax.Array          # uint32 [C, MASK_WORDS] dead-end mask Γ
+    valid: jax.Array         # bool [C]
+    hits: jax.Array          # int32 [C] device hit counter (aged)
+
+    @staticmethod
+    def empty(capacity: int) -> "PatternStore":
+        c = _check_capacity(capacity)
+        return PatternStore(
+            key_pos=jnp.full((c,), -1, jnp.int32),
+            key_v=jnp.full((c,), -1, jnp.int32),
+            phi=jnp.zeros((c,), jnp.int32),
+            mu=jnp.zeros((c,), jnp.int32),
+            mask=jnp.zeros((c, MASK_WORDS), jnp.uint32),
+            valid=jnp.zeros((c,), bool),
+            hits=jnp.zeros((c,), jnp.int32))
+
+
+class PatternStoreBank(NamedTuple):
+    """Per-slot hashed Δ stores, stacked along the query-slot axis."""
+    key_pos: jax.Array       # int32 [S, C]
+    key_v: jax.Array         # int32 [S, C]
+    phi: jax.Array           # int32 [S, C]
+    mu: jax.Array            # int32 [S, C]
+    mask: jax.Array          # uint32 [S, C, MASK_WORDS]
+    valid: jax.Array         # bool [S, C]
+    hits: jax.Array          # int32 [S, C]
+
+    @property
+    def capacity(self) -> int:
+        return self.phi.shape[1]
+
+    @staticmethod
+    def empty(n_slots: int, capacity: int) -> "PatternStoreBank":
+        c = _check_capacity(capacity)
+        s = n_slots
+        return PatternStoreBank(
+            key_pos=jnp.full((s, c), -1, jnp.int32),
+            key_v=jnp.full((s, c), -1, jnp.int32),
+            phi=jnp.zeros((s, c), jnp.int32),
+            mu=jnp.zeros((s, c), jnp.int32),
+            mask=jnp.zeros((s, c, MASK_WORDS), jnp.uint32),
+            valid=jnp.zeros((s, c), bool),
+            hits=jnp.zeros((s, c), jnp.int32))
+
+
+class StoreCounters(NamedTuple):
+    """Per-slot insert accounting of one batched scatter (int32 [S])."""
+    stored: jax.Array        # entries written (new + overwrites + evicting)
+    overwrites: jax.Array    # matching key re-stored in place
+    evictions: jax.Array     # lowest-hit entry displaced (window full)
+    dropped: jax.Array       # lost to an in-batch target conflict
+
+    @staticmethod
+    def zeros(n_slots: int) -> "StoreCounters":
+        z = jnp.zeros((n_slots,), jnp.int32)
+        return StoreCounters(z, z, z, z)
+
+    def add(self, other: "StoreCounters") -> "StoreCounters":
+        return StoreCounters(*(a + b for a, b in zip(self, other)))
+
+
+def _check_capacity(capacity: int) -> int:
+    c = int(capacity)
+    if c < PROBE or (c & (c - 1)) != 0:
+        raise ValueError(
+            f"pattern store capacity must be a power of two >= {PROBE}, "
+            f"got {capacity}")
+    return c
+
+
+def _hash0(key_pos: jax.Array, key_v: jax.Array, capacity: int) -> jax.Array:
+    """Multiplicative hash of (pos, v) onto [0, capacity)."""
+    h = (key_v.astype(jnp.uint32) * jnp.uint32(2654435761)
+         ^ key_pos.astype(jnp.uint32) * jnp.uint32(0x9E3779B9))
+    h ^= h >> 15
+    return (h & jnp.uint32(capacity - 1)).astype(jnp.int32)
+
+
+def probe_slots(key_pos: jax.Array, key_v: jax.Array,
+                capacity: int) -> jax.Array:
+    """Linear-probe window: int32 [..., PROBE] store indices per key."""
+    h0 = _hash0(key_pos, key_v, capacity)
+    offs = jnp.arange(PROBE, dtype=jnp.int32)
+    return (h0[..., None] + offs) & jnp.int32(capacity - 1)
+
+
+def hash_probe(bank: PatternStoreBank, slot: jax.Array, key_pos: jax.Array,
+               key_v: jax.Array
+               ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array,
+                          jax.Array]:
+    """Probe flat key arrays [M] against the bank.
+
+    Returns (found bool [M], phi int32 [M], mu int32 [M],
+    mask uint32 [M, MASK_WORDS], idx int32 [M]) where ``idx`` is the
+    matched store index (0 when not found — gate on ``found``).
+    """
+    c = bank.capacity
+    ps = probe_slots(key_pos, key_v, c)                      # [M, P]
+    s2 = slot[:, None]
+    match = (bank.valid[s2, ps]
+             & (bank.key_pos[s2, ps] == key_pos[:, None])
+             & (bank.key_v[s2, ps] == key_v[:, None]))      # [M, P]
+    found = match.any(axis=1)
+    j = jnp.argmax(match, axis=1)
+    idx = jnp.take_along_axis(ps, j[:, None], axis=1)[:, 0]
+    idx = jnp.where(found, idx, 0)
+    sl = jnp.where(found, slot, 0)
+    return (found, bank.phi[sl, idx], bank.mu[sl, idx],
+            bank.mask[sl, idx], idx)
+
+
+INSERT_ROUNDS = 3       # in-batch conflict retries (static unroll)
+
+
+def hash_insert(bank: PatternStoreBank, slot: jax.Array, key_pos: jax.Array,
+                key_v: jax.Array, phis: jax.Array, mus: jax.Array,
+                masks: jax.Array, valid: jax.Array
+                ) -> tuple[PatternStoreBank, StoreCounters]:
+    """Batched Δ insert with counter-guided eviction (flat arrays [N]).
+
+    Target selection per entry: a matching-key slot in the probe window
+    (overwrite, hit counter preserved), else the first empty slot, else
+    the window's lowest-hit slot (eviction, hit counter reset). In-batch
+    conflicts on one (slot, target) pair keep the *last* entry — chosen
+    per target index, so all lanes of the surviving entry are written
+    consistently (a mixed-lane write could fabricate a pattern that is
+    not a true dead-end; a dropped one merely loses pruning). Entries
+    that lose to a *different-key* winner retry against the updated bank
+    for up to ``INSERT_ROUNDS`` rounds (one wave's batch shares probe
+    windows heavily — a single pre-state pass would drop most of a
+    congested batch); entries superseded by a later same-key store do
+    not retry (last write wins, as the dense scatter behaved).
+    """
+    n_slots = bank.valid.shape[0]
+
+    def cond(state):
+        _, _, remaining, it = state
+        return remaining.any() & (it < INSERT_ROUNDS)
+
+    def body(state):
+        bank, counters, remaining, it = state
+        bank, round_counters, remaining = _insert_round(
+            bank, slot, key_pos, key_v, phis, mus, masks, remaining)
+        return bank, counters.add(round_counters), remaining, it + 1
+
+    # while_loop, not an unrolled scan: the typical batch resolves in
+    # one round (same-key duplicates don't retry), so later rounds
+    # usually never execute at all
+    bank, counters, remaining, _ = lax.while_loop(
+        cond, body,
+        (bank, StoreCounters.zeros(n_slots), valid, jnp.int32(0)))
+    return bank, counters._replace(
+        dropped=counters.dropped + _count_per_slot(remaining, slot,
+                                                   n_slots))
+
+
+def _count_per_slot(sel: jax.Array, slot: jax.Array,
+                    n_slots: int) -> jax.Array:
+    return jnp.zeros((n_slots,), jnp.int32).at[
+        jnp.where(sel, slot, n_slots)].add(1, mode="drop")
+
+
+def _insert_round(bank: PatternStoreBank, slot: jax.Array,
+                  key_pos: jax.Array, key_v: jax.Array, phis: jax.Array,
+                  mus: jax.Array, masks: jax.Array, valid: jax.Array
+                  ) -> tuple[PatternStoreBank, StoreCounters, jax.Array]:
+    """One conflict-resolution round of :func:`hash_insert`. Returns the
+    updated bank, this round's counters (``dropped`` always 0 — losers
+    either retry or are superseded), and the entries still to insert."""
+    n = slot.shape[0]
+    n_slots, c = bank.valid.shape
+    ps = probe_slots(key_pos, key_v, c)                      # [N, P]
+    s2 = jnp.where(valid, slot, 0)[:, None]
+    wvalid = bank.valid[s2, ps]
+    match = (wvalid & (bank.key_pos[s2, ps] == key_pos[:, None])
+             & (bank.key_v[s2, ps] == key_v[:, None]))
+    whits = bank.hits[s2, ps]
+    has_match = match.any(axis=1)
+    empty = ~wvalid
+    has_empty = empty.any(axis=1)
+    arange = jnp.arange(n, dtype=jnp.int32)
+    # decorrelated empty-slot pick: an entry takes the (spread(key) mod
+    # n_empty)-th empty slot of its window, not the first — distinct
+    # keys whose windows overlap (one congested wave batch) then mostly
+    # land on distinct slots instead of all racing for one (lookups scan
+    # the whole window, so any in-window slot is equivalent). The spread
+    # is a second hash of the KEY, not the batch position: same-key
+    # entries must pick the same target so the (slot, target) dedup
+    # below collapses them to one write (last wins), as the dense
+    # scatter behaved — a position-based spread would store duplicates.
+    spread = (key_v.astype(jnp.uint32) * jnp.uint32(0x85EBCA6B)
+              ^ key_pos.astype(jnp.uint32) * jnp.uint32(0xC2B2AE35))
+    spread ^= spread >> 13
+    n_empty = empty.sum(axis=1).astype(jnp.int32)
+    want = (spread % jnp.maximum(n_empty, 1).astype(jnp.uint32)
+            ).astype(jnp.int32)[:, None]
+    ranks = jnp.cumsum(empty, axis=1).astype(jnp.int32) - 1
+    j_empty = jnp.argmax(empty & (ranks == want), axis=1)
+    j = jnp.where(has_match, jnp.argmax(match, axis=1),
+                  jnp.where(has_empty, j_empty,
+                            jnp.argmin(whits, axis=1)))
+    target = jnp.take_along_axis(ps, j[:, None], axis=1)[:, 0]  # [N]
+
+    # in-batch dedup: exactly one winner per (slot, target) pair
+    flat = slot * c + target
+    winner = jnp.full((n_slots * c,), -1, jnp.int32).at[
+        jnp.where(valid, flat, n_slots * c)].max(
+            jnp.where(valid, arange, -1), mode="drop")
+    keep = valid & (winner[flat] == arange)
+
+    qs = jnp.where(keep, slot, n_slots)          # OOB row -> dropped
+    # a dropped entry whose *winner* carries the same key was simply
+    # superseded in-batch (the dense scatter's last-write-wins) — count
+    # it as an overwrite; only a different-key winner means real loss
+    widx = winner[flat].clip(0)
+    same_key = (key_pos == key_pos[widx]) & (key_v == key_v[widx])
+    kept_hits = jnp.where(
+        has_match, jnp.take_along_axis(whits, j[:, None], axis=1)[:, 0], 0)
+    bank2 = PatternStoreBank(
+        key_pos=bank.key_pos.at[qs, target].set(key_pos, mode="drop"),
+        key_v=bank.key_v.at[qs, target].set(key_v, mode="drop"),
+        phi=bank.phi.at[qs, target].set(phis, mode="drop"),
+        mu=bank.mu.at[qs, target].set(mus, mode="drop"),
+        mask=bank.mask.at[qs, target].set(masks, mode="drop"),
+        valid=bank.valid.at[qs, target].set(True, mode="drop"),
+        hits=bank.hits.at[qs, target].set(kept_hits, mode="drop"))
+
+    superseded = valid & ~keep & same_key
+    retry = valid & ~keep & ~same_key
+    counters = StoreCounters(
+        stored=_count_per_slot(keep, slot, n_slots),
+        overwrites=_count_per_slot((keep & has_match) | superseded,
+                                   slot, n_slots),
+        evictions=_count_per_slot(keep & ~has_match & ~has_empty,
+                                  slot, n_slots),
+        dropped=jnp.zeros((n_slots,), jnp.int32))
+    return bank2, counters, retry
+
+
+def age_hits(bank: PatternStoreBank) -> PatternStoreBank:
+    """Halve every hit counter (periodic aging so eviction tracks
+    *recent* usefulness instead of all-time history)."""
+    return bank._replace(hits=bank.hits >> 1)
+
+
+# ===================================================================
+# host-side entries form (numpy) — layout-independent snapshot
+# ===================================================================
+def mask64(words: np.ndarray) -> np.ndarray:
+    """uint32 [..., 2] -> uint64 [...]."""
+    w = np.asarray(words).astype(np.uint64)
+    return w[..., 0] | (w[..., 1] << np.uint64(32))
+
+
+def words_from64(m: np.ndarray) -> np.ndarray:
+    out = np.zeros(np.shape(m) + (MASK_WORDS,), np.uint32)
+    out[..., 0] = (m & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    out[..., 1] = (m >> np.uint64(32)).astype(np.uint32)
+    return out
+
+
+def empty_entries() -> dict:
+    return {"pos": np.zeros(0, np.int32), "v": np.zeros(0, np.int32),
+            "phi": np.zeros(0, np.int32), "mu": np.zeros(0, np.int32),
+            "mask": np.zeros(0, np.uint64), "hits": np.zeros(0, np.int64)}
+
+
+def store_to_entries(store: PatternStore,
+                     hit_counts: dict | None = None) -> dict:
+    """Snapshot a slot's store into the compact entries dict.
+
+    Entries are sorted by (pos, v) so snapshots of identical table state
+    are byte-identical (deterministic exchange/checkpoint). ``hit_counts``
+    (host-cumulative ``{(pos, v): n}``) overrides the device hit lane
+    when given — the device counter is aged and reset on eviction, the
+    host one survives both.
+    """
+    valid = np.asarray(store.valid)
+    sel = np.nonzero(valid)[0]
+    pos = np.asarray(store.key_pos)[sel]
+    v = np.asarray(store.key_v)[sel]
+    order = np.lexsort((v, pos))
+    pos, v, sel = pos[order], v[order], sel[order]
+    hits = np.asarray(store.hits)[sel].astype(np.int64)
+    if hit_counts:
+        # one vectorized searchsorted pass over packed (pos, v) keys —
+        # this runs on the periodic checkpoint path, where a per-entry
+        # Python loop over a near-full store would stall the host
+        hk = np.fromiter(((p << 32) | vv for p, vv in hit_counts),
+                         np.int64, len(hit_counts))
+        hv = np.fromiter(hit_counts.values(), np.int64, len(hit_counts))
+        ho = np.argsort(hk)
+        hk, hv = hk[ho], hv[ho]
+        ek = (pos.astype(np.int64) << 32) | v
+        idx = np.clip(np.searchsorted(hk, ek), 0, len(hk) - 1)
+        matched = hk[idx] == ek
+        hits = np.where(matched, np.maximum(hits, hv[idx]), hits)
+    return {"pos": pos.astype(np.int32), "v": v.astype(np.int32),
+            "phi": np.asarray(store.phi)[sel].astype(np.int32),
+            "mu": np.asarray(store.mu)[sel].astype(np.int32),
+            "mask": mask64(np.asarray(store.mask)[sel]),
+            "hits": hits}
+
+
+def entries_to_store(entries: dict, capacity: int) -> PatternStore:
+    """Rebuild a device-layout store from an entries dict (any capacity).
+
+    Entries are placed hottest-first with the same hash/probe layout the
+    device uses; when a probe window is full the (colder) newcomer is
+    dropped — sound, and consistent with the device eviction policy.
+    Placement is vectorized (PROBE offset rounds; within a round the
+    hottest contender wins each free slot, losers try the next offset)
+    so restoring a full web-scale store costs numpy passes, not ~n·PROBE
+    interpreted iterations on the admission path.
+    """
+    c = _check_capacity(capacity)
+    key_pos = np.full(c, -1, np.int32)
+    key_v = np.full(c, -1, np.int32)
+    phi = np.zeros(c, np.int32)
+    mu = np.zeros(c, np.int32)
+    mask = np.zeros((c, MASK_WORDS), np.uint32)
+    valid = np.zeros(c, bool)
+    hits = np.zeros(c, np.int32)
+    pos_a = np.asarray(entries["pos"], np.int32)
+    v_a = np.asarray(entries["v"], np.int32)
+    h_a = np.asarray(entries["hits"], np.int64)
+    # hottest first; (pos, v) tie-break keeps placement deterministic
+    order = np.lexsort((v_a, pos_a, -h_a))
+    pos_a, v_a, h_a = pos_a[order], v_a[order], h_a[order]
+    phi_a = np.asarray(entries["phi"], np.int32)[order]
+    mu_a = np.asarray(entries["mu"], np.int32)[order]
+    mask_words = words_from64(np.asarray(entries["mask"], np.uint64))[order]
+    h0 = np.asarray(_hash0(jnp.asarray(pos_a), jnp.asarray(v_a), c))
+    placed = np.zeros(len(pos_a), bool)
+    for off in range(PROBE):
+        rem = np.nonzero(~placed)[0]            # still in hotness order
+        if len(rem) == 0:
+            break
+        t = (h0[rem] + off) & (c - 1)
+        # hottest contender wins each free slot; losers retry next off
+        _, first = np.unique(t, return_index=True)
+        winner = np.zeros(len(rem), bool)
+        winner[first] = True
+        ok = winner & ~valid[t]
+        sel, ts = rem[ok], t[ok]
+        key_pos[ts] = pos_a[sel]
+        key_v[ts] = v_a[sel]
+        phi[ts] = phi_a[sel]
+        mu[ts] = mu_a[sel]
+        mask[ts] = mask_words[sel]
+        valid[ts] = True
+        hits[ts] = np.minimum(h_a[sel], 2**31 - 1).astype(np.int32)
+        placed[sel] = True
+    return PatternStore(key_pos=jnp.asarray(key_pos),
+                        key_v=jnp.asarray(key_v), phi=jnp.asarray(phi),
+                        mu=jnp.asarray(mu), mask=jnp.asarray(mask),
+                        valid=jnp.asarray(valid), hits=jnp.asarray(hits))
+
+
+def select_entries(entries: dict, top_k: int | None,
+                   transferable_only: bool = True) -> dict:
+    """Deterministic top-k selection over an entries dict.
+
+    Ranked by hit counter descending (the patterns that actually pruned
+    travel first), ties broken by (pos, v) ascending — every host
+    selects the identical set from identical state. With
+    ``transferable_only`` only μ == 0 entries are kept: their match
+    condition Φ[0] == 0 holds in every engine, so they are sound without
+    a φ floor (μ > 0 entries reference the writer's φ numbering and need
+    :meth:`WaveScheduler.reserve_phi_floor` on import).
+    """
+    sel = np.ones(len(entries["pos"]), bool)
+    if transferable_only:
+        sel &= np.asarray(entries["mu"]) == 0
+    idx = np.nonzero(sel)[0]
+    if top_k is not None and len(idx) > top_k:
+        pos = np.asarray(entries["pos"])[idx]
+        v = np.asarray(entries["v"])[idx]
+        h = np.asarray(entries["hits"])[idx]
+        rank = np.lexsort((v, pos, -h))
+        idx = np.sort(idx[rank[:top_k]])
+    return {k: np.asarray(entries[k])[idx] for k in ENTRY_KEYS}

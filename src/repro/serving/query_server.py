@@ -62,17 +62,34 @@ class QueryServer:
                  limit: int | None = 1000, time_budget_s: float = 10.0,
                  wave_size: int = 256, kpr: int = 16, n_slots: int = 16,
                  max_recursions: int | None = None, max_queue: int = 4096,
-                 megastep_depth: int = 6):
+                 megastep_depth: int = 6,
+                 pattern_capacity: int = 4096,
+                 pattern_cache: bool = True,
+                 pattern_cache_templates: int = 64,
+                 pattern_cache_top_k: int = 512):
+        """``pattern_capacity`` bounds the per-slot hashed Δ store
+        (O(capacity) device memory, independent of the data graph;
+        eviction only loses pruning, never exactness). The pattern-cache
+        knobs control the cross-query template cache: recurring query
+        templates warm-start their Δ from the previous run's hot
+        transferable patterns — the serving win for traffic with
+        repeated templates (DESIGN.md §6). Cache hit/warm-start metrics
+        surface in :meth:`slo_report` and per-query in
+        ``QueryResult.stats`` (``cache_hit``, ``warm_patterns``,
+        ``table_stats``)."""
         self.data = data
         self.backend = backend
         self.limit = limit
         self.time_budget_s = time_budget_s
         self.max_recursions = max_recursions
-        self.scheduler = (WaveScheduler(data, n_slots=n_slots,
-                                        wave_size=wave_size, kpr=kpr,
-                                        max_queue=max_queue,
-                                        megastep_depth=megastep_depth)
-                          if backend == "engine" else None)
+        self.scheduler = (WaveScheduler(
+            data, n_slots=n_slots, wave_size=wave_size, kpr=kpr,
+            max_queue=max_queue, megastep_depth=megastep_depth,
+            pattern_capacity=pattern_capacity,
+            pattern_cache=pattern_cache,
+            pattern_cache_templates=pattern_cache_templates,
+            pattern_cache_top_k=pattern_cache_top_k)
+            if backend == "engine" else None)
         self.latencies: list[float] = []
         self.n_timeouts = 0
 

@@ -109,8 +109,8 @@ def test_work_stealing_mid_query():
 
 
 def test_checkpoint_npz_roundtrip(tmp_path):
-    """A completed checkpointed run writes a v2 .npz snapshot with empty
-    pending set, the full embedding set, and the learned Δ table."""
+    """A completed checkpointed run writes a v3 .npz snapshot with empty
+    pending set, the full embedding set, and the learned Δ entries."""
     query, data = trap_graph(n_b=20, n_c=20, n_good=2, tail_len=2, seed=0)
     ref = backtrack_deadend(query, data, limit=None)
     dm = DistributedMatcher(data, n_shards=4, wave_size=32, kpr=4,
@@ -119,11 +119,11 @@ def test_checkpoint_npz_roundtrip(tmp_path):
     assert embset(res.embeddings) == embset(ref.embeddings)
     assert (tmp_path / "state.npz").exists()
     ck = DistributedMatcher.load_state(str(tmp_path))
-    assert ck.version == 2
+    assert ck.version == 3
     assert len(ck.pending_roots) == 0
     assert embset(ck.embeddings) == embset(ref.embeddings)
-    assert ck.table is not None and ck.table["valid"].any()
-    assert ck.hits is not None and ck.hits.sum() > 0
+    assert ck.entries is not None and len(ck.entries["pos"]) > 0
+    assert ck.entries["hits"].sum() > 0
     assert ck.phi_floor > 1
 
 
@@ -205,18 +205,18 @@ def test_exchange_selection_deterministic_by_hits():
         return dm
 
     dm1, dm2 = run(), run()
-    t1, h1, (p1, v1) = dm1.export_patterns(top_k=8,
-                                           transferable_only=False)
-    t2, h2, (p2, v2) = dm2.export_patterns(top_k=8,
-                                           transferable_only=False)
-    assert np.array_equal(p1, p2) and np.array_equal(v1, v2)
-    assert len(p1) == 8
-    full_hits = dm1._hits
-    valid = np.asarray(dm1._table.valid)
-    excluded = valid.copy()
-    excluded[p1, v1] = False
-    if excluded.any():
-        assert h1[p1, v1].min() >= full_hits[excluded].max()
+    e1 = dm1.export_patterns(top_k=8, transferable_only=False)
+    e2 = dm2.export_patterns(top_k=8, transferable_only=False)
+    assert np.array_equal(e1["pos"], e2["pos"])
+    assert np.array_equal(e1["v"], e2["v"])
+    assert len(e1["pos"]) == 8
+    full = dm1._entries
+    exported = set(zip(e1["pos"].tolist(), e1["v"].tolist()))
+    excluded_hits = [int(h) for p, v, h in zip(
+        full["pos"].tolist(), full["v"].tolist(), full["hits"].tolist())
+        if (p, v) not in exported]
+    if excluded_hits:
+        assert int(e1["hits"].min()) >= max(excluded_hits)
 
 
 def test_exchange_transferable_only_filters_mu():
@@ -225,9 +225,60 @@ def test_exchange_transferable_only_filters_mu():
     query, data = trap_graph(n_b=40, n_c=40, n_good=2, tail_len=2, seed=0)
     dm = DistributedMatcher(data, n_shards=4, wave_size=32, kpr=4)
     dm.match(query, limit=None)
-    tab, hits, (pos, vert) = dm.export_patterns(transferable_only=True)
-    if len(pos):
-        assert (tab["mu"][pos, vert] == 0).all()
-    full, _, (fp, fv) = dm.export_patterns(transferable_only=False)
-    assert len(fp) >= len(pos)
-    assert len(fp) == np.asarray(dm._table.valid).sum()
+    tab = dm.export_patterns(transferable_only=True)
+    assert (np.asarray(tab["mu"]) == 0).all()
+    full = dm.export_patterns(transferable_only=False)
+    assert len(full["pos"]) >= len(tab["pos"])
+    assert len(full["pos"]) == len(dm._entries["pos"])
+
+
+def test_legacy_v2_dense_checkpoint_read_path(tmp_path):
+    """One-release compatibility: a v2 .npz snapshot (dense [N_PAD, V]
+    table + hit counters) converts to the entries form on read and
+    restores — keeping the learned Δ and the phi floor."""
+    import numpy as np
+    from repro.core.engine_step import N_PAD
+    from repro.patterns.store import words_from64
+
+    query, data = trap_graph(n_b=40, n_c=40, n_good=2, tail_len=2, seed=0)
+    ref = backtrack_deadend(query, data, limit=None)
+    # abort a run mid-flight to get a genuine pending set + learned Δ
+    dm = DistributedMatcher(data, n_shards=4, wave_size=32, kpr=4,
+                            checkpoint_every_waves=2)
+    partial = dm.match(query, limit=None, checkpoint_dir=str(tmp_path),
+                       max_rows=120)
+    assert partial.stats.aborted
+    ck = DistributedMatcher.load_state(str(tmp_path))
+    assert ck.entries is not None and len(ck.entries["pos"]) > 0
+    # rewrite the snapshot in the legacy v2 dense format
+    v = data.n
+    dense = {k: np.zeros((N_PAD, v), d) for k, d in
+             (("phi", np.int32), ("mu", np.int32), ("valid", bool))}
+    dense["mask"] = np.zeros((N_PAD, v, 2), np.uint32)
+    hits = np.zeros((N_PAD, v), np.int64)
+    e = ck.entries
+    dense["phi"][e["pos"], e["v"]] = e["phi"]
+    dense["mu"][e["pos"], e["v"]] = e["mu"]
+    dense["mask"][e["pos"], e["v"]] = words_from64(e["mask"])
+    dense["valid"][e["pos"], e["v"]] = True
+    hits[e["pos"], e["v"]] = e["hits"]
+    payload = {"version": np.int64(2), "n_shards": np.int64(4),
+               "phi_floor": np.int64(ck.phi_floor),
+               "pending_roots": ck.pending_roots,
+               "embeddings": (np.stack(ck.embeddings).astype(np.int32)
+                              if ck.embeddings
+                              else np.zeros((0, 0), np.int32)),
+               "table_hits": hits}
+    for k in ("phi", "mu", "mask", "valid"):
+        payload[f"table_{k}"] = dense[k]
+    with open(tmp_path / "state.npz", "wb") as f:
+        np.savez_compressed(f, **payload)
+    ck2 = DistributedMatcher.load_state(str(tmp_path))
+    assert ck2.version == 2
+    for k in ("pos", "v", "phi", "mu", "mask", "hits"):
+        np.testing.assert_array_equal(ck2.entries[k], ck.entries[k])
+    dm2 = DistributedMatcher(data, n_shards=3, wave_size=32, kpr=4)
+    res = dm2.match(query, limit=None, checkpoint_dir=str(tmp_path),
+                    resume=True)
+    assert embset(res.embeddings) == embset(ref.embeddings)
+    assert dm2.scheduler.pool.id_counter >= ck.phi_floor

@@ -144,3 +144,38 @@ def test_flash_attention_long_kv_decode_shape():
     want = flash_attention_op(q, k, v, causal=False, backend="jnp")
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------------- backend config
+def test_kernel_backend_rejects_unknown_names():
+    """kernels.config must fail fast on unknown backend names — both at
+    runtime selection and for the REPRO_KERNEL_BACKEND env var at import
+    time (no silent fall-through to a default)."""
+    import importlib
+    import os
+    import subprocess
+    import sys
+
+    from repro.kernels import config
+
+    with pytest.raises(ValueError, match="cuda"):
+        config.set_backend("cuda")
+    with pytest.raises(ValueError, match="tpu"):
+        config.resolve("tpu")
+    assert config.get_backend() in config.BACKENDS    # state unchanged
+    # explicit None falls back to the process-wide setting
+    assert config.resolve(None) == config.get_backend()
+    for name in config.BACKENDS:
+        assert config.resolve(name) == name
+
+    # env-var validation happens at import time: exercise it in a
+    # subprocess so this process's config module stays untouched
+    env = dict(os.environ, REPRO_KERNEL_BACKEND="warp_drive",
+               PYTHONPATH=os.pathsep.join(sys.path))
+    proc = subprocess.run(
+        [sys.executable, "-c", "import repro.kernels.config"],
+        env=env, capture_output=True, text=True)
+    assert proc.returncode != 0
+    assert "warp_drive" in proc.stderr and "jnp" in proc.stderr
+
+    importlib.reload(config)          # leave a clean module behind

@@ -1,0 +1,340 @@
+"""The failure-pattern subsystem: bounded hashed Δ store (insert/probe
+lanes, counter-guided eviction, soundness under any capacity) and the
+cross-query template cache (canonicalization, μ == 0 filtering,
+warm-start end to end)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.backtrack import backtrack_deadend
+from repro.core.distributed import DistributedMatcher
+from repro.core.engine_step import read_store_slot
+from repro.core.vectorized import WaveScheduler, match_vectorized
+from repro.data.graph_gen import (corridor_graph, er_labeled_graph,
+                                  random_walk_query, trap_graph)
+from repro.patterns.cache import PatternCache
+from repro.patterns.store import (PROBE, PatternStoreBank, empty_entries,
+                                  entries_to_store, hash_insert,
+                                  hash_probe, store_to_entries)
+
+
+def embset(embs):
+    return set(frozenset(enumerate(e.tolist())) for e in embs)
+
+
+def _insert(bank, entries, slot=0):
+    """Insert a list of (pos, v, phi, mu) tuples one batch at a time."""
+    n = len(entries)
+    arr = np.asarray(entries, np.int32)
+    return hash_insert(
+        bank, jnp.full((n,), slot, jnp.int32),
+        jnp.asarray(arr[:, 0]), jnp.asarray(arr[:, 1]),
+        jnp.asarray(arr[:, 2]), jnp.asarray(arr[:, 3]),
+        jnp.zeros((n, 2), jnp.uint32), jnp.ones((n,), bool))
+
+
+# ------------------------------------------------------------ store unit
+def test_hash_store_roundtrip():
+    """Inserted patterns probe back exactly; absent keys miss."""
+    bank = PatternStoreBank.empty(2, 64)
+    pats = [(d, v, 100 * d + v, d % 3) for d in range(5)
+            for v in range(7)]
+    bank, counters = _insert(bank, pats, slot=1)
+    assert int(counters.stored.sum()) == len(pats)
+    assert int(counters.evictions.sum()) == 0
+    kp = jnp.asarray([p[0] for p in pats], jnp.int32)
+    kv = jnp.asarray([p[1] for p in pats], jnp.int32)
+    sl = jnp.ones((len(pats),), jnp.int32)
+    found, phi, mu, _, _ = hash_probe(bank, sl, kp, kv)
+    assert bool(found.all())
+    np.testing.assert_array_equal(np.asarray(phi),
+                                  [p[2] for p in pats])
+    np.testing.assert_array_equal(np.asarray(mu), [p[3] for p in pats])
+    # the other slot must be empty (slot-private stores)
+    found0, *_ = hash_probe(bank, jnp.zeros_like(sl), kp, kv)
+    assert not bool(found0.any())
+    # absent keys miss
+    missing, *_ = hash_probe(bank, sl, kp + 40, kv)
+    assert not bool(missing.any())
+
+
+def test_hash_store_same_key_overwrites():
+    bank = PatternStoreBank.empty(1, 32)
+    bank, c1 = _insert(bank, [(2, 5, 11, 1)])
+    bank, c2 = _insert(bank, [(2, 5, 99, 0)])
+    assert int(c2.overwrites.sum()) == 1
+    found, phi, mu, _, _ = hash_probe(
+        bank, jnp.zeros((1,), jnp.int32),
+        jnp.asarray([2], jnp.int32), jnp.asarray([5], jnp.int32))
+    assert bool(found[0]) and int(phi[0]) == 99 and int(mu[0]) == 0
+    assert int(np.asarray(bank.valid).sum()) == 1
+
+
+def test_hash_store_same_key_within_one_batch():
+    """Two same-key entries in ONE batch must collapse to a single
+    stored entry with the LAST value (the dense scatter's last-write-
+    wins) — the megastep in-loop store batches are not host-deduped, so
+    the device insert must key its in-batch dedup by the pattern key."""
+    bank = PatternStoreBank.empty(1, 32)
+    bank, c = _insert(bank, [(2, 5, 111, 0), (3, 9, 7, 0), (2, 5, 222, 0)])
+    assert int(np.asarray(bank.valid).sum()) == 2     # no duplicate key
+    found, phi, _, _, _ = hash_probe(
+        bank, jnp.zeros((1,), jnp.int32),
+        jnp.asarray([2], jnp.int32), jnp.asarray([5], jnp.int32))
+    assert bool(found[0]) and int(phi[0]) == 222      # last write won
+    assert int(c.stored.sum()) == 2
+    assert int(c.dropped.sum()) == 0
+
+
+def test_hash_store_counter_guided_eviction():
+    """capacity == PROBE makes the whole store one probe window: once
+    full, the entry with the fewest hits is the one displaced."""
+    bank = PatternStoreBank.empty(1, PROBE)
+    pats = [(1, v, v, 0) for v in range(PROBE)]
+    bank, _ = _insert(bank, pats)
+    # bump hits of every entry except v == 3 (the designated victim)
+    hot = [(1, v) for v in range(PROBE) if v != 3]
+    kp = jnp.asarray([p for p, _ in hot], jnp.int32)
+    kv = jnp.asarray([v for _, v in hot], jnp.int32)
+    for _ in range(3):
+        _, _, _, _, idx = hash_probe(bank, jnp.zeros_like(kp), kp, kv)
+        bank = bank._replace(
+            hits=bank.hits.at[jnp.zeros_like(idx), idx].add(1))
+    bank, c = _insert(bank, [(2, 7, 42, 0)])
+    assert int(c.evictions.sum()) == 1
+    found3, *_ = hash_probe(bank, jnp.zeros((1,), jnp.int32),
+                            jnp.asarray([1], jnp.int32),
+                            jnp.asarray([3], jnp.int32))
+    assert not bool(found3[0])          # cold entry evicted
+    foundn, *_ = hash_probe(bank, jnp.zeros((1,), jnp.int32),
+                            jnp.asarray([2], jnp.int32),
+                            jnp.asarray([7], jnp.int32))
+    assert bool(foundn[0])              # newcomer present
+    # all hot entries survived
+    fh, *_ = hash_probe(bank, jnp.zeros_like(kp), kp, kv)
+    assert bool(fh.all())
+
+
+def test_store_entries_roundtrip_any_capacity():
+    """entries form is layout-independent: snapshot under one capacity,
+    rebuild under another, contents identical."""
+    bank = PatternStoreBank.empty(1, 256)
+    pats = [(d, v, d * 31 + v, d % 2) for d in range(6) for v in range(5)]
+    bank, _ = _insert(bank, pats)
+    entries = store_to_entries(read_store_slot(bank, 0))
+    assert len(entries["pos"]) == len(pats)
+    rebuilt = entries_to_store(entries, 64)
+    back = store_to_entries(rebuilt)
+    for k in ("pos", "v", "phi", "mu", "mask"):
+        np.testing.assert_array_equal(entries[k], back[k])
+    with pytest.raises(ValueError):
+        entries_to_store(entries, 48)       # not a power of two
+
+
+def test_capacity_validation():
+    with pytest.raises(ValueError):
+        PatternStoreBank.empty(1, 100)
+    with pytest.raises(ValueError):
+        PatternStoreBank.empty(1, 4)        # < PROBE
+
+
+# --------------------------------------------- soundness under eviction
+@pytest.mark.parametrize("capacity", [8, 32])
+def test_tiny_capacity_oracle_equality_trap(capacity):
+    """Eviction changes prune counts, never the embedding set."""
+    query, data = trap_graph(n_b=30, n_c=30, n_good=2, tail_len=2, seed=0)
+    ref = backtrack_deadend(query, data, limit=None)
+    small = match_vectorized(query, data, limit=None, wave_size=32,
+                             kpr=4, pattern_capacity=capacity)
+    big = match_vectorized(query, data, limit=None, wave_size=32,
+                           kpr=4, pattern_capacity=4096)
+    assert embset(small.embeddings) == embset(ref.embeddings)
+    assert embset(big.embeddings) == embset(ref.embeddings)
+    # the bounded store under pressure loses pruning, not correctness
+    assert small.stats.deadend_prunes <= big.stats.deadend_prunes
+    ts = small.stats.table_stats
+    assert ts.capacity == capacity and ts.occupancy <= capacity
+
+
+def test_tiny_capacity_oracle_equality_megastep():
+    query, data = trap_graph(n_b=20, n_c=20, n_good=2, tail_len=2, seed=1)
+    ref = backtrack_deadend(query, data, limit=None)
+    sched = WaveScheduler(data, n_slots=2, wave_size=16, kpr=4,
+                          megastep_depth=4, adaptive_prune_threshold=2.0,
+                          pattern_capacity=16)
+    qid = sched.submit(query, limit=None)
+    sched.run()
+    res = sched.finished.pop(qid)
+    assert embset(res.embeddings) == embset(ref.embeddings)
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+def test_tiny_capacity_oracle_equality_distributed(n_shards):
+    query, data = trap_graph(n_b=25, n_c=25, n_good=2, tail_len=2, seed=0)
+    ref = backtrack_deadend(query, data, limit=None)
+    dm = DistributedMatcher(data, n_shards=n_shards, wave_size=32,
+                            kpr=4, pattern_capacity=16)
+    res = dm.match(query, limit=None)
+    assert embset(res.embeddings) == embset(ref.embeddings)
+
+
+def test_property_tiny_capacity_equals_oracle():
+    """Hypothesis property (companion to tests/test_deadend.py): random
+    graphs + queries stay oracle-equal under severe store pressure."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def check(seed):
+        rng = np.random.default_rng(seed)
+        n_d = int(rng.integers(10, 30))
+        data = er_labeled_graph(n_d, int(rng.integers(n_d, 3 * n_d)),
+                                int(rng.integers(1, 4)), seed=seed)
+        try:
+            query = random_walk_query(data, int(rng.integers(2, 6)),
+                                      seed=seed + 1)
+        except RuntimeError:
+            return
+        a = match_vectorized(query, data, limit=None, wave_size=16,
+                             kpr=4, pattern_capacity=8)
+        b = backtrack_deadend(query, data, limit=None)
+        assert embset(a.embeddings) == embset(b.embeddings)
+
+    check()
+
+
+# ------------------------------------------------------- template cache
+def test_cache_fingerprint_distinguishes_templates():
+    cb = np.arange(12, dtype=np.uint32).reshape(3, 4)
+    nm = np.zeros((3, 3), bool)
+    fp = PatternCache.fingerprint(3, cb, nm)
+    assert fp == PatternCache.fingerprint(3, cb.copy(), nm.copy())
+    assert fp != PatternCache.fingerprint(4, cb, nm)
+    cb2 = cb.copy()
+    cb2[0, 0] += 1
+    assert fp != PatternCache.fingerprint(3, cb2, nm)
+
+
+def test_cache_keeps_transferable_entries_only():
+    cache = PatternCache(max_templates=2, top_k=4)
+    entries = empty_entries()
+    entries["pos"] = np.asarray([1, 2, 3, 4, 5, 6], np.int32)
+    entries["v"] = np.asarray([10, 20, 30, 40, 50, 60], np.int32)
+    entries["phi"] = np.zeros(6, np.int32)
+    entries["mu"] = np.asarray([0, 1, 0, 0, 0, 0], np.int32)
+    entries["mask"] = np.zeros(6, np.uint64)
+    entries["hits"] = np.asarray([5, 99, 1, 7, 2, 3], np.int64)
+    n = cache.put(b"fp1", entries)
+    assert n == 4                       # 5 transferable, capped at top_k=4
+    got = cache.get(b"fp1")
+    assert (got["mu"] == 0).all()
+    assert 30 not in got["v"].tolist()  # hits=1 entry ranked out
+    assert cache.get(b"missing") is None
+    # LRU eviction at max_templates
+    cache.put(b"fp2", entries)
+    cache.put(b"fp3", entries)
+    assert len(cache) == 2
+    assert cache.get(b"fp1") is None    # oldest line evicted
+    assert cache.stats.evictions == 1
+
+
+def test_cache_merge_accumulates_hits():
+    cache = PatternCache(top_k=8)
+    e = empty_entries()
+    e["pos"] = np.asarray([1], np.int32)
+    e["v"] = np.asarray([10], np.int32)
+    e["phi"] = np.zeros(1, np.int32)
+    e["mu"] = np.zeros(1, np.int32)
+    e["mask"] = np.zeros(1, np.uint64)
+    e["hits"] = np.asarray([3], np.int64)
+    cache.put(b"fp", e)
+    cache.put(b"fp", e)
+    got = cache.get(b"fp")
+    assert int(got["hits"][0]) == 6
+
+
+# -------------------------------------------------- warm start end to end
+def test_warm_start_prunes_known_deadends():
+    """Resubmitting a template must warm-start from the cache, prune the
+    corridor baits it never pruned cold, and stay oracle-exact."""
+    query, data = corridor_graph(n_bait=24)
+    ref = backtrack_deadend(query, data, limit=None)
+    sched = WaveScheduler(data, n_slots=2, wave_size=32, kpr=4)
+
+    def run():
+        qid = sched.submit(query, limit=None)
+        sched.run()
+        sched.poll()
+        return sched.finished.pop(qid)
+
+    cold, warm = run(), run()
+    assert embset(cold.embeddings) == embset(ref.embeddings)
+    assert embset(warm.embeddings) == embset(ref.embeddings)
+    assert not cold.stats.cache_hit
+    assert warm.stats.cache_hit and warm.stats.warm_patterns > 0
+    assert cold.stats.deadend_prunes == 0       # single root: no reuse
+    assert warm.stats.deadend_prunes >= 24      # every bait pruned
+    assert warm.stats.rows_created < cold.stats.rows_created
+    stats = sched.scheduler_stats()
+    assert stats["warm_started"] == 1
+    assert stats["pattern_cache"]["hits"] == 1
+
+
+def test_warm_start_respects_no_pruning_ablation():
+    """use_pruning=False queries must not be warm-started (their prune
+    counts are pinned to zero by the ablation tests)."""
+    query, data = corridor_graph(n_bait=12)
+    sched = WaveScheduler(data, n_slots=2, wave_size=32, kpr=4)
+    q1 = sched.submit(query, limit=None)
+    sched.run()
+    q2 = sched.submit(query, limit=None, use_pruning=False)
+    sched.run()
+    r1 = sched.finished.pop(q1)
+    r2 = sched.finished.pop(q2)
+    assert embset(r1.embeddings) == embset(r2.embeddings)
+    assert not r2.stats.cache_hit
+    assert r2.stats.deadend_prunes == 0
+
+
+def test_cache_disabled_scheduler():
+    query, data = corridor_graph(n_bait=12)
+    sched = WaveScheduler(data, n_slots=2, wave_size=32, kpr=4,
+                          pattern_cache=False)
+    for _ in range(2):
+        qid = sched.submit(query, limit=None)
+        sched.run()
+        res = sched.finished.pop(qid)
+        assert not res.stats.cache_hit
+    assert sched.scheduler_stats()["pattern_cache"] is None
+
+
+def test_warm_start_under_tiny_capacity_stays_exact():
+    """Seeding more cached patterns than the store can hold drops the
+    coldest — still exact, still warm."""
+    query, data = corridor_graph(n_bait=32)
+    ref = backtrack_deadend(query, data, limit=None)
+    sched = WaveScheduler(data, n_slots=2, wave_size=32, kpr=4,
+                          pattern_capacity=16)
+    for i in range(2):
+        qid = sched.submit(query, limit=None)
+        sched.run()
+        sched.poll()
+        res = sched.finished.pop(qid)
+        assert embset(res.embeddings) == embset(ref.embeddings)
+    assert res.stats.cache_hit
+
+
+def test_hit_aging_under_pressure_stays_exact():
+    """hit_decay_every=1 ages the device counters every scheduling step;
+    combined with a tiny capacity (constant eviction churn) the search
+    must still enumerate exactly the oracle set."""
+    query, data = trap_graph(n_b=25, n_c=25, n_good=2, tail_len=2, seed=0)
+    ref = backtrack_deadend(query, data, limit=None)
+    sched = WaveScheduler(data, n_slots=2, wave_size=32, kpr=4,
+                          pattern_capacity=16, hit_decay_every=1)
+    qid = sched.submit(query, limit=None)
+    sched.run()
+    res = sched.finished.pop(qid)
+    assert embset(res.embeddings) == embset(ref.embeddings)
+    assert sched._last_aged_wave > 0            # aging actually ran
