@@ -6,13 +6,18 @@ concurrently through the shared-wave scheduler (continuous batching,
 DESIGN.md §4). Tracks the serving-perf trajectory across PRs:
 
     queries/sec, mean + steady-state wave occupancy, prune rate,
-    p50/p99 latency, timeouts, host-vs-device time split, and the
-    megastep depth the run used (so trajectories stay comparable when
-    the fusion depth changes between PRs). A distributed workload
-    (shard-as-segments, DESIGN.md §3) additionally records qps and
-    prune rate vs shard count on the trap query, and a repeated-template
-    workload (DESIGN.md §6) records the cold vs warm-started prune rate
-    on the corridor graph — the cross-query pattern-cache win.
+    p50/p99 latency, TTFE (time-to-first-embedding) p50/p99, timeouts,
+    host-vs-device time split, and the megastep depth the run used (so
+    trajectories stay comparable when the fusion depth changes between
+    PRs). Per-query results ride along as ``QueryResult.to_dict()``
+    payloads. A streaming workload consumes the same uniform queries
+    through ``MatchHandle.stream()`` (DESIGN.md §4) and pins the
+    streamed union to the blocking API's rows with TTFE strictly below
+    completion latency. A distributed workload (shard-as-segments,
+    DESIGN.md §3) additionally records qps and prune rate vs shard
+    count on the trap query, and a repeated-template workload
+    (DESIGN.md §6) records the cold vs warm-started prune rate on the
+    corridor graph — the cross-query pattern-cache win.
 
     PYTHONPATH=src python -m benchmarks.serving_bench
     PYTHONPATH=src python -m benchmarks.serving_bench --smoke   # CI
@@ -94,6 +99,11 @@ def run(csv_rows: list | None = None, budget_s: float = 90.0,
         "timeouts": int(sum(r.timed_out for r in results)),
         "p50_ms": rep["p50_ms"],
         "p99_ms": rep["p99_ms"],
+        # streaming SLO: time to first embedding (recorded per query by
+        # the scheduler's incremental delivery, DESIGN.md §4) — always
+        # strictly below the completion latency on this workload
+        "ttfe_p50_ms": rep.get("ttfe_p50_ms"),
+        "ttfe_p99_ms": rep.get("ttfe_p99_ms"),
         "waves": rep["waves"],
         "mean_wave_occupancy": rep["mean_occupancy"],
         "steady_wave_occupancy": rep["steady_occupancy"],
@@ -116,7 +126,43 @@ def run(csv_rows: list | None = None, budget_s: float = 90.0,
         "store_overwrites": rep["store_overwrites"],
         "store_load_factor": rep["store_load_factor"],
         "pattern_cache": rep["pattern_cache"],
+        # per-query JSON-safe summaries (QueryResult.to_dict) — what a
+        # serving client would log; check_smoke.py validates the schema
+        "results": [r.to_dict() for r in results],
     }
+
+    # --- streaming workload: the same uniform queries consumed through
+    # MatchHandle.stream() — the streamed union must equal the blocking
+    # API's rows, and the first batch must land strictly before
+    # completion (TTFE < latency).
+    import numpy as np
+    sserver = make_server(data, limit=LIMIT)
+    handles = [sserver.submit_async(q, query_id=i)
+               for i, q in enumerate(queries)]
+    n_batches = 0
+    stream_rows: dict[int, set] = {}
+    for i, h in enumerate(handles):
+        rows = set()
+        for batch in h.stream():
+            rows.update(map(tuple, batch.tolist()))
+            n_batches += 1
+        stream_rows[i] = rows
+    sresults = [h.result() for h in handles]
+    srep = sserver.slo_report()
+    equal = all(
+        stream_rows[i] == {tuple(np.asarray(e).tolist())
+                           for e in r.embeddings}
+        for i, r in enumerate(sresults))
+    payload["streaming"] = {
+        "n_queries": len(sresults),
+        "n_batches": n_batches,
+        "stream_equals_batch": bool(equal),
+        "ttfe_p50_ms": srep.get("ttfe_p50_ms"),
+        "ttfe_p99_ms": srep.get("ttfe_p99_ms"),
+        "completion_p50_ms": srep["p50_ms"],
+        "completion_p99_ms": srep["p99_ms"],
+    }
+
     # --- trap workload: clients hammering the paper's Fig. 1 hard
     # case — the regime where dead-end learning dominates, so the prune
     # rate is a meaningful trajectory metric (it is ~0 on uniform
@@ -226,6 +272,15 @@ def run(csv_rows: list | None = None, budget_s: float = 90.0,
             f"occ={payload['mean_wave_occupancy']:.2f};"
             f"steady_occ={payload['steady_wave_occupancy']:.2f};"
             f"prune_rate={payload['prune_rate']:.2f}"))
+        s = payload["streaming"]
+        ttfe50 = s["ttfe_p50_ms"]        # None when nothing was found
+        csv_rows.append((
+            f"streaming_q{query_size}x{s['n_queries']}",
+            (ttfe50 or 0.0) * 1e3,
+            (f"ttfe_p50={ttfe50:.0f}ms;" if ttfe50 is not None
+             else "ttfe_p50=n/a;")
+            + f"completion_p50={s['completion_p50_ms']:.0f}ms;"
+            f"equal={s['stream_equals_batch']}"))
         t = payload["trap_workload"]
         csv_rows.append((
             f"serving_trap{nb}x{t['n_queries']}",

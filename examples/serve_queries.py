@@ -1,12 +1,14 @@
 """End-to-end driver (the paper's kind of system = a query engine):
-serve a batched subgraph-matching workload through the shared-wave
-scheduler — many concurrent queries packed into each device wave — with
-SLO + wave-occupancy reporting. One heavy trap query rides the same
-batch with ``parallelism=8`` (shard-as-segments, DESIGN.md §3): its
-root space splits into 8 root segments that share one slot-private Δ
-table and steal work from each other, and the run prints per-shard
-row/item/steal stats. A distributed trap match with full Δ sharing
-closes the demo.
+serve a batched subgraph-matching workload through the request/handle
+API (DESIGN.md §4) — many concurrent queries packed into each device
+wave — with SLO + wave-occupancy + TTFE reporting. One heavy trap
+query rides the same batch with ``parallelism=8`` (shard-as-segments,
+DESIGN.md §3): its root space splits into 8 root segments that share
+one slot-private Δ table and steal work from each other, and the run
+prints per-shard row/item/steal stats. A streaming demo consumes a
+trap query through ``MatchHandle.stream()`` (first embeddings long
+before completion) and cancels a second submission mid-flight; a
+distributed trap match with full Δ sharing closes the demo.
 
     PYTHONPATH=src python examples/serve_queries.py [--n-queries 50]
 """
@@ -111,6 +113,30 @@ def main():
               f"rows {hs.shard_rows} (occupancy {occ}) "
               f"items {hs.shard_items}")
     print(_baseline_delta(rep, len(results), wall))
+
+    # streaming + cancellation (request/handle API, DESIGN.md §4): the
+    # trap query keeps emitting embeddings while its dead-end subtrees
+    # are still resolving, so the first streamed batch lands well
+    # before retirement; a second submission is cancelled mid-flight
+    # without touching its neighbors.
+    tq, tg = trap_graph(n_b=60, n_c=60, n_good=2, tail_len=2)
+    sserver = QueryServer(tg, backend="engine", limit=None, n_slots=4,
+                          wave_size=128, kpr=8)
+    handle = sserver.submit_async(tq, limit=None)
+    n_rows = n_batches = 0
+    for batch in handle.stream():           # [k, n_query] int32 batches
+        n_rows += len(batch)
+        n_batches += 1
+    res = handle.result()
+    print(f"\nstreamed trap query: {n_rows} embeddings over "
+          f"{n_batches} batches; TTFE {res.ttfe_s * 1e3:.0f}ms vs "
+          f"completion {res.latency_s * 1e3:.0f}ms ({res.status})")
+    doomed = sserver.submit_async(tq, limit=None)
+    for batch in doomed.stream():
+        doomed.cancel()                     # evict after the first batch
+    dres = doomed.result()
+    print(f"cancelled mid-flight: status={dres.status}, kept "
+          f"{dres.n_found} partial embeddings")
 
     # distributed matching of one hard query: shard-as-segments with
     # full Δ sharing (every mu learned by one shard prunes the others)

@@ -2,10 +2,18 @@
 summary (wired into scripts/ci.sh — the smoke run used to be piped to
 /dev/null, which let metric regressions ship silently).
 
-Reads the JSON payload from stdin, checks the expected top-level keys
-(including the pattern-store / pattern-cache metrics), and checks the
-repeated-template workload actually demonstrates the warm-start win
-(warm prune rate above cold).
+Reads the JSON payload from stdin and checks:
+
+* the expected top-level keys (pattern-store / pattern-cache metrics,
+  TTFE percentiles);
+* the per-query ``results`` entries — ``QueryResult.to_dict()``
+  payloads consumed by schema (typed status, builtin scalars), not by
+  ad-hoc key picking;
+* the streaming workload: the streamed union equals the blocking API's
+  rows, and TTFE is *strictly* below full-completion latency on the
+  uniform workload (embeddings really are delivered mid-flight);
+* the repeated-template workload actually demonstrates the warm-start
+  win (warm prune rate above cold).
 """
 import json
 import sys
@@ -15,6 +23,8 @@ REQUIRED = [
     "waves", "mean_wave_occupancy", "steady_wave_occupancy", "prune_rate",
     "megastep_depth", "dispatch_time_s", "device_sync_time_s",
     "host_time_s",
+    # streaming serving API (DESIGN.md §4)
+    "ttfe_p50_ms", "ttfe_p99_ms", "results", "streaming",
     # bounded hashed Δ store + cross-query template cache
     "pattern_capacity", "store_evictions", "store_overwrites",
     "store_load_factor", "pattern_cache",
@@ -24,6 +34,33 @@ REQUIRED_TEMPLATE = [
     "n_bait", "n_repeats", "cold_prune_rate", "warm_prune_rate",
     "cold_rows", "warm_rows_per_query", "warm_started", "cache",
 ]
+# QueryResult.to_dict() schema: key -> allowed types (None allowed for
+# ttfe_ms — a query that found nothing has no first embedding)
+RESULT_SCHEMA = {
+    "query_id": (int,), "status": (str,), "n_found": (int,),
+    "recursions": (int,), "latency_ms": (float,),
+    "ttfe_ms": (float, type(None)), "timed_out": (bool,),
+    "aborted": (bool,),
+}
+STATUSES = ("ok", "limit", "timeout", "cancelled")
+
+
+def _check_result_dicts(results) -> str | None:
+    if not isinstance(results, list) or not results:
+        return "results must be a non-empty list of QueryResult dicts"
+    for r in results:
+        for key, types in RESULT_SCHEMA.items():
+            if key not in r:
+                return f"result {r.get('query_id')}: missing {key!r}"
+            if not isinstance(r[key], types):
+                return (f"result {r.get('query_id')}: {key}="
+                        f"{r[key]!r} is not JSON-safe {types}")
+        if r["status"] not in STATUSES:
+            return f"result {r.get('query_id')}: bad status {r['status']!r}"
+        if r["timed_out"] != (r["status"] == "timeout"):
+            return (f"result {r.get('query_id')}: timed_out inconsistent "
+                    f"with status {r['status']!r}")
+    return None
 
 
 def main() -> int:
@@ -31,6 +68,30 @@ def main() -> int:
     missing = [k for k in REQUIRED if k not in payload]
     if missing:
         print(f"smoke payload missing keys: {missing}", file=sys.stderr)
+        return 1
+    err = _check_result_dicts(payload["results"])
+    if err:
+        print(f"results payload invalid: {err}", file=sys.stderr)
+        return 1
+    # streaming assertions: union pinned to the blocking API, and TTFE
+    # strictly below completion latency (uniform workload) — i.e. the
+    # stream genuinely yields before the query retires
+    st = payload["streaming"]
+    if not st.get("stream_equals_batch"):
+        print("streaming regression: streamed union != blocking "
+              "embedding set", file=sys.stderr)
+        return 1
+    if st["ttfe_p50_ms"] is None \
+            or not st["ttfe_p50_ms"] < st["completion_p50_ms"]:
+        print("streaming regression: ttfe_p50 "
+              f"{st['ttfe_p50_ms']} !< completion_p50 "
+              f"{st['completion_p50_ms']}", file=sys.stderr)
+        return 1
+    if payload["ttfe_p50_ms"] is None \
+            or not payload["ttfe_p50_ms"] < payload["p50_ms"]:
+        print("streaming regression: uniform ttfe_p50 "
+              f"{payload['ttfe_p50_ms']} !< p50 {payload['p50_ms']}",
+              file=sys.stderr)
         return 1
     rt = payload["repeated_template_workload"]
     missing = [k for k in REQUIRED_TEMPLATE if k not in rt]
@@ -51,6 +112,9 @@ def main() -> int:
     print("serving_bench --smoke: OK "
           f"(qps={payload['queries_per_sec']:.1f}, "
           f"prune_rate={payload['prune_rate']:.2f}, "
+          f"ttfe_p50={payload['ttfe_p50_ms']:.0f}ms vs "
+          f"p50={payload['p50_ms']:.0f}ms, "
+          f"stream_equals_batch={st['stream_equals_batch']}, "
           f"warm_prune={rt['warm_prune_rate']:.2f} vs "
           f"cold={rt['cold_prune_rate']:.2f}, "
           f"warm_started={rt['warm_started']}, "

@@ -19,9 +19,12 @@ python -m pytest -x -q
 # shard-as-segments / elastic-restore coverage)
 python -m pytest tests/test_distributed.py -q
 # tiny-size serving benchmark smoke run: exercises the megastep + async
-# pipeline, the distributed shard-as-segments workload, and the
-# repeated-template pattern-cache workload end to end (does not touch
-# the committed BENCH_serving.json). check_smoke.py asserts the payload
-# keys — incl. the pattern-store/cache metrics and that warm-started
-# queries out-prune cold ones — and prints a one-line summary.
+# pipeline, the request/handle streaming API, the distributed
+# shard-as-segments workload, and the repeated-template pattern-cache
+# workload end to end (does not touch the committed BENCH_serving.json).
+# check_smoke.py asserts the payload — the QueryResult.to_dict schema,
+# the streaming workload (streamed union == blocking rows, TTFE
+# strictly < completion latency on the uniform workload), the
+# pattern-store/cache metrics, and that warm-started queries out-prune
+# cold ones — and prints a one-line summary.
 python -m benchmarks.serving_bench --smoke | python scripts/check_smoke.py

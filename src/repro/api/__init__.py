@@ -1,0 +1,42 @@
+"""Public request/handle API for subgraph matching (DESIGN.md §4).
+
+    from repro.api import MatchOptions, MatchSession
+
+    session = MatchSession(data_graph, n_slots=16)
+    handle = session.submit(query, limit=None)       # non-blocking
+    for batch in handle.stream():                    # [k, n_query] int32
+        ...                                          # before completion
+    result = handle.result()                         # QueryResult
+    handle.cancel()                                  # typed eviction
+
+``MatchOptions`` is the single source of truth for every per-query and
+per-engine knob; ``QueueFull`` is the typed backpressure signal from
+the bounded admission queue.
+
+Submodule note: ``options``/``handle`` are leaf modules imported
+eagerly; ``MatchSession`` and ``QueueFull`` resolve lazily because the
+core scheduler itself consumes ``api.options`` (PEP 562 keeps the
+package importable from either direction).
+"""
+from .handle import MatchHandle, QueryResult, Status, status_of
+from .options import MatchOptions, MatchRequest
+
+__all__ = [
+    "MatchHandle", "MatchOptions", "MatchRequest", "MatchSession",
+    "QueryResult", "QueueFull", "Status", "status_of",
+]
+
+_LAZY = {
+    "MatchSession": ("repro.api.session", "MatchSession"),
+    "QueueFull": ("repro.core.vectorized", "QueueFull"),
+}
+
+
+def __getattr__(name: str):
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+    import importlib
+    return getattr(importlib.import_module(mod_name), attr)

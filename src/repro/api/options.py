@@ -1,0 +1,145 @@
+"""The single source of truth for every matching knob (DESIGN.md §4).
+
+Before this module existed the engine/budget knobs (``limit``,
+``time_budget_s``, ``max_recursions``, ``parallelism``, ``wave_size``,
+``megastep_depth``, ``pattern_*``, …) were duplicated with drifting
+defaults across four kwarg surfaces: ``QueryServer``,
+``WaveScheduler.submit``, ``DistributedMatcher`` and ``WaveEngine``.
+:class:`MatchOptions` collapses them into one dataclass, validated in
+one place; every entry point resolves its keyword arguments through
+:meth:`MatchOptions.resolve` so a default changed here changes
+everywhere (asserted by ``tests/test_api.py``).
+
+This module is deliberately leaf-level: it imports nothing from
+``repro.core`` so the core scheduler can consume it without an import
+cycle.
+
+Two kinds of field share the dataclass because requests and engines
+share a vocabulary:
+
+* **per-query** fields travel on a :class:`MatchRequest` and may differ
+  between concurrent queries (``limit``, ``time_budget_s``,
+  ``max_recursions``, ``use_pruning``, ``parallelism``, ``priority``,
+  ``seed_patterns``, ``keep_table``);
+* **per-engine** fields are consumed once at scheduler construction
+  (``n_slots``, ``wave_size``, ``kpr``, ``megastep_depth``,
+  ``max_queue``, ``store_*``, ``adaptive_prune_threshold``,
+  ``pattern_*``, ``hit_decay_every``) and ignored on a request.
+
+An engine built from a ``MatchOptions`` also uses it as the *default*
+per-query options for requests that do not override them — so a server
+constructed with ``limit=100`` serves every query with that cap unless
+the request says otherwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Any
+
+if TYPE_CHECKING:                                    # pragma: no cover
+    from ..core.graph import Graph
+
+__all__ = ["MatchOptions", "MatchRequest"]
+
+# accepted spellings of historical kwargs -> canonical field
+_ALIASES = {"max_rows": "max_recursions"}
+
+
+@dataclasses.dataclass(frozen=True)
+class MatchOptions:
+    """Every per-query and per-engine matching knob, with the one
+    canonical default per knob. Frozen: derive variants with
+    :meth:`replace` / :meth:`resolve`."""
+
+    # ---- per-query ----------------------------------------------------
+    limit: int | None = 1000          # result cap (None = enumerate all)
+    time_budget_s: float | None = None   # wall-clock budget
+    max_recursions: int | None = None    # recursion/row budget
+    use_pruning: bool | None = None      # None = engine default (True)
+    parallelism: int = 1              # intra-query shards (DESIGN.md §3)
+    priority: int = 0                 # admission priority (higher first)
+    keep_table: bool = False          # export the learned Δ on finish
+    seed_patterns: dict | None = None  # entries dict to warm-start Δ
+
+    # ---- per-engine (consumed at scheduler construction) --------------
+    n_slots: int = 8
+    wave_size: int = 512
+    kpr: int = 16
+    megastep_depth: int = 6
+    max_queue: int = 4096
+    store_flush_min: int = 16
+    store_pad: int = 256
+    adaptive_prune_threshold: float = 0.05
+    pattern_capacity: int = 4096
+    pattern_cache: bool = True
+    pattern_cache_templates: int = 64
+    pattern_cache_top_k: int = 512
+    hit_decay_every: int = 256
+
+    # ------------------------------------------------------------------
+    def validate(self) -> "MatchOptions":
+        """Raise ``ValueError`` on an inconsistent knob; returns self."""
+        def _nonneg(name: str, v, allow_none: bool = True) -> None:
+            if v is None:
+                if not allow_none:
+                    raise ValueError(f"{name} may not be None")
+                return
+            if v < 0:
+                raise ValueError(f"{name} must be >= 0, got {v!r}")
+
+        _nonneg("limit", self.limit)
+        _nonneg("time_budget_s", self.time_budget_s)
+        _nonneg("max_recursions", self.max_recursions)
+        if self.parallelism < 1:
+            raise ValueError(
+                f"parallelism must be >= 1, got {self.parallelism!r}")
+        for name in ("n_slots", "wave_size", "kpr", "megastep_depth",
+                     "max_queue", "store_pad", "pattern_capacity",
+                     "hit_decay_every"):
+            if getattr(self, name) < 1:
+                raise ValueError(
+                    f"{name} must be >= 1, got {getattr(self, name)!r}")
+        if self.pattern_capacity & (self.pattern_capacity - 1):
+            raise ValueError("pattern_capacity must be a power of two, "
+                             f"got {self.pattern_capacity!r}")
+        return self
+
+    def replace(self, **overrides: Any) -> "MatchOptions":
+        """``dataclasses.replace`` with alias normalization + validation."""
+        return MatchOptions.resolve(self, **overrides)
+
+    @staticmethod
+    def resolve(base: "MatchOptions | None" = None,
+                **overrides: Any) -> "MatchOptions":
+        """The one resolution path every entry point funnels through.
+
+        ``base`` supplies defaults (``None`` = the canonical
+        ``MatchOptions()``); ``overrides`` are explicitly-passed kwargs
+        — *presence* marks an override, so ``limit=None`` genuinely
+        overrides a numeric default. Unknown keys raise ``TypeError``
+        (the historical ``max_rows`` spelling is folded into
+        ``max_recursions``)."""
+        kw = {}
+        for k, v in overrides.items():
+            kw[_ALIASES.get(k, k)] = v
+        opts = base if base is not None else MatchOptions()
+        if kw:
+            opts = dataclasses.replace(opts, **kw)
+        return opts.validate()
+
+
+@dataclasses.dataclass
+class MatchRequest:
+    """One query plus its resolved options — the unit the request/handle
+    API submits. ``request_id`` is the caller-visible id (defaults to
+    the scheduler-assigned query id); ``cand``/``order`` optionally pin
+    the candidate sets / matching order (oracle tests, shard restriction
+    in ``core.distributed``)."""
+    query: "Graph"
+    options: MatchOptions
+    request_id: int | None = None
+    cand: list | None = None
+    order: Any | None = None
+
+    def __post_init__(self) -> None:
+        self.options.validate()

@@ -46,10 +46,14 @@ class SearchStats:
     empty_candidate_fails: int = 0
     aborted: bool = False
     # why the search stopped early: None (ran to completion), "limit"
-    # (result cap reached), "recursions"/"rows" (recursion budget), or
-    # "time" (wall-clock budget). Serving layers map this to a status.
+    # (result cap reached), "recursions"/"rows" (recursion budget),
+    # "time" (wall-clock budget), or "cancelled" (evicted by
+    # MatchHandle.cancel). Serving layers map this to a status.
     abort_reason: str | None = None
     wall_time_s: float = 0.0
+    # time from search start to the first emitted embedding (None when
+    # nothing was found) — the serving layer's TTFE metric
+    ttfe_s: float | None = None
     table_stats: object | None = None
 
 
@@ -159,13 +163,22 @@ def backtrack_deadend(query: Graph, data: Graph,
                       max_recursions: int | None = None,
                       time_budget_s: float | None = None,
                       table_cls: Callable = NumericDeadEndTable,
-                      use_pruning: bool = True) -> MatchResult:
+                      use_pruning: bool = True,
+                      on_embedding: Callable | None = None,
+                      should_abort: Callable | None = None) -> MatchResult:
     """Algorithm 2: backtracking with dead-end pattern learning + pruning.
 
     ``use_pruning=False`` keeps pattern extraction/recording but skips the
     match/prune step (the paper's 'No pruning' comparison, §5.2).
     ``table_cls`` selects the numeric (paper, O(1)) or set-based
     (reference-semantics) table.
+
+    ``on_embedding`` — called with each embedding (int32 [n_query]) as
+    it is found, before the search continues: the sequential backend's
+    incremental-delivery hook for ``MatchHandle.stream()``.
+    ``should_abort`` — polled at every embedding and periodically
+    between recursions; returning True stops the search with
+    ``abort_reason == "cancelled"`` (partial results are kept).
     """
     t0 = time.perf_counter()
     cand_by_pos, order, pos_of, nbr_pos = _prepare(query, data, cand, order)
@@ -197,14 +210,26 @@ def backtrack_deadend(query: Graph, data: Graph,
             stats.aborted = True
             stats.abort_reason = "time"
             return None
+        if should_abort is not None and stats.recursions % 1024 == 0 \
+                and should_abort():
+            stats.aborted = True
+            stats.abort_reason = "cancelled"
+            return None
         if depth == n:
             emb = np.empty(n, dtype=np.int32)
             emb[order] = mapping_arr
             embeddings.append(emb)
             stats.found += 1
+            if stats.ttfe_s is None:
+                stats.ttfe_s = time.perf_counter() - t0
+            if on_embedding is not None:
+                on_embedding(emb)
             if limit is not None and stats.found >= limit:
                 stats.aborted = True
                 stats.abort_reason = "limit"
+            elif should_abort is not None and should_abort():
+                stats.aborted = True
+                stats.abort_reason = "cancelled"
             return None
         # ---- Case 1: empty candidate set (Lemma 1) ----------------------
         for d in range(depth, n):

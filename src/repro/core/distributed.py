@@ -46,6 +46,7 @@ import pathlib
 
 import numpy as np
 
+from ..api.options import MatchOptions
 from ..patterns.store import ENTRY_KEYS, select_entries
 from .backtrack import MatchResult, _prepare
 from .graph import Graph
@@ -110,17 +111,22 @@ class Checkpoint:
 
 class DistributedMatcher:
     """Search-tree-partitioned matching as a thin front-end over the
-    shared-wave scheduler (shard-as-segments)."""
+    request/handle API (shard-as-segments): :meth:`submit` returns a
+    non-blocking :class:`~repro.api.MatchHandle` whose ``stream()``
+    yields embedding batches as the shards' waves emit them;
+    :meth:`match` is the blocking wrapper that adds checkpointing."""
 
     def __init__(self, data: Graph, n_shards: int = 4,
-                 wave_size: int = 256, kpr: int = 16,
                  share_patterns: bool = True,
                  share_top_k: int = 4096,
-                 megastep_depth: int = 6,
-                 adaptive_prune_threshold: float = 0.05,
                  checkpoint_every_waves: int = 8,
-                 pattern_capacity: int = 4096,
-                 pattern_cache: bool = True):
+                 options: MatchOptions | None = None, **knobs):
+        """Engine knobs (``wave_size``, ``kpr``, ``megastep_depth``,
+        ``adaptive_prune_threshold``, ``pattern_capacity``,
+        ``pattern_cache``, …) resolve through
+        :class:`repro.api.MatchOptions` — the shared surface with the
+        scheduler and the server."""
+        from ..api.session import MatchSession   # deferred: layering
         self.data = data
         self.n_shards = int(n_shards)
         self.share_patterns = share_patterns
@@ -129,13 +135,30 @@ class DistributedMatcher:
         # shared mode: ONE resident query whose n_shards root segments
         # share one slot-private Δ store. Ablation mode: one isolated
         # scheduler query (own slot, own store) per shard.
-        self.scheduler = WaveScheduler(
-            data, n_slots=(1 if share_patterns else self.n_shards),
-            wave_size=wave_size, kpr=kpr, megastep_depth=megastep_depth,
-            adaptive_prune_threshold=adaptive_prune_threshold,
-            pattern_capacity=pattern_capacity,
-            pattern_cache=pattern_cache)
+        opts = MatchOptions.resolve(options, **knobs).replace(
+            n_slots=(1 if share_patterns else self.n_shards))
+        self._session = MatchSession(data, options=opts)
+        self.scheduler = self._session.scheduler
         self._entries: dict | None = None     # last match's Δ snapshot
+
+    # -- non-blocking entry -------------------------------------------------
+    def submit(self, query: Graph, *,
+               options: MatchOptions | None = None,
+               cand: list | None = None, order=None, **overrides):
+        """Submit one query as ``n_shards`` intra-query shards; returns
+        a :class:`~repro.api.MatchHandle` immediately. The handle's
+        ``stream()`` yields embedding batches as the shards find them
+        (all shards share one slot-private Δ), ``cancel()`` evicts the
+        whole sharded query. Requires ``share_patterns=True`` (the
+        isolated-shard ablation has no single resident query to hand
+        back)."""
+        if not self.share_patterns:
+            raise ValueError(
+                "submit() requires share_patterns=True (the isolated-"
+                "shard ablation runs one scheduler query per shard)")
+        return self._session.submit(
+            query, options=options, cand=cand, order=order,
+            parallelism=self.n_shards, keep_table=True, **overrides)
 
     # -- main entry ---------------------------------------------------------
     def match(self, query: Graph, limit: int | None = 1000,
@@ -187,29 +210,26 @@ class DistributedMatcher:
             return self._merge_result(prior_embs, res.embeddings,
                                       res.stats, limit)
 
-        sched = self.scheduler
         seed_patterns = (prior.entries if prior is not None else None)
-        qid = sched.submit(query, limit=run_limit, cand=sub_cand,
-                           order=order, parallelism=self.n_shards,
-                           max_rows=max_rows, seed_patterns=seed_patterns,
-                           keep_table=True)
+        h = self.submit(query, limit=run_limit, cand=sub_cand,
+                        order=order, max_rows=max_rows,
+                        seed_patterns=seed_patterns)
         waves = 0
-        while sched.step():
+        while self._session.step():
             waves += 1
             if (checkpoint_dir is not None
                     and waves % self.checkpoint_every_waves == 0):
-                ck = self._snapshot(qid, prior_embs)
+                ck = self._snapshot(h.query_id, prior_embs)
                 if ck is not None:
                     self.save_state(checkpoint_dir, ck)
-        res = sched.finished.pop(qid)
-        sched.poll()
-        self._entries = sched.tables.pop(qid, None)
-        out = self._merge_result(prior_embs, res.embeddings, res.stats,
+        qr = h.result()
+        self._entries = self.scheduler.tables.pop(h.query_id, None)
+        out = self._merge_result(prior_embs, qr.embeddings, qr.stats,
                                  limit)
         # final snapshot only on clean completion: an aborted run's
         # segments are already evicted, so the last periodic snapshot
         # (still on disk) is the correct restore point.
-        if checkpoint_dir is not None and not res.stats.aborted:
+        if checkpoint_dir is not None and not qr.stats.aborted:
             self.save_state(checkpoint_dir, Checkpoint(
                 version=CHECKPOINT_VERSION,
                 pending_roots=np.zeros(0, np.int32),

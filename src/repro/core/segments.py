@@ -151,6 +151,12 @@ class QueryState:
         # canonical template fingerprint (patterns.cache) — set at
         # admission so retirement can snapshot under the same key
         self.fingerprint: bytes | None = None
+        # streamed-embedding delivery (DESIGN.md §4): the scheduler
+        # pushes each newly found batch to ``emb_sink`` as the emitting
+        # wave's digest is processed — not at retirement —
+        # ``emb_delivered`` is the cursor into ``self.embeddings``.
+        self.emb_sink = None
+        self.emb_delivered = 0
         self.store_buf: list[tuple[int, int, int, int, np.uint64]] = []
         self.status = "running"         # "running" | "done"
         self.abort_reason: str | None = None  # "limit" | "rows" | "time"

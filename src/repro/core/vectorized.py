@@ -49,9 +49,18 @@ learner snapshots its hot transferable patterns and an admission of an
 identical template warm-starts from them. Matching is exact for any
 schedule, capacity, or seed because stored patterns are true dead-ends.
 
-:class:`WaveEngine` is the single-query facade (one slot) kept for the
-sequential-style API; the distributed matcher now fronts the scheduler
-directly (shard-as-segments, ``core.distributed``).
+The public face of all of this is the request/handle API of
+:mod:`repro.api` (DESIGN.md §4): a ``MatchSession`` wraps a scheduler,
+``submit()`` is non-blocking and returns a ``MatchHandle`` whose
+``stream()`` consumes the per-query embedding deliveries this module
+pushes out of ``_retire_mega``/``_process_wave`` (``_deliver``), and
+``cancel()`` rides :meth:`WaveScheduler.cancel` onto the existing
+eviction path. Every knob resolves through ``repro.api.MatchOptions``
+— the single default surface shared with the server and the
+distributed matcher. :class:`WaveEngine` is the single-query blocking
+facade (one slot) kept for the sequential-style API; the distributed
+matcher fronts the same session machinery (shard-as-segments,
+``core.distributed``).
 """
 from __future__ import annotations
 
@@ -62,6 +71,7 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+from ..api.options import MatchOptions
 from ..kernels.config import get_backend
 from ..patterns import (DeadEndStats, PatternCache, PatternStore,
                         PatternStoreBank, age_hits, empty_entries,
@@ -105,6 +115,10 @@ class _Request:
     # not free at web-scale V, so it is only computed when consumed
     fingerprint: bytes | None
     parallelism: int = 1
+    # priority-aware admission: higher admitted first, FIFO within a tie
+    priority: int = 0
+    # streamed-embedding sink (MatchHandle._push); None = no streaming
+    on_embeddings: object | None = None
 
 
 @dataclasses.dataclass
@@ -140,40 +154,42 @@ class WaveScheduler:
     ``store_flush_min`` — single-step path only: host-queued pattern
     stores are batched across waves until this many are pending (the
     megastep path fuses the flush into every dispatch instead).
+
+    Every knob lives on :class:`repro.api.MatchOptions` — pass a
+    resolved ``options`` object or the equivalent keyword overrides;
+    defaults come from ``MatchOptions`` alone (no local copies), and
+    the instance's ``options`` doubles as the default per-query options
+    for :meth:`submit`.
     """
 
-    def __init__(self, data: Graph, n_slots: int = 8, wave_size: int = 512,
-                 kpr: int = 16, use_pruning: bool = True,
-                 max_queue: int = 4096, megastep_depth: int = 6,
-                 store_flush_min: int = 16, store_pad: int = 256,
-                 adaptive_prune_threshold: float = 0.05,
-                 pattern_capacity: int = 4096,
-                 pattern_cache: bool = True,
-                 pattern_cache_templates: int = 64,
-                 pattern_cache_top_k: int = 512,
-                 hit_decay_every: int = 256):
+    def __init__(self, data: Graph, *,
+                 options: MatchOptions | None = None, **knobs):
+        opts = MatchOptions.resolve(options, **knobs)
+        self.options = opts
         self.data = data
-        self.n_slots = int(n_slots)
-        self.wave_size = int(wave_size)
-        self.kpr = int(kpr)
-        self.use_pruning = use_pruning
-        self.max_queue = int(max_queue)
-        self.megastep_depth = int(megastep_depth)
-        self.store_flush_min = int(store_flush_min)
-        self.store_pad = int(store_pad)
+        self.n_slots = int(opts.n_slots)
+        self.wave_size = int(opts.wave_size)
+        self.kpr = int(opts.kpr)
+        self.use_pruning = (True if opts.use_pruning is None
+                            else opts.use_pruning)
+        self.max_queue = int(opts.max_queue)
+        self.megastep_depth = int(opts.megastep_depth)
+        self.store_flush_min = int(opts.store_flush_min)
+        self.store_pad = int(opts.store_pad)
         # bounded hashed Δ store (patterns.store): per-slot capacity is a
         # power of two, independent of the data-graph vertex count.
         # Eviction is counter-guided and always sound; ``hit_decay_every``
         # waves the device hit counters are halved so eviction tracks
         # recent usefulness.
-        self.pattern_capacity = int(pattern_capacity)
-        self.hit_decay_every = int(hit_decay_every)
+        self.pattern_capacity = int(opts.pattern_capacity)
+        self.hit_decay_every = int(opts.hit_decay_every)
         # cross-query template cache (patterns.cache): retiring learners
         # snapshot their hot transferable (μ == 0) patterns; admissions
         # of an identical template warm-start from them.
         self.pattern_cache = (
-            PatternCache(pattern_cache_templates, pattern_cache_top_k)
-            if pattern_cache else None)
+            PatternCache(opts.pattern_cache_templates,
+                         opts.pattern_cache_top_k)
+            if opts.pattern_cache else None)
         # deferred cache snapshots: a retiring learner's slot store is
         # captured as async device slices (no host block on the in-
         # flight pipeline) and folded into the cache only if the same
@@ -197,7 +213,8 @@ class WaveScheduler:
         # the paper's tight store→lookup cadence wins — K-deep
         # speculation would expand rows that fresh patterns could have
         # pruned). Starts at 1.0 = assume prune-heavy until proven easy.
-        self.adaptive_prune_threshold = float(adaptive_prune_threshold)
+        self.adaptive_prune_threshold = float(
+            opts.adaptive_prune_threshold)
         self._prune_ema = 1.0
         # the megastep extracts with a deeper per-row cap than the
         # single-step path: every child beyond the cap forces a
@@ -249,16 +266,19 @@ class WaveScheduler:
     # ------------------------------------------------------------------
     # submission / admission
     # ------------------------------------------------------------------
-    def submit(self, query: Graph, *, limit: int | None = 1000,
+    def submit(self, query: Graph, *,
+               options: MatchOptions | None = None,
                cand: list[np.ndarray] | None = None,
                order: np.ndarray | None = None,
-               max_rows: int | None = None,
-               time_budget_s: float | None = None,
-               use_pruning: bool | None = None,
-               seed_patterns: dict | None = None,
-               keep_table: bool = False,
-               parallelism: int = 1) -> int:
+               on_embeddings=None, **overrides) -> int:
         """Enqueue a query; returns its scheduler query id.
+
+        Per-query knobs (``limit``, ``time_budget_s``,
+        ``max_recursions``/``max_rows``, ``use_pruning``,
+        ``seed_patterns``, ``keep_table``, ``parallelism``,
+        ``priority``) resolve through :class:`repro.api.MatchOptions`
+        with this scheduler's ``options`` as the defaults — pass a full
+        ``options`` object or keyword overrides.
 
         Raises :class:`QueueFull` when the bounded admission queue is at
         capacity — callers apply backpressure or shed load.
@@ -268,6 +288,14 @@ class WaveScheduler:
         root segments with per-shard DFS stacks and work stealing; all
         shards share the query's slot-private Δ table, so every pattern
         (μ > 0 included) one shard learns prunes the others.
+
+        ``priority``: admission order from the bounded queue — higher
+        admitted first, FIFO within a tie.
+
+        ``on_embeddings``: streamed-delivery sink, called with each
+        newly found ``[k, n_query]`` int32 batch as the emitting wave's
+        digest is processed (not at retirement) — the plumbing behind
+        ``MatchHandle.stream()``.
 
         ``seed_patterns``: a pattern *entries* dict (patterns.store) to
         pre-load into the query's slot, hit counters included (cross-host
@@ -280,6 +308,8 @@ class WaveScheduler:
         cross-query template cache (μ == 0 entries only — sound without
         a floor).
         """
+        opts = MatchOptions.resolve(
+            options if options is not None else self.options, **overrides)
         if len(self.queue) >= self.max_queue:
             raise QueueFull(
                 f"admission queue at capacity ({self.max_queue})")
@@ -303,17 +333,20 @@ class WaveScheduler:
                 nbr_mask[d, int(p)] = True
                 bits |= bit_of(int(p))
             qnbr_bits[d] = bits
-        learn = self.use_pruning if use_pruning is None else use_pruning
+        learn = (self.use_pruning if opts.use_pruning is None
+                 else opts.use_pruning)
         cand_packed = pack_bitmap(cand_dense)
         req = _Request(
             query_id=qid, n=n, order=np.asarray(order, np.int32),
             roots=np.asarray(cand_by_pos[0], np.int32),
             cand_bitmap=cand_packed, nbr_mask=nbr_mask,
-            qnbr_bits=qnbr_bits, limit=limit, learn=learn,
-            max_rows=max_rows, time_budget_s=time_budget_s,
-            seed_patterns=seed_patterns, keep_table=keep_table,
+            qnbr_bits=qnbr_bits, limit=opts.limit, learn=learn,
+            max_rows=opts.max_recursions,
+            time_budget_s=opts.time_budget_s,
+            seed_patterns=opts.seed_patterns, keep_table=opts.keep_table,
             t_submit=t_submit, fingerprint=None,
-            parallelism=max(1, int(parallelism)))
+            parallelism=max(1, int(opts.parallelism)),
+            priority=int(opts.priority), on_embeddings=on_embeddings)
         # trivial queries never need a slot (and never touch the cache)
         if len(req.roots) == 0 or n == 1:
             self._finish_trivial(req)
@@ -344,6 +377,10 @@ class WaveScheduler:
             stats.found = len(embeddings)
             stats.recursions = stats.rows_created
         stats.wall_time_s = time.perf_counter() - req.t_submit
+        if embeddings:
+            stats.ttfe_s = stats.wall_time_s
+            if req.on_embeddings is not None:
+                req.on_embeddings(np.stack(embeddings).astype(np.int32))
         self.finished[req.query_id] = MatchResult(embeddings, stats)
         if req.keep_table:
             self.tables[req.query_id] = (req.seed_patterns
@@ -360,12 +397,23 @@ class WaveScheduler:
         with a live prefix id (it simply never matches again)."""
         self.pool.id_counter = max(self.pool.id_counter, int(floor))
 
+    def _pop_admission(self) -> _Request:
+        """Priority-aware pop from the bounded admission queue: the
+        highest-priority request wins, FIFO within a tie (max over
+        ``(priority, -index)``). O(queue) per admission — the queue is
+        host-side and bounded by ``max_queue``."""
+        best = max(range(len(self.queue)),
+                   key=lambda i: (self.queue[i].priority, -i))
+        req = self.queue[best]
+        del self.queue[best]
+        return req
+
     def _admit(self) -> None:
         while self.queue:
             slot = self.pool.free_slot()
             if slot is None:
                 return
-            req = self.queue.popleft()
+            req = self._pop_admission()
             learn = req.learn and self.pool.learning_enabled
             # Δ seed priority: explicit entries (restore / cross-host
             # import) > template-cache warm start (μ == 0 only, sound
@@ -402,6 +450,7 @@ class WaveScheduler:
                            t_submit=req.t_submit,
                            parallelism=req.parallelism)
             q.fingerprint = req.fingerprint
+            q.emb_sink = req.on_embeddings
             q.stats.table_stats = DeadEndStats(
                 capacity=self.pattern_capacity)
             if warm:
@@ -445,9 +494,30 @@ class WaveScheduler:
             self.pool.attach(slot, q)
 
     # ------------------------------------------------------------------
-    # completion / abort
+    # streamed-embedding delivery
+    # ------------------------------------------------------------------
+    def _deliver(self, q: QueryState) -> None:
+        """Push embeddings found since the last delivery to the query's
+        stream sink (and stamp TTFE on the first batch). Called from
+        the digest-processing paths — ``_retire_mega`` and
+        ``_process_wave`` — so consumers see embeddings while the query
+        is still running, and once more from ``_finish`` as a flush."""
+        n = len(q.embeddings)
+        if n == q.emb_delivered:
+            return
+        if q.stats.ttfe_s is None:
+            q.stats.ttfe_s = time.perf_counter() - q.t_submit
+        if q.emb_sink is not None:
+            batch = np.stack(q.embeddings[q.emb_delivered:]).astype(
+                np.int32)
+            q.emb_sink(batch)
+        q.emb_delivered = n
+
+    # ------------------------------------------------------------------
+    # completion / abort / cancellation
     # ------------------------------------------------------------------
     def _finish(self, q: QueryState) -> None:
+        self._deliver(q)
         want_cache = (self.pattern_cache is not None and q.learn
                       and q.fingerprint is not None)
         if (q.keep_table or want_cache) and q.store_buf:
@@ -521,6 +591,32 @@ class WaveScheduler:
         q.stats.abort_reason = reason
         q.abort_reason = reason
         self._finish(q)
+
+    def cancel(self, qid: int) -> bool:
+        """Cancel a submitted query. A queued request is removed before
+        it ever takes a slot; a resident query rides the existing
+        abort/eviction path — its in-flight device rows are dropped at
+        digest time and neighbors sharing its waves are untouched.
+        Partial embeddings are kept (``abort_reason == "cancelled"``).
+        Returns False when the query already finished."""
+        if qid in self.finished:
+            return False
+        for i, req in enumerate(self.queue):
+            if req.query_id == qid:
+                del self.queue[i]
+                stats = EngineStats()
+                stats.aborted = True
+                stats.abort_reason = "cancelled"
+                stats.table_stats = None
+                stats.wall_time_s = time.perf_counter() - req.t_submit
+                self.finished[qid] = MatchResult([], stats)
+                self._fresh_done.append(qid)
+                return True
+        for q in self.pool.active_queries():
+            if q.query_id == qid:
+                self._abort(q, "cancelled")
+                return True
+        return False
 
     def _reset_learning_on_overflow(self) -> None:
         """Embedding-id overflow: clear all stores and pause learning
@@ -944,6 +1040,7 @@ class WaveScheduler:
                     out[:, q.order[:q.n]] = rows[:take, :q.n]
                     q.embeddings.extend(out)
                     q.stats.found += take
+                    self._deliver(q)       # stream before retirement
                 if q.limit is not None and q.stats.found >= q.limit:
                     self._abort(q, "limit")
 
@@ -1213,6 +1310,7 @@ class WaveScheduler:
                     q.embeddings.append(emb)
                     q.stats.found += 1
                     seg.reported[s + i] = True
+                self._deliver(q)           # stream before retirement
                 if q.limit is not None and q.stats.found >= q.limit:
                     self._abort(q, "limit")
                     continue
@@ -1333,7 +1431,13 @@ class WaveScheduler:
 
 
 class WaveEngine:
-    """Single-query facade over :class:`WaveScheduler` (one slot).
+    """Single-query facade over the request/handle API (one slot).
+
+    A thin compatibility wrapper (DESIGN.md §4): ``match`` submits a
+    :class:`repro.api.MatchRequest` through a one-slot
+    :class:`repro.api.MatchSession` and blocks on the handle. Use the
+    session/handle API directly for async submit, streaming, and
+    cancellation.
 
     Usage::
 
@@ -1341,45 +1445,36 @@ class WaveEngine:
         res = eng.match(query_graph, limit=1000)
     """
 
-    def __init__(self, data: Graph, wave_size: int = 512, kpr: int = 16,
-                 use_pruning: bool = True, megastep_depth: int = 6,
-                 pattern_capacity: int = 4096,
-                 pattern_cache: bool = True):
-        self.scheduler = WaveScheduler(
-            data, n_slots=1, wave_size=wave_size, kpr=kpr,
-            use_pruning=use_pruning, megastep_depth=megastep_depth,
-            pattern_capacity=pattern_capacity,
-            pattern_cache=pattern_cache)
+    def __init__(self, data: Graph, *,
+                 options: MatchOptions | None = None, **knobs):
+        from ..api.session import MatchSession   # deferred: layering
+        knobs["n_slots"] = 1                     # the single-query facade
+        self._session = MatchSession(
+            data, options=MatchOptions.resolve(options, **knobs))
+        self.scheduler = self._session.scheduler
 
-    def match(self, query: Graph, limit: int | None = 1000,
+    def match(self, query: Graph, *,
+              options: MatchOptions | None = None,
               cand: list[np.ndarray] | None = None,
               order: np.ndarray | None = None,
-              max_rows: int | None = None,
-              time_budget_s: float | None = None,
-              seed_patterns: dict | None = None,
-              parallelism: int = 1) -> MatchResult:
-        """``seed_patterns``: a pattern entries dict to pre-load (see
-        :meth:`WaveScheduler.submit` for the μ > 0 soundness rule);
-        ``parallelism``: intra-query shard count (shard-as-segments)."""
-        qid = self.scheduler.submit(
-            query, limit=limit, cand=cand, order=order, max_rows=max_rows,
-            time_budget_s=time_budget_s, seed_patterns=seed_patterns,
-            keep_table=True, parallelism=parallelism)
-        self.scheduler.run()
-        res = self.scheduler.finished.pop(qid)
-        self.scheduler.poll()
-        self._entries = self.scheduler.tables.pop(qid, None)
-        return res
+              **overrides) -> MatchResult:
+        """Blocking single-query match; knobs resolve through
+        :class:`repro.api.MatchOptions` (``seed_patterns`` follows
+        :meth:`WaveScheduler.submit`'s μ > 0 soundness rule;
+        ``parallelism`` is the intra-query shard count)."""
+        h = self._session.submit(query, options=options, cand=cand,
+                                 order=order, keep_table=True,
+                                 **overrides)
+        qr = h.result()
+        self._entries = self.scheduler.tables.pop(h.query_id, None)
+        return MatchResult(qr.embeddings, qr.stats)
 
 
-def match_vectorized(query: Graph, data: Graph, limit: int | None = 1000,
-                     use_pruning: bool = True, wave_size: int = 512,
-                     kpr: int = 16, megastep_depth: int = 6,
-                     pattern_capacity: int = 4096,
-                     **kw) -> MatchResult:
-    """One-shot convenience wrapper around :class:`WaveEngine`."""
-    return WaveEngine(data, wave_size=wave_size, kpr=kpr,
-                      use_pruning=use_pruning,
-                      megastep_depth=megastep_depth,
-                      pattern_capacity=pattern_capacity
-                      ).match(query, limit=limit, **kw)
+def match_vectorized(query: Graph, data: Graph,
+                     **knobs) -> MatchResult:
+    """One-shot convenience wrapper around :class:`WaveEngine`: every
+    per-query and per-engine knob is a :class:`repro.api.MatchOptions`
+    field (``limit``, ``use_pruning``, ``wave_size``, ``kpr``,
+    ``megastep_depth``, ``pattern_capacity``, …)."""
+    opts = MatchOptions.resolve(None, **knobs)
+    return WaveEngine(data, options=opts).match(query, options=opts)

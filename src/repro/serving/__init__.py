@@ -1,3 +1,5 @@
-from .query_server import QueryResult, QueryServer
+from ..api.handle import MatchHandle, QueryResult
+from ..api.options import MatchOptions
+from .query_server import QueryServer
 
-__all__ = ["QueryResult", "QueryServer"]
+__all__ = ["MatchHandle", "MatchOptions", "QueryResult", "QueryServer"]

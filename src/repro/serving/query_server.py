@@ -1,124 +1,136 @@
-"""Batched subgraph-matching query serving on the shared-wave scheduler.
+"""Batched + streamed subgraph-matching query serving (DESIGN.md §4).
 
-The paper's evaluation protocol (10 000-query sets, enumeration capped at
-1000 embeddings, per-query time budget) as a service: queries are
-admitted into the :class:`~repro.core.vectorized.WaveScheduler`'s bounded
-queue and executed *concurrently* — partial embeddings from many queries
-are packed into each fixed-shape wave, so one jitted device program
-serves the whole mixed batch with no idle gaps between queries
-(DESIGN.md §4). Per-query limits, recursion and time budgets evict
-aborted queries without disturbing their neighbors, and cumulative
-statistics feed SLO reporting (p50/p99 latency, wave occupancy).
+:class:`QueryServer` is a thin *session* over the request/handle API
+(:mod:`repro.api`): the paper's evaluation protocol (10 000-query sets,
+enumeration capped at 1000 embeddings, per-query time budget) as a
+service, plus the interactive scenarios the batch API cannot express —
+
+* :meth:`submit_async` — non-blocking; returns a
+  :class:`~repro.api.MatchHandle` with ``done()/result()/cancel()`` and
+  ``stream()`` (embedding batches delivered as waves emit them, so time
+  to first embedding — TTFE — beats completion latency);
+* :meth:`submit` / :meth:`submit_batch` — the legacy blocking
+  interfaces, now compatibility wrappers over request/handle;
+* priority-aware admission from the bounded queue
+  (``MatchOptions.priority``; :class:`~repro.api.QueueFull` is the
+  typed backpressure signal);
+* :meth:`slo_report` — p50/p99/mean latency, TTFE percentiles, timeout
+  tally, and the scheduler's wave/occupancy statistics.
+
+Every knob — per-query (``limit``, ``time_budget_s``,
+``max_recursions``, ``parallelism``, ``priority``, …) and per-engine
+(``n_slots``, ``wave_size``, ``megastep_depth``, ``pattern_*``, …) —
+resolves through :class:`repro.api.MatchOptions`, the single source of
+truth; the server adds none of its own defaults.
 
 backend: "engine" (shared-wave JAX scheduler) or "sequential" (paper
-Algorithm 2 reference, one query at a time — the correctness oracle).
+Algorithm 2 reference, one query at a time — the correctness oracle;
+it supports the same handle lifecycle including streaming and
+cancellation).
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-
 import numpy as np
 
-from ..core.backtrack import backtrack_deadend
+from ..api.handle import MatchHandle, QueryResult  # noqa: F401 (re-export)
+from ..api.options import MatchOptions
+from ..api.session import MatchSession
 from ..core.graph import Graph
-from ..core.vectorized import WaveScheduler
 
-
-@dataclasses.dataclass
-class QueryResult:
-    query_id: int
-    n_found: int
-    embeddings: list
-    latency_s: float
-    recursions: int
-    # status taxonomy (identical for both backends):
-    #   "ok"      — enumeration ran to completion
-    #   "limit"   — stopped because the result cap was reached
-    #   "timeout" — aborted by the recursion or wall-clock budget
-    timed_out: bool              # True iff status == "timeout"
-    aborted: bool = False        # any early stop (limit OR budget)
-    status: str = "ok"
-    # full engine stats (EngineStats on the engine backend — includes
-    # per-shard rows/items/steal counters for parallelism > 1)
-    stats: object = None
-
-
-def _status_of(stats, limit: int | None) -> str:
-    """Map SearchStats abort bookkeeping to the serving status taxonomy."""
-    if not stats.aborted:
-        return "ok"
-    reason = stats.abort_reason
-    if reason == "limit" or (reason is None and limit is not None
-                             and stats.found >= limit):
-        return "limit"
-    return "timeout"
+__all__ = ["QueryServer", "QueryResult"]
 
 
 class QueryServer:
     """Serve matching queries against one data graph."""
 
     def __init__(self, data: Graph, backend: str = "sequential",
-                 limit: int | None = 1000, time_budget_s: float = 10.0,
-                 wave_size: int = 256, kpr: int = 16, n_slots: int = 16,
-                 max_recursions: int | None = None, max_queue: int = 4096,
-                 megastep_depth: int = 6,
-                 pattern_capacity: int = 4096,
-                 pattern_cache: bool = True,
-                 pattern_cache_templates: int = 64,
-                 pattern_cache_top_k: int = 512):
-        """``pattern_capacity`` bounds the per-slot hashed Δ store
-        (O(capacity) device memory, independent of the data graph;
-        eviction only loses pruning, never exactness). The pattern-cache
-        knobs control the cross-query template cache: recurring query
-        templates warm-start their Δ from the previous run's hot
-        transferable patterns — the serving win for traffic with
-        repeated templates (DESIGN.md §6). Cache hit/warm-start metrics
-        surface in :meth:`slo_report` and per-query in
-        ``QueryResult.stats`` (``cache_hit``, ``warm_patterns``,
-        ``table_stats``)."""
+                 options: MatchOptions | None = None, **knobs):
+        """``options`` / ``knobs`` resolve through
+        :class:`repro.api.MatchOptions` and configure both the engine
+        (``n_slots``, ``wave_size``, ``kpr``, ``megastep_depth``,
+        ``max_queue``, ``pattern_capacity``, ``pattern_cache*``, …) and
+        the default per-query budget (``limit``, ``time_budget_s``,
+        ``max_recursions``) applied to every submission that does not
+        override them. The pattern-cache knobs control the cross-query
+        template cache: recurring query templates warm-start their Δ
+        from the previous run's hot transferable patterns (DESIGN.md
+        §6); cache hit/warm-start metrics surface in
+        :meth:`slo_report` and per-query in ``QueryResult.stats``."""
         self.data = data
         self.backend = backend
-        self.limit = limit
-        self.time_budget_s = time_budget_s
-        self.max_recursions = max_recursions
-        self.scheduler = (WaveScheduler(
-            data, n_slots=n_slots, wave_size=wave_size, kpr=kpr,
-            max_queue=max_queue, megastep_depth=megastep_depth,
-            pattern_capacity=pattern_capacity,
-            pattern_cache=pattern_cache,
-            pattern_cache_templates=pattern_cache_templates,
-            pattern_cache_top_k=pattern_cache_top_k)
-            if backend == "engine" else None)
+        self.options = MatchOptions.resolve(options, **knobs)
+        self.session = MatchSession(
+            data, options=self.options,
+            backend="engine" if backend == "engine" else "sequential")
+        self.scheduler = self.session.scheduler   # None on sequential
         self.latencies: list[float] = []
+        self.ttfes: list[float] = []
         self.n_timeouts = 0
+        self.n_cancelled = 0
+        self.session.on_complete = self._record
+
+    # convenience views of the resolved per-query defaults
+    @property
+    def limit(self):
+        return self.options.limit
+
+    @property
+    def time_budget_s(self):
+        return self.options.time_budget_s
+
+    @property
+    def max_recursions(self):
+        return self.options.max_recursions
 
     # ------------------------------------------------------------------
-    def _wrap(self, query_id: int, res, latency_s: float) -> QueryResult:
-        status = _status_of(res.stats, self.limit)
-        qr = QueryResult(query_id=query_id, n_found=res.stats.found,
-                         embeddings=res.embeddings, latency_s=latency_s,
-                         recursions=res.stats.recursions,
-                         timed_out=status == "timeout",
-                         aborted=res.stats.aborted, status=status,
-                         stats=res.stats)
-        self.latencies.append(latency_s)
+    def _record(self, qr: QueryResult) -> None:
+        """Session completion hook: SLO bookkeeping for every finished
+        query, whether consumed via handles or the blocking wrappers."""
+        self.latencies.append(qr.latency_s)
+        if qr.ttfe_s is not None:
+            self.ttfes.append(qr.ttfe_s)
         self.n_timeouts += qr.timed_out
-        return qr
+        self.n_cancelled += qr.status == "cancelled"
 
+    # ------------------------------------------------------------------
+    # request/handle API
+    # ------------------------------------------------------------------
+    def submit_async(self, query: Graph, *, query_id: int | None = None,
+                     options: MatchOptions | None = None,
+                     **overrides) -> MatchHandle:
+        """Non-blocking submit; returns a :class:`MatchHandle`
+        (``done()``, ``result()``, ``stream()``, ``cancel()``).
+
+        Raises :class:`repro.api.QueueFull` when the bounded admission
+        queue is at capacity — apply backpressure (``step()`` /
+        consume a handle) or shed load. Admission from the queue is
+        priority-aware (``priority=`` override, higher first)."""
+        return self.session.submit(query, query_id=query_id,
+                                   options=options, **overrides)
+
+    def step(self) -> bool:
+        """Advance the backend by one unit of work; False when idle."""
+        return self.session.step()
+
+    # ------------------------------------------------------------------
+    # legacy blocking wrappers
+    # ------------------------------------------------------------------
     def submit(self, query_id: int, query: Graph,
                parallelism: int = 1) -> QueryResult:
-        """Synchronous single-query submit (runs the query to completion)."""
-        return self.submit_batch([query], ids=[query_id],
-                                 parallelism=parallelism)[0]
+        """Synchronous single-query submit (runs the query to
+        completion). Compatibility wrapper over :meth:`submit_async`."""
+        return self.submit_async(query, query_id=query_id,
+                                 parallelism=parallelism).result()
 
     def submit_batch(self, queries: list[Graph],
                      ids: list[int] | None = None,
                      parallelism: int | list[int] | None = None
                      ) -> list[QueryResult]:
-        """Run a batch of queries; on the engine backend all of them share
-        the scheduler's waves concurrently (continuous batching: as
-        queries finish, queued ones are admitted into their slots).
+        """Run a batch of queries; on the engine backend all of them
+        share the scheduler's waves concurrently (continuous batching:
+        as queries finish, queued ones are admitted into their slots).
+        Compatibility wrapper: submits handles with bounded-queue
+        backpressure, then drains them.
 
         ``parallelism``: intra-query shard count (shard-as-segments,
         DESIGN.md §3) — an int applied to every query or a per-query
@@ -127,6 +139,7 @@ class QueryServer:
         waves instead of idling rows next to light traffic. Ignored by
         the sequential backend (one recursion, nothing to shard).
         """
+        from ..core.vectorized import QueueFull
         if ids is None:
             ids = list(range(len(queries)))
         if parallelism is None:
@@ -139,50 +152,19 @@ class QueryServer:
                 raise ValueError(
                     f"parallelism list length {len(par)} != "
                     f"{len(queries)} queries")
-        if self.backend != "engine":
-            out = []
-            for qid, q in zip(ids, queries):
-                t0 = time.perf_counter()
-                res = backtrack_deadend(
-                    q, self.data, limit=self.limit,
-                    max_recursions=self.max_recursions,
-                    time_budget_s=self.time_budget_s)
-                out.append(self._wrap(qid, res, time.perf_counter() - t0))
-            return out
-
-        sched = self.scheduler
-        pending = list(zip(ids, queries, par))
-        t_submit: dict[int, float] = {}
-        ext_id: dict[int, int] = {}          # scheduler id -> external id
-        results: dict[int, QueryResult] = {}
-        next_i = 0
-
-        def drain_finished():
-            for sqid in sched.poll():
-                eid = ext_id.get(sqid)
-                if eid is None or sqid not in sched.finished:
-                    continue
-                res = sched.finished.pop(sqid)
-                results[eid] = self._wrap(
-                    eid, res, time.perf_counter() - t_submit[eid])
-
-        while len(results) < len(pending):
-            # bounded-queue backpressure: top the queue up, then step
-            while next_i < len(pending) and len(sched.queue) < sched.max_queue:
-                eid, q, k = pending[next_i]
-                t_submit[eid] = time.perf_counter()
-                ext_id[sched.submit(
-                    q, limit=self.limit,
-                    max_rows=self.max_recursions,
-                    time_budget_s=self.time_budget_s,
-                    parallelism=k)] = eid
-                next_i += 1
-            if not sched.step() and next_i >= len(pending):
-                drain_finished()
-                break
-            drain_finished()
-        drain_finished()
-        return [results[eid] for eid, *_ in pending]
+        handles: list[MatchHandle] = []
+        for eid, q, k in zip(ids, queries, par):
+            while True:
+                try:
+                    handles.append(self.submit_async(
+                        q, query_id=eid, parallelism=k))
+                    break
+                except QueueFull:
+                    # bounded-queue backpressure: drain one unit of
+                    # work, freeing queue space, then retry
+                    if not self.step():
+                        raise
+        return [h.result() for h in handles]
 
     # ------------------------------------------------------------------
     def slo_report(self) -> dict:
@@ -193,7 +175,16 @@ class QueryServer:
                "p50_ms": float(np.percentile(lat, 50) * 1e3),
                "p99_ms": float(np.percentile(lat, 99) * 1e3),
                "mean_ms": float(lat.mean() * 1e3),
-               "timeouts": int(self.n_timeouts)}
+               "timeouts": int(self.n_timeouts),
+               "cancelled": int(self.n_cancelled)}
+        # time-to-first-embedding percentiles (queries that found >= 1
+        # embedding): the streaming SLO — how long until a consumer of
+        # MatchHandle.stream() sees its first batch
+        ttfe = np.asarray(self.ttfes)
+        rep["ttfe_n"] = len(ttfe)
+        if len(ttfe):
+            rep["ttfe_p50_ms"] = float(np.percentile(ttfe, 50) * 1e3)
+            rep["ttfe_p99_ms"] = float(np.percentile(ttfe, 99) * 1e3)
         if self.scheduler is not None:
             rep.update(self.scheduler.scheduler_stats())
         return rep

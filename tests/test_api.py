@@ -1,0 +1,310 @@
+"""Request/handle serving API (DESIGN.md §4): non-blocking submit,
+incremental streaming, cancellation, typed backpressure, and the single
+MatchOptions knob surface shared by engine, distributed, and server."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import (MatchHandle, MatchOptions, MatchSession,
+                       QueryResult, QueueFull)
+from repro.api.handle import STATUSES
+from repro.core.backtrack import DEFAULT_LIMIT, backtrack_deadend
+from repro.core.distributed import DistributedMatcher
+from repro.core.vectorized import WaveScheduler
+from repro.data.graph_gen import (corridor_graph, er_labeled_graph,
+                                  query_set, trap_graph)
+from repro.serving.query_server import QueryServer
+
+
+def embset(embs):
+    return set(tuple(np.asarray(e).tolist()) for e in embs)
+
+
+def stream_union(handle: MatchHandle):
+    rows = set()
+    batches = 0
+    for batch in handle.stream():
+        assert batch.dtype == np.int32 and batch.ndim == 2
+        rows.update(tuple(r) for r in batch.tolist())
+        batches += 1
+    return rows, batches
+
+
+# one representative query per workload class of the acceptance
+# criteria: uniform (random-walk over an ER graph), trap (the paper's
+# Fig. 1 hard case), corridor (prefix-independent mu==0 dead ends)
+def _workload(name):
+    if name == "uniform":
+        data = er_labeled_graph(35, 100, 3, seed=11)
+        return query_set(data, 4, 1, seed=5)[0], data
+    if name == "trap":
+        return trap_graph(n_b=12, n_c=12, n_good=2, tail_len=2, seed=0)
+    return corridor_graph(n_bait=10)
+
+
+# ----------------------------------------------------------------------
+# satellite: one knob surface, one set of defaults
+# ----------------------------------------------------------------------
+def test_options_are_the_single_default_surface():
+    """limit / time_budget_s / max_recursions (and every engine knob)
+    have exactly one definition: MatchOptions. Engine, scheduler and
+    server resolve through it instead of carrying their own copies."""
+    opts = MatchOptions()
+    assert opts.limit == DEFAULT_LIMIT == 1000
+    data = er_labeled_graph(20, 40, 2, seed=0)
+    # the scheduler's options ARE the canonical defaults
+    sched = WaveScheduler(data)
+    assert sched.options == opts
+    assert (sched.max_queue, sched.wave_size, sched.n_slots) == \
+        (opts.max_queue, opts.wave_size, opts.n_slots)
+    # a no-override submit queues exactly the MatchOptions defaults
+    qid = sched.submit(query_set(data, 3, 1, seed=1)[0])
+    req = next(r for r in sched.queue if r.query_id == qid)
+    assert (req.limit, req.time_budget_s, req.max_rows) == \
+        (opts.limit, opts.time_budget_s, opts.max_recursions)
+    # server and distributed matcher: same surface, no local defaults
+    srv = QueryServer(data, backend="engine")
+    assert srv.options == opts
+    assert (srv.limit, srv.time_budget_s, srv.max_recursions) == \
+        (opts.limit, opts.time_budget_s, opts.max_recursions)
+    dm = DistributedMatcher(data, n_shards=2)
+    assert dm.scheduler.options == opts.replace(n_slots=1)
+    # the historical max_rows spelling folds into max_recursions
+    assert MatchOptions.resolve(None, max_rows=7).max_recursions == 7
+
+
+def test_options_validated_in_one_place():
+    with pytest.raises(ValueError):
+        MatchOptions(limit=-1).validate()
+    with pytest.raises(ValueError):
+        MatchOptions(parallelism=0).validate()
+    with pytest.raises(ValueError):
+        MatchOptions(pattern_capacity=48).validate()   # not a pow2
+    with pytest.raises(TypeError):
+        MatchOptions.resolve(None, not_a_knob=1)
+    data = er_labeled_graph(20, 40, 2, seed=0)
+    with pytest.raises(ValueError):
+        QueryServer(data, backend="engine", time_budget_s=-1.0)
+
+
+# ----------------------------------------------------------------------
+# tentpole: streamed union == blocking embedding set, per backend
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("workload", ["uniform", "trap", "corridor"])
+@pytest.mark.parametrize("backend", ["engine", "distributed",
+                                     "sequential"])
+def test_stream_equals_batch_equals_oracle(workload, backend):
+    """MatchHandle.stream() must yield exactly the blocking API's
+    embedding set — on every workload class and every backend
+    (engine, distributed parallelism>1, sequential oracle)."""
+    query, data = _workload(workload)
+    ref = embset(backtrack_deadend(query, data, limit=None).embeddings)
+    if backend == "distributed":
+        dm = DistributedMatcher(data, n_shards=3, wave_size=32, kpr=4)
+        h = dm.submit(query, limit=None)
+    else:
+        srv = QueryServer(data, backend=backend, limit=None, n_slots=2,
+                          wave_size=32, kpr=4)
+        h = srv.submit_async(query, limit=None)
+    rows, _ = stream_union(h)
+    res = h.result()
+    assert res.status == "ok"
+    assert rows == embset(res.embeddings) == ref
+
+
+def test_stream_yields_before_completion():
+    """Embeddings arrive while the query is still running: the first
+    streamed batch lands before the handle completes, and TTFE is
+    strictly below total wall time."""
+    query, data = trap_graph(n_b=10, n_c=10, n_good=2, tail_len=2,
+                             seed=0)
+    srv = QueryServer(data, backend="engine", limit=None, n_slots=2,
+                      wave_size=32, kpr=4)
+    h = srv.submit_async(query, limit=None)
+    it = h.stream()
+    first = next(it)
+    assert len(first) > 0
+    assert not h.done()            # streamed mid-flight, not at retire
+    rows = set(tuple(r) for r in first.tolist())
+    for batch in it:
+        rows.update(tuple(r) for r in batch.tolist())
+    res = h.result()
+    assert res.ttfe_s is not None
+    assert res.ttfe_s < res.stats.wall_time_s
+    assert rows == embset(res.embeddings)
+    rep = srv.slo_report()
+    assert rep["ttfe_n"] == 1 and rep["ttfe_p50_ms"] < rep["p50_ms"]
+
+
+# ----------------------------------------------------------------------
+# satellite: cancellation lifecycle
+# ----------------------------------------------------------------------
+def test_cancel_mid_flight_leaves_neighbors_bit_identical():
+    """Cancelling one in-flight query must not perturb the embedding
+    rows of the queries sharing its waves."""
+    data = er_labeled_graph(35, 100, 3, seed=11)
+    queries = query_set(data, 4, 6, seed=5)
+
+    def run(cancel_victim):
+        srv = QueryServer(data, backend="engine", limit=None, n_slots=4,
+                          wave_size=32, kpr=4)
+        handles = [srv.submit_async(q, query_id=i, limit=None)
+                   for i, q in enumerate(queries)]
+        if cancel_victim:
+            for _ in range(3):          # let it get airborne first
+                srv.step()
+            assert handles[0].cancel()
+        return [h.result() for h in handles]
+
+    base = run(cancel_victim=False)
+    got = run(cancel_victim=True)
+    assert got[0].status == "cancelled"
+    assert got[0].aborted and not got[0].timed_out
+    assert got[0].stats.abort_reason == "cancelled"
+    for b, g in zip(base[1:], got[1:]):
+        assert g.status == "ok"
+        # bit-identical rows: compare the exact int32 row bytes
+        assert sorted(np.asarray(e, np.int32).tobytes()
+                      for e in b.embeddings) == \
+            sorted(np.asarray(e, np.int32).tobytes()
+                   for e in g.embeddings)
+    # the cancelled query's stream terminates with what it had
+    srv_stats = got[0].stats
+    assert srv_stats.found == len(got[0].embeddings)
+
+
+def test_cancel_queued_request_never_takes_a_slot():
+    data = er_labeled_graph(35, 100, 3, seed=11)
+    queries = query_set(data, 4, 3, seed=5)
+    srv = QueryServer(data, backend="engine", limit=None, n_slots=1,
+                      wave_size=32, kpr=4)
+    handles = [srv.submit_async(q, limit=None) for q in queries]
+    assert handles[2].cancel()          # still queued: retires at once
+    assert handles[2].done()
+    r = handles[2].result()
+    assert r.status == "cancelled" and r.n_found == 0
+    assert [h.result().status for h in handles[:2]] == ["ok", "ok"]
+    # cancelling a finished query is a no-op
+    assert not handles[0].cancel()
+
+
+def test_cancel_sequential_backend():
+    data = er_labeled_graph(35, 100, 3, seed=11)
+    queries = query_set(data, 4, 2, seed=5)
+    srv = QueryServer(data, backend="sequential", limit=None)
+    h1 = srv.submit_async(queries[0], limit=None)
+    h2 = srv.submit_async(queries[1], limit=None)
+    assert h2.cancel()
+    assert h2.result().status == "cancelled"
+    assert h1.result().status == "ok"
+    assert srv.slo_report()["cancelled"] == 1
+
+
+# ----------------------------------------------------------------------
+# satellite: typed backpressure + priority admission
+# ----------------------------------------------------------------------
+def test_queue_full_backpressure_is_typed():
+    data = er_labeled_graph(35, 100, 3, seed=11)
+    queries = query_set(data, 4, 4, seed=5)
+    srv = QueryServer(data, backend="engine", limit=None, n_slots=1,
+                      wave_size=32, kpr=4, max_queue=2)
+    assert issubclass(QueueFull, RuntimeError)
+    srv.submit_async(queries[0], limit=None)
+    srv.submit_async(queries[1], limit=None)
+    with pytest.raises(QueueFull):
+        srv.submit_async(queries[2], limit=None)
+    # submit_batch absorbs the same signal as backpressure (drains the
+    # queue by stepping instead of surfacing QueueFull to the caller)
+    results = srv.submit_batch(queries)
+    assert all(r.status == "ok" for r in results)
+
+
+def test_priority_admission_order():
+    """Higher-priority requests leave the bounded queue first (FIFO
+    within a tie): with one slot, completion order shows admission
+    order."""
+    data = er_labeled_graph(35, 100, 3, seed=11)
+    q = query_set(data, 4, 1, seed=5)[0]
+    sched = WaveScheduler(data, n_slots=1, wave_size=32, kpr=4)
+    # admission happens at step time, so all three compete in the queue
+    tie_a = sched.submit(q, limit=None)            # priority 0, first
+    tie_b = sched.submit(q, limit=None, priority=0)
+    high = sched.submit(q, limit=None, priority=5)
+    sched.run()
+    order = sched.poll()
+    assert order.index(high) < order.index(tie_a) < order.index(tie_b)
+
+
+# ----------------------------------------------------------------------
+# satellite: JSON-safe result payloads
+# ----------------------------------------------------------------------
+def test_query_result_to_dict_is_json_safe():
+    query, data = trap_graph(n_b=10, n_c=10, n_good=2, tail_len=2,
+                             seed=0)
+    srv = QueryServer(data, backend="engine", limit=3, n_slots=2,
+                      wave_size=32, kpr=4)
+    r = srv.submit(7, query)
+    d = r.to_dict(include_embeddings=True)
+    payload = json.loads(json.dumps(d))            # round-trips cleanly
+    assert payload["query_id"] == 7
+    assert payload["status"] in STATUSES
+    assert payload["status"] == "limit"
+    assert isinstance(payload["n_found"], int)
+    assert isinstance(payload["latency_ms"], float)
+    assert payload["ttfe_ms"] is None or isinstance(
+        payload["ttfe_ms"], float)
+    assert payload["embeddings"] == [
+        [int(v) for v in np.asarray(e).tolist()] for e in r.embeddings]
+    assert not r.to_dict().get("embeddings")       # opt-in only
+    # the cancelled leg of the taxonomy serializes too
+    h = srv.submit_async(query, limit=None)
+    h.cancel()
+    assert h.result().to_dict()["status"] == "cancelled"
+
+
+def test_handle_replays_stream_after_completion():
+    """stream() on an already-finished handle replays the buffered
+    batches — late consumers still see the full union."""
+    query, data = trap_graph(n_b=10, n_c=10, n_good=2, tail_len=2,
+                             seed=0)
+    for backend in ("engine", "sequential"):
+        srv = QueryServer(data, backend=backend, limit=None, n_slots=2,
+                          wave_size=32, kpr=4)
+        h = srv.submit_async(query, limit=None)
+        res = h.result()                           # finish first
+        rows, _ = stream_union(h)                  # then stream
+        assert rows == embset(res.embeddings)
+
+
+def test_result_mid_stream_and_double_stream():
+    """result() while a stream is being consumed must not error (the
+    sequential backend runs streams on a worker thread), and a second
+    stream() over a finished handle replays the full set."""
+    query, data = trap_graph(n_b=10, n_c=10, n_good=2, tail_len=2,
+                             seed=0)
+    for backend in ("engine", "sequential"):
+        srv = QueryServer(data, backend=backend, limit=None, n_slots=2,
+                          wave_size=32, kpr=4)
+        h = srv.submit_async(query, limit=None)
+        it = h.stream()
+        next(it)                       # stream is live...
+        res = h.result()               # ...result() joins, no error
+        assert res.status == "ok"
+        first, _ = stream_union(h)     # fresh iterator: full replay
+        second, _ = stream_union(h)    # and again — non-destructive
+        assert first == second == embset(res.embeddings)
+
+
+def test_match_session_direct():
+    """The api-level session works without the serving wrapper, and
+    QueryResult re-exports stay importable from the serving module."""
+    from repro.serving import QueryResult as ServingQueryResult
+    assert ServingQueryResult is QueryResult
+    query, data = trap_graph(n_b=10, n_c=10, n_good=2, tail_len=2,
+                             seed=0)
+    s = MatchSession(data, n_slots=2, wave_size=32, kpr=4)
+    h = s.submit(query, limit=None, keep_table=True)
+    res = h.result()
+    assert res.status == "ok"
+    assert s.scheduler.tables.pop(h.query_id, None) is not None
