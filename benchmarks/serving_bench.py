@@ -119,6 +119,15 @@ def run(csv_rows: list | None = None, budget_s: float = 90.0,
         "dispatch_time_s": rep["dispatch_time_s"],
         "device_sync_time_s": rep["device_sync_time_s"],
         "host_time_s": rep["host_time_s"],
+        "host_frac": rep["host_time_s"] / wall,
+        # disjoint host-time breakdown (where the host wall actually
+        # goes now that frontier stacks are device-resident): digest
+        # folding, admission, retirement, Δ pattern flushing
+        "host_admission_time_s": rep["host_admission_time_s"],
+        "host_digest_time_s": rep["host_digest_time_s"],
+        "host_retirement_time_s": rep["host_retirement_time_s"],
+        "host_flush_time_s": rep["host_flush_time_s"],
+        "device_stacks": rep["device_stacks"],
         # bounded hashed Δ store (patterns.store): O(capacity) resident
         # memory, eviction only ever loses pruning
         "pattern_capacity": rep["pattern_capacity"],
@@ -263,6 +272,15 @@ def run(csv_rows: list | None = None, budget_s: float = 90.0,
     }
 
     if out_path is not None:
+        # regeneration must not wipe the normalized A/B trajectory that
+        # scripts/ab_gate.py versions alongside the absolute numbers
+        if out_path.exists():
+            try:
+                prev = json.loads(out_path.read_text())
+                if "ab_history" in prev:
+                    payload["ab_history"] = prev["ab_history"]
+            except (json.JSONDecodeError, OSError):
+                pass
         out_path.write_text(json.dumps(payload, indent=2) + "\n")
     if csv_rows is not None:
         csv_rows.append((

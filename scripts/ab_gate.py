@@ -1,0 +1,119 @@
+"""Same-container old-vs-new A/B perf gate on the serving smoke workload.
+
+Absolute smoke qps has moved ~2x between CI containers (PR 3, PR 5 both
+had to be hand re-verified), so this gate never thresholds an absolute
+number: it checks out the baseline ref into a temporary git worktree,
+runs ``benchmarks.serving_bench --smoke`` for both trees back-to-back in
+*this* container, and fails only when ``new_qps / old_qps`` drops below
+the ratio threshold. Each side runs ``AB_RUNS`` times and keeps its best
+qps (first-run jitter from the shared JIT cache is real).
+
+The run appends ``{commit, qps_ratio, host_frac}`` to the ``ab_history``
+list in BENCH_serving.json so the normalized trajectory is versioned
+alongside the absolute headline numbers.
+
+Environment knobs:
+
+* ``AB_BASE_REF``  — baseline git ref (default ``HEAD~1``)
+* ``AB_MIN_RATIO`` — failure threshold on new/old qps (default ``0.85``)
+* ``AB_RUNS``      — smoke runs per side, best-of (default ``2``)
+* ``AB_SKIP=1``    — skip the gate entirely
+
+The gate skips gracefully (exit 0, with a message) when the baseline ref
+does not resolve (shallow clone, first commit) or its bench fails to
+run — a missing baseline must not block CI, only a measured regression.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import tempfile
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+BENCH = ROOT / "BENCH_serving.json"
+
+
+def _git(*args: str) -> subprocess.CompletedProcess:
+    return subprocess.run(["git", *args], cwd=ROOT, capture_output=True,
+                          text=True)
+
+
+def _smoke_qps(tree: pathlib.Path, runs: int) -> tuple[float, dict]:
+    """Best-of-``runs`` smoke qps for one source tree (plus the payload
+    of the best run)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(tree / "src")
+    best, best_payload = 0.0, None
+    for _ in range(runs):
+        out = subprocess.run(
+            [sys.executable, "-m", "benchmarks.serving_bench", "--smoke"],
+            cwd=tree, env=env, capture_output=True, text=True,
+            timeout=1800)
+        if out.returncode != 0:
+            raise RuntimeError(
+                f"smoke bench failed in {tree}:\n{out.stderr[-2000:]}")
+        payload = json.loads(out.stdout)
+        if payload["queries_per_sec"] >= best:
+            best, best_payload = payload["queries_per_sec"], payload
+    return best, best_payload
+
+
+def main() -> int:
+    if os.environ.get("AB_SKIP") == "1":
+        print("ab_gate: skipped (AB_SKIP=1)")
+        return 0
+    base_ref = os.environ.get("AB_BASE_REF", "HEAD~1")
+    min_ratio = float(os.environ.get("AB_MIN_RATIO", "0.85"))
+    runs = int(os.environ.get("AB_RUNS", "2"))
+
+    rev = _git("rev-parse", "--verify", f"{base_ref}^{{commit}}")
+    if rev.returncode != 0:
+        print(f"ab_gate: skipped (baseline ref {base_ref!r} does not "
+              "resolve)")
+        return 0
+    base_commit = rev.stdout.strip()
+
+    with tempfile.TemporaryDirectory(prefix="ab_gate_") as td:
+        base_tree = pathlib.Path(td) / "base"
+        add = _git("worktree", "add", "--detach", str(base_tree),
+                   base_commit)
+        if add.returncode != 0:
+            print("ab_gate: skipped (worktree add failed: "
+                  f"{add.stderr.strip()})")
+            return 0
+        try:
+            try:
+                old_qps, _ = _smoke_qps(base_tree, runs)
+            except (RuntimeError, json.JSONDecodeError,
+                    subprocess.TimeoutExpired) as e:
+                print(f"ab_gate: skipped (baseline bench unusable: {e})")
+                return 0
+            new_qps, new_payload = _smoke_qps(ROOT, runs)
+        finally:
+            _git("worktree", "remove", "--force", str(base_tree))
+
+    ratio = new_qps / max(old_qps, 1e-9)
+    head = _git("rev-parse", "--short", "HEAD").stdout.strip()
+    record = {"commit": head, "qps_ratio": round(ratio, 4),
+              "host_frac": round(new_payload.get("host_frac", 0.0), 4)}
+    if BENCH.exists():
+        bench = json.loads(BENCH.read_text())
+        bench.setdefault("ab_history", []).append(record)
+        BENCH.write_text(json.dumps(bench, indent=2) + "\n")
+
+    print(f"ab_gate: old={old_qps:.1f} qps ({base_commit[:8]}), "
+          f"new={new_qps:.1f} qps, ratio={ratio:.3f} "
+          f"(threshold {min_ratio}), "
+          f"host_frac={record['host_frac']:.3f}")
+    if ratio < min_ratio:
+        print(f"ab_gate: FAIL — qps ratio {ratio:.3f} < {min_ratio}",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,6 +23,10 @@ REQUIRED = [
     "waves", "mean_wave_occupancy", "steady_wave_occupancy", "prune_rate",
     "megastep_depth", "dispatch_time_s", "device_sync_time_s",
     "host_time_s",
+    # disjoint host-time breakdown + device-resident stack flag
+    # (ISSUE 6: the <20%-of-wall criterion is measured from the payload)
+    "host_frac", "host_admission_time_s", "host_digest_time_s",
+    "host_retirement_time_s", "host_flush_time_s", "device_stacks",
     # streaming serving API (DESIGN.md §4)
     "ttfe_p50_ms", "ttfe_p99_ms", "results", "streaming",
     # bounded hashed Δ store + cross-query template cache

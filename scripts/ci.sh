@@ -28,3 +28,10 @@ python -m pytest tests/test_distributed.py -q
 # pattern-store/cache metrics, and that warm-started queries out-prune
 # cold ones — and prints a one-line summary.
 python -m benchmarks.serving_bench --smoke | python scripts/check_smoke.py
+# normalized old-vs-new A/B perf gate: both trees benched back-to-back
+# in this container, only the qps *ratio* is thresholded (absolute
+# smoke qps has moved ~2x between containers). Appends a
+# {commit, qps_ratio, host_frac} record to BENCH_serving.json; skips
+# gracefully when the baseline ref is unavailable. AB_SKIP=1 to skip,
+# AB_BASE_REF / AB_MIN_RATIO / AB_RUNS to tune.
+python scripts/ab_gate.py

@@ -24,7 +24,8 @@ share a vocabulary:
 * **per-engine** fields are consumed once at scheduler construction
   (``n_slots``, ``wave_size``, ``kpr``, ``megastep_depth``,
   ``max_queue``, ``store_*``, ``adaptive_prune_threshold``,
-  ``pattern_*``, ``hit_decay_every``) and ignored on a request.
+  ``device_stacks``, ``stack_capacity``, ``pattern_*``,
+  ``hit_decay_every``) and ignored on a request.
 
 An engine built from a ``MatchOptions`` also uses it as the *default*
 per-query options for requests that do not override them — so a server
@@ -70,6 +71,11 @@ class MatchOptions:
     store_flush_min: int = 16
     store_pad: int = 256
     adaptive_prune_threshold: float = 0.05
+    # device-resident frontier stacks (DESIGN.md §2): per-slot DFS stack
+    # depth held in device arrays. ``device_stacks=False`` forces every
+    # query through the host SegmentPool path (debug / A-B testing).
+    device_stacks: bool = True
+    stack_capacity: int = 1024
     pattern_capacity: int = 4096
     pattern_cache: bool = True
     pattern_cache_templates: int = 64
@@ -95,7 +101,7 @@ class MatchOptions:
                 f"parallelism must be >= 1, got {self.parallelism!r}")
         for name in ("n_slots", "wave_size", "kpr", "megastep_depth",
                      "max_queue", "store_pad", "pattern_capacity",
-                     "hit_decay_every"):
+                     "hit_decay_every", "stack_capacity"):
             if getattr(self, name) < 1:
                 raise ValueError(
                     f"{name} must be >= 1, got {getattr(self, name)!r}")

@@ -45,6 +45,13 @@ def spec() -> ArchSpec:
         ShapeCell("web_scale", "matcher",
                   dict(n_vertices=1_048_576, wave_size=8192, kpr=16,
                        n_slots=16, pattern_capacity=65_536)),
+        # device-resident scheduling step (run_device_megastep): adds
+        # the per-slot StackBank dims — presence of stack_capacity
+        # routes build_cell to the stack lowering
+        ShapeCell("yeast_scale_stacks", "matcher",
+                  dict(n_vertices=4096, wave_size=4096, kpr=16,
+                       n_slots=16, pattern_capacity=16_384,
+                       stack_capacity=1024, megastep_depth=6)),
     )
     return ArchSpec(arch_id="paper-matcher", family="matcher", config=FULL,
                     smoke_config=SMOKE, shapes=shapes,

@@ -350,6 +350,7 @@ class DistributedMatcher:
                          if pending else np.zeros(0, np.int32))
         from ..patterns.store import store_to_entries
         from .engine_step import read_store_slot
+        q.materialize_hits()          # fold buffered digest hit batches
         entries = store_to_entries(read_store_slot(sched.tb, q.slot),
                                    q.hit_counts)
         return Checkpoint(

@@ -237,8 +237,40 @@ def load_slot(qb: QueryBank, tb: PatternStoreBank, slot: jax.Array,
     return qb2, tb2
 
 
-def read_store_slot(tb: PatternStoreBank, slot: int) -> PatternStore:
-    """Read one slot's Δ store back out (pattern export on completion)."""
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def load_slots(qb: QueryBank, tb: PatternStoreBank, slots: jax.Array,
+               cand_bitmap: jax.Array, nbr_mask: jax.Array,
+               n_query: jax.Array, store: PatternStore,
+               learn: jax.Array) -> tuple[QueryBank, PatternStoreBank]:
+    """Batch variant of :func:`load_slot`: install ``k`` queries in one
+    dispatch (all row arguments carry a leading [k] axis; a ``slots``
+    value of S drops that row). An admission burst — fresh server, batch
+    submit — used to pay one jit dispatch per query, which dominated
+    tiny-batch admission latency."""
+    qb2 = QueryBank(
+        cand_bitmap=qb.cand_bitmap.at[slots].set(cand_bitmap,
+                                                 mode="drop"),
+        nbr_mask=qb.nbr_mask.at[slots].set(nbr_mask, mode="drop"),
+        n_query=qb.n_query.at[slots].set(n_query, mode="drop"),
+        learn=qb.learn.at[slots].set(learn, mode="drop"))
+    tb2 = PatternStoreBank(
+        key_pos=tb.key_pos.at[slots].set(store.key_pos, mode="drop"),
+        key_v=tb.key_v.at[slots].set(store.key_v, mode="drop"),
+        phi=tb.phi.at[slots].set(store.phi, mode="drop"),
+        mu=tb.mu.at[slots].set(store.mu, mode="drop"),
+        mask=tb.mask.at[slots].set(store.mask, mode="drop"),
+        valid=tb.valid.at[slots].set(store.valid, mode="drop"),
+        hits=tb.hits.at[slots].set(store.hits, mode="drop"))
+    return qb2, tb2
+
+
+@jax.jit
+def read_store_slot(tb: PatternStoreBank, slot: jax.Array) -> PatternStore:
+    """Read one slot's Δ store back out (pattern export on completion).
+
+    Jitted so the export is ONE dispatch: seven separate ``tb.x[slot]``
+    gathers cost ~1ms of host dispatch time per finished query, which
+    dominated the tiny-workload serving smoke run."""
     return PatternStore(key_pos=tb.key_pos[slot], key_v=tb.key_v[slot],
                         phi=tb.phi[slot], mu=tb.mu[slot],
                         mask=tb.mask[slot], valid=tb.valid[slot],
@@ -274,12 +306,14 @@ def refine_eq2_mq(g: GraphArrays, qb: QueryBank, query_slot: jax.Array,
                                  interpret=(backend == "pallas_interpret"))
         return out[:, :w].astype(jnp.uint32)
 
-    def body(p, acc):
-        active = qb.nbr_mask[query_slot, depth, p] & (p < depth)  # [F]
-        rows = g.adj_bitmap[frontier[:, p].clip(0)]               # [F, W]
-        return jnp.where(active[:, None], acc & rows, acc)
-
-    return lax.fori_loop(0, N_PAD, body, acc0)
+    # one gather + reduce instead of a fori_loop over positions: 64
+    # sequential [F, W] dispatches cost more than the [F, NP, W] gather
+    pos = jnp.arange(N_PAD)
+    active = (qb.nbr_mask[query_slot, depth]
+              & (pos[None, :] < depth[:, None]))             # [F, NP]
+    rows = g.adj_bitmap[frontier.clip(0)]                    # [F, NP, W]
+    rows = jnp.where(active[:, :, None], rows, FULL)
+    return acc0 & lax.reduce(rows, FULL, lax.bitwise_and, (1,))
 
 
 def deadend_lookup_children_mq(tb: PatternStoreBank, phi: jax.Array,
@@ -768,6 +802,662 @@ def run_megastep_mq(g: GraphArrays, qb: QueryBank, tb: PatternStoreBank,
         pat_evictions=s["pat"].evictions, pat_dropped=s["pat"].dropped,
         emb_frontier=s["emb_frontier"],
         emb_slot=s["emb_slot"], n_emb=s["n_emb"],
+        n_ids=s["id_ctr"] - jnp.asarray(id_base, jnp.int32))
+
+
+# ===================================================================
+# device-resident frontier stacks (DESIGN.md §2 "device-resident state")
+# ===================================================================
+# Entry states of the per-slot stack. FREE entries are allocatable;
+# FRESH/LEFT entries are pending work (each is on the slot's pending
+# LIFO exactly once); WAIT entries were expanded and wait for their
+# allocated children to resolve (Lemma 4 aggregation); RES entries hold
+# a *converted* Γ ready to fold into their parent and be freed.
+STK_FREE = 0
+STK_FRESH = 1
+STK_LEFT = 2
+STK_WAIT = 3
+STK_RES = 4
+
+
+class StackBank(NamedTuple):
+    """Per-slot DFS stacks held in device arrays ([S, D, ...]).
+
+    This is the device-resident replacement for the host ``SegmentPool``
+    row bookkeeping: one entry per live partial embedding, with the
+    frontier/used/φ/depth lanes the wave programs consume plus the
+    Lemma-4 resolution lanes (Γ accumulator, outstanding-children count,
+    reported flag, parent entry index). ``pstack``/``ptop`` form the
+    per-slot pending LIFO the expansion loop repacks waves from — the
+    host never sees individual rows, only per-slot scalars.
+    """
+    frontier: jax.Array      # int32 [S, D, N_PAD]
+    used: jax.Array          # uint32 [S, D, W]
+    phi: jax.Array           # int32 [S, D, N_PAD + 1]
+    depth: jax.Array         # int32 [S, D]
+    cand: jax.Array          # uint32 [S, D, W] leftover bitmap (LEFT)
+    state: jax.Array         # int8 [S, D] STK_* lifecycle
+    gamma: jax.Array         # uint32 [S, D, MASK_WORDS] Γ* accumulator
+    outstanding: jax.Array   # int32 [S, D] unresolved allocated children
+    reported: jax.Array      # bool [S, D] subtree reached an embedding
+    parent: jax.Array        # int32 [S, D] parent entry index (-1 = root)
+    pstack: jax.Array        # int32 [S, D] pending LIFO of entry indices
+    ptop: jax.Array          # int32 [S]
+
+    @staticmethod
+    def empty(n_slots: int, depth_cap: int, w: int) -> "StackBank":
+        s, d = n_slots, depth_cap
+        return StackBank(
+            frontier=jnp.full((s, d, N_PAD), -1, jnp.int32),
+            used=jnp.zeros((s, d, w), jnp.uint32),
+            phi=jnp.zeros((s, d, N_PAD + 1), jnp.int32),
+            depth=jnp.zeros((s, d), jnp.int32),
+            cand=jnp.zeros((s, d, w), jnp.uint32),
+            state=jnp.zeros((s, d), jnp.int8),
+            gamma=jnp.zeros((s, d, MASK_WORDS), jnp.uint32),
+            outstanding=jnp.zeros((s, d), jnp.int32),
+            reported=jnp.zeros((s, d), bool),
+            parent=jnp.full((s, d), -1, jnp.int32),
+            pstack=jnp.zeros((s, d), jnp.int32),
+            ptop=jnp.zeros((s,), jnp.int32))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def clear_slot_stack(sb: StackBank, slot: jax.Array) -> StackBank:
+    """Release every entry of one slot (query retired / evicted). Only
+    the state and top-pointer lanes matter — FREE entries' payload lanes
+    are rewritten on allocation."""
+    return sb._replace(state=sb.state.at[slot].set(STK_FREE),
+                       ptop=sb.ptop.at[slot].set(0))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def clear_slot_stacks(sb: StackBank, slots: jax.Array) -> StackBank:
+    """Batch variant of :func:`clear_slot_stack`: release several slots
+    in one dispatch (``slots`` [k]; out-of-range values drop)."""
+    return sb._replace(
+        state=sb.state.at[slots].set(STK_FREE, mode="drop"),
+        ptop=sb.ptop.at[slots].set(0, mode="drop"))
+
+
+class DeviceResult(NamedTuple):
+    """Per-slot scalar digest of one device-resident dispatch.
+
+    This is everything that crosses the device→host boundary besides
+    the embedding batch: counters for stats/budget accounting plus the
+    stack's live/pending sizes for completion detection. No per-row
+    lanes — the rows stayed on device.
+    """
+    tb: PatternStoreBank
+    sb: StackBank
+    d_accepted: jax.Array    # int32 [S] admitted root rows
+    d_expanded: jax.Array    # int32 [S] rows expanded (selected)
+    d_rows: jax.Array        # int32 [S] child rows allocated
+    d_prunes: jax.Array      # int32 [S] Δ dead-end prunes
+    d_inj: jax.Array         # int32 [S] injectivity kills
+    d_stored: jax.Array      # int32 [S] patterns stored (L1 + L4)
+    d_pending: jax.Array     # int32 [S] pending LIFO size after
+    d_live: jax.Array        # int32 [S] non-FREE entries after
+    pat_stored: jax.Array    # int32 [S] Δ insert counters
+    pat_overwrites: jax.Array
+    pat_evictions: jax.Array
+    pat_dropped: jax.Array
+    emb_frontier: jax.Array  # int32 [emb_cap, N_PAD]
+    emb_slot: jax.Array      # int32 [emb_cap]
+    n_emb: jax.Array         # int32
+    n_ids: jax.Array         # int32 fresh embedding ids consumed
+
+
+def _slot_counts(sel_slot: jax.Array, valid: jax.Array, n_slots: int,
+                 weights: jax.Array | None = None) -> jax.Array:
+    """Per-slot sum of ``weights`` (default 1) over valid rows."""
+    tgt = jnp.where(valid, sel_slot, n_slots)
+    w = (valid.astype(jnp.int32) if weights is None
+         else jnp.where(valid, weights, 0))
+    return jnp.zeros((n_slots + 1,), jnp.int32).at[tgt].add(w)[:n_slots]
+
+
+def _group_rank(slot: jax.Array, valid: jax.Array, n_slots: int
+                ) -> jax.Array:
+    """Rank of each valid element within its slot group.
+
+    Requires the valid elements to be grouped by slot in ascending
+    order (wave rows and their flattened children are laid out that way
+    by construction): rank = global running index minus the group's
+    first global index, recovered with a scatter-min.
+    """
+    gidx = jnp.cumsum(valid.astype(jnp.int32)) - 1
+    big = jnp.int32(2**30)
+    start = jnp.full((n_slots + 1,), big, jnp.int32).at[
+        jnp.where(valid, slot, n_slots)].min(gidx)
+    return jnp.where(valid, gidx - start[slot], 0)
+
+
+def _select_set_bits(mask: jax.Array, k: int) -> jax.Array:
+    """Indices of the first ``k`` set bits of bool [n] ``mask``, in
+    ascending order (``n`` where exhausted).
+
+    Gather-based: binary search over the inclusive cumsum. The obvious
+    scatter (``zeros(k).at[rank].set(iota)``) carries *n* updates, and
+    XLA's CPU scatter executes updates serially — at stack-bank sizes
+    (n = S·D ≈ 65k) one such compaction costs milliseconds, and the
+    resolution sweep runs several per iteration.
+    """
+    csum = jnp.cumsum(mask.astype(jnp.int32))
+    ks = jnp.arange(1, k + 1, dtype=jnp.int32)
+    return jnp.searchsorted(csum, ks, side="left").astype(jnp.int32)
+
+
+def _free_entry_order(isfree: jax.Array) -> jax.Array:
+    """``eor[s, r]`` = entry id of the r-th free entry of slot ``s``
+    (``d_cap`` when exhausted) — row-wise :func:`_select_set_bits`, for
+    the same serial-scatter reason."""
+    d_cap = isfree.shape[1]
+    frank = jnp.cumsum(isfree.astype(jnp.int32), axis=1)
+    ks = jnp.arange(1, d_cap + 1, dtype=jnp.int32)
+    return jax.vmap(
+        lambda row: jnp.searchsorted(row, ks, side="left"))(
+            frank).astype(jnp.int32)
+
+
+def _resolution_sweep(qb: QueryBank, tb: PatternStoreBank, lanes: dict,
+                      learn_enabled: jax.Array, batch: int
+                      ) -> tuple[PatternStoreBank, dict, jax.Array,
+                                 StoreCounters]:
+    """One Lemma-4 resolution pass over every slot's stack.
+
+    Phase A folds *every* resolved (RES) child into its parent: Γ|=child
+    Γ unless the child reported, outstanding -= child count, child
+    entries freed (resolved roots are freed directly). outstanding and
+    reported fold with conflict-free scatter add/max; the Γ OR-fold has
+    no scatter-or primitive, so children are sorted by parent and
+    OR-reduced with a segmented associative scan — a kpr-way fan-out
+    folds in one sweep instead of kpr winner-per-parent sweeps, which
+    kept the drain loop spinning for hundreds of iterations. Phase B
+    finalizes up to ``batch`` subtree-exhausted WAIT entries
+    (outstanding == 0, no pending leftover — LEFT is a distinct state):
+    the μ==0-vs-μ>0 conversion of ``SegmentPool.finalize_row`` and the
+    Δ store of ``queue_store`` become lanes, and the entry turns RES
+    carrying the *converted* Γ for the next phase-A fold. One sweep per
+    expansion iteration keeps resolution concurrent with the DFS;
+    leftover unresolved state legally persists across dispatches.
+
+    Returns (tb, lanes, per-slot stores int32 [S], insert counters).
+    """
+    state, gamma = lanes["state"], lanes["gamma"]
+    outstanding, reported = lanes["outstanding"], lanes["reported"]
+    s_dim, d_dim = state.shape
+    s_grid = jnp.broadcast_to(jnp.arange(s_dim)[:, None], (s_dim, d_dim))
+
+    # ---- phase A: fold resolved children into their parents ------------
+    res_m = state == STK_RES
+    par = lanes["parent"]
+    res_child = res_m & (par >= 0)        # RES roots free directly
+    n_flat = s_dim * d_dim
+    # compact to the first 2*batch resolved children (one iteration
+    # creates at most ``batch`` RES rows at expansion + ``batch`` at
+    # phase-B finalize; stragglers legally wait a sweep) so the sort
+    # below runs over O(batch), not the whole stack
+    b_cap = 2 * batch
+    child_i = _select_set_bits(res_child.reshape(-1), b_cap)
+    valid_c = child_i < n_flat
+    ci = child_i.clip(0, n_flat - 1)
+    rep_flat = reported.reshape(-1)
+    gam_flat = gamma.reshape(n_flat, -1)
+    pgid_all = (s_grid * d_dim + par).reshape(-1)
+    pg = jnp.where(valid_c, pgid_all[ci], n_flat)   # n_flat = dump row
+    crep = rep_flat[ci]
+
+    cnt = jnp.zeros((n_flat + 1,), jnp.int32).at[pg].add(1)[:n_flat]
+    rep_fold = jnp.zeros((n_flat + 1,), bool).at[pg].max(crep)[:n_flat]
+
+    # a RES parent never has RES children (it finalized with
+    # outstanding == 0), so the per-parent OR below is race-free: sort
+    # the taken children by parent and OR-reduce with a segmented scan —
+    # there is no scatter-or primitive, and winner-per-parent sweeps
+    # made a kpr-way fan-out take kpr drain iterations
+    order = jnp.argsort(pg)
+    ps = pg[order]
+    gs = jnp.where((valid_c & ~crep)[order, None],
+                   gam_flat[ci[order]], 0)  # a reported child folds no Γ
+
+    def _seg_or(a, b):
+        fa, va = a
+        fb, vb = b
+        return fa | fb, jnp.where(fb[..., None], vb, va | vb)
+
+    seg_new = jnp.concatenate(
+        [jnp.ones((1,), bool), ps[1:] != ps[:-1]])
+    _, acc = lax.associative_scan(_seg_or, (seg_new, gs))
+    is_end = jnp.concatenate(
+        [ps[1:] != ps[:-1], jnp.ones((1,), bool)]) & (ps < n_flat)
+    # segment ends carry the full OR and hit unique parents
+    contrib = jnp.zeros((n_flat + 1, gamma.shape[-1]), gamma.dtype).at[
+        jnp.where(is_end, ps, n_flat)].set(acc)[:n_flat]
+    gamma = (gam_flat | contrib).reshape(gamma.shape)
+    reported = rep_flat.reshape(s_dim, d_dim) | rep_fold.reshape(
+        s_dim, d_dim)
+    outstanding = outstanding - cnt.reshape(s_dim, d_dim)
+    state_flat = state.reshape(-1).at[child_i].set(
+        jnp.int8(STK_FREE), mode="drop")      # folded children freed
+    state = jnp.where(res_m & (par < 0), jnp.int8(STK_FREE),
+                      state_flat.reshape(s_dim, d_dim))
+
+    # ---- phase B: finalize subtree-exhausted WAIT entries --------------
+    fin = (state == STK_WAIT) & (outstanding == 0)
+    bsel = _select_set_bits(fin.reshape(-1), batch)
+    valid_b = bsel < n_flat
+    bclip = bsel.clip(0, n_flat - 1)
+    slot_b = jnp.where(valid_b, bclip // d_dim, 0)
+    ent_b = jnp.where(valid_b, bclip % d_dim, 0)
+
+    d_b = lanes["depth"][slot_b, ent_b]
+    gm = gamma[slot_b, ent_b]                       # [B, MW]
+    rep_b = reported[slot_b, ent_b]
+    fr_b = lanes["frontier"][slot_b, ent_b]
+    ph_b = lanes["phi"][slot_b, ent_b]
+    # finalize_row's conversion: Γ mentions position d → the row's own
+    # Eq. 2 neighbourhood joins and everything >= d is cut
+    qnbr_b = _pack_mask_rows(qb.nbr_mask[slot_b, d_b])
+    has_bit = ((gm & _position_bits(d_b)) != 0).any(axis=1)
+    gconv = jnp.where(has_bit[:, None],
+                      (gm | qnbr_b) & _below_bits_rows(d_b), gm)
+    key_pos = (d_b - 1).clip(0)
+    key_v = jnp.take_along_axis(fr_b, key_pos[:, None], axis=1)[:, 0]
+    mu = _mask_bitlen(gconv & _below_bits_rows(key_pos))
+    phi_v = jnp.take_along_axis(ph_b, mu[:, None], axis=1)[:, 0]
+    do_store = (valid_b & ~rep_b & (d_b >= 1)
+                & qb.learn[slot_b] & learn_enabled)
+    tb, pat_c = store_patterns_mq(tb, slot_b, key_pos, key_v, phi_v, mu,
+                                  gconv, do_store)
+
+    state = state.reshape(-1).at[bsel].set(
+        jnp.int8(STK_RES), mode="drop").reshape(s_dim, d_dim)
+    sb_eff = jnp.where(valid_b, slot_b, s_dim)
+    gamma = gamma.at[sb_eff, ent_b].set(gconv, mode="drop")
+
+    stores = _slot_counts(slot_b, do_store, s_dim)
+    lanes = dict(lanes, state=state, gamma=gamma, outstanding=outstanding,
+                 reported=reported)
+    return tb, lanes, stores, pat_c
+
+
+@functools.partial(jax.jit, donate_argnums=(2, 3), static_argnames=(
+    "kpr", "emb_cap", "backend", "wave"))
+def run_device_megastep(g: GraphArrays, qb: QueryBank,
+                        tb: PatternStoreBank, sb: StackBank,
+                        in_root: jax.Array, in_rid: jax.Array,
+                        in_slot: jax.Array, in_valid: jax.Array,
+                        active: jax.Array, id_base: jax.Array,
+                        learn_enabled: jax.Array, t_max: jax.Array,
+                        kpr: int = 8, emb_cap: int = 512,
+                        backend: str = "jnp",
+                        wave: int | None = None) -> DeviceResult:
+    """One dispatch of the device-resident scheduler loop.
+
+    Admits root rows into free stack entries, then runs up to ``t_max``
+    repack→expand→resolve iterations entirely on device: each iteration
+    pops a mixed wave of pending entries off the per-slot LIFOs (DFS
+    order, waterfill quota across slots), expands it (Eq. 2 refinement,
+    injectivity, top-kpr extraction, Eq. 7 dead-end probe — fresh
+    entries — or re-extraction from the stored leftover bitmap — LEFT
+    entries), allocates surviving non-last children as new stack
+    entries, emits last-level children into the embedding buffer, stores
+    Lemma-1 patterns in-loop, and runs one Lemma-4 resolution sweep.
+    A final progress-bounded drain resolves what the iterations left.
+
+    Children that find no free entry fold back into their parent's
+    leftover bitmap (the entry re-queues as LEFT), so a full stack
+    degrades to throttling, never to lost work. ``t_max`` is traced —
+    the adaptive scheduler drops it to 1 under high prune rates without
+    recompiling. Only this digest (per-slot scalars + the embedding
+    batch) crosses back to the host.
+    """
+    # the root-intake width ``r`` is decoupled from the wave width
+    # ``f``: a dispatch can land more roots than one wave expands, so a
+    # fresh query batch reaches the device in one call instead of
+    # trickling across several fixed-cost dispatches
+    r = in_root.shape[0]
+    f = wave if wave is not None else r
+    n_slots, d_cap = sb.state.shape
+    w = sb.used.shape[2]
+    assert emb_cap >= f * kpr, "emb buffer cannot hold one iteration"
+    f_rows = jnp.arange(f)
+    # per-iteration allocation bound: overflow children fold back into
+    # their parent's leftover bitmap, so this only throttles, and it
+    # keeps the per-row lane-scatter cost off the f·kpr padding
+    a_cap = min(8 * f, f * kpr)
+
+    lanes = dict(frontier=sb.frontier, used=sb.used, phi=sb.phi,
+                 depth=sb.depth, cand=sb.cand, state=sb.state,
+                 gamma=sb.gamma, outstanding=sb.outstanding,
+                 reported=sb.reported, parent=sb.parent,
+                 pstack=sb.pstack, ptop=sb.ptop)
+
+    # ---- root admission: place accepted inputs into free entries -------
+    # Inputs are grouped by slot. Acceptance is throttled so a dispatch
+    # leaves allocation headroom; unaccepted roots stay queued on the
+    # host (the cursor only advances by d_accepted).
+    isfree = lanes["state"] == STK_FREE
+    free_n = isfree.sum(axis=1).astype(jnp.int32)
+    n_in = _slot_counts(in_slot, in_valid, n_slots)
+    accept_s = jnp.where(active, jnp.minimum(n_in, free_n // (kpr + 2)), 0)
+    rank_in = _group_rank(in_slot, in_valid, n_slots)
+    acc = in_valid & (rank_in < accept_s[in_slot])
+
+    eor = _free_entry_order(isfree)
+    ent_in = eor[in_slot, rank_in.clip(0, d_cap - 1)]
+    ok_in = acc & (ent_in < d_cap)
+    tgt_s = jnp.where(ok_in, in_slot, n_slots)
+    tgt_e = jnp.where(ok_in, ent_in, 0)
+
+    root_f = jnp.where(jnp.arange(N_PAD)[None, :] == 0,
+                       in_root[:, None], -1).astype(jnp.int32)
+    rv = in_root.clip(0)
+    root_u = jnp.zeros((r, w), jnp.uint32).at[
+        jnp.arange(r), (rv // 32)].set(jnp.uint32(1) << (rv % 32).astype(
+            jnp.uint32))
+    root_p = jnp.where(jnp.arange(N_PAD + 1)[None, :] == 1,
+                       in_rid[:, None], 0).astype(jnp.int32)
+
+    lanes["frontier"] = lanes["frontier"].at[tgt_s, tgt_e].set(
+        root_f, mode="drop")
+    lanes["used"] = lanes["used"].at[tgt_s, tgt_e].set(root_u, mode="drop")
+    lanes["phi"] = lanes["phi"].at[tgt_s, tgt_e].set(root_p, mode="drop")
+    lanes["depth"] = lanes["depth"].at[tgt_s, tgt_e].set(1, mode="drop")
+    lanes["state"] = lanes["state"].at[tgt_s, tgt_e].set(
+        jnp.int8(STK_FRESH), mode="drop")
+    lanes["gamma"] = lanes["gamma"].at[tgt_s, tgt_e].set(
+        jnp.uint32(0), mode="drop")
+    lanes["outstanding"] = lanes["outstanding"].at[tgt_s, tgt_e].set(
+        0, mode="drop")
+    lanes["reported"] = lanes["reported"].at[tgt_s, tgt_e].set(
+        False, mode="drop")
+    lanes["parent"] = lanes["parent"].at[tgt_s, tgt_e].set(-1, mode="drop")
+    lanes["cand"] = lanes["cand"].at[tgt_s, tgt_e].set(
+        jnp.uint32(0), mode="drop")
+    push_pos = jnp.where(ok_in, lanes["ptop"][in_slot] + rank_in, 0)
+    lanes["pstack"] = lanes["pstack"].at[tgt_s, push_pos].set(
+        ent_in, mode="drop")
+    d_accepted = _slot_counts(in_slot, ok_in, n_slots)
+    lanes["ptop"] = lanes["ptop"] + d_accepted
+
+    zs = jnp.zeros((n_slots,), jnp.int32)
+    carry = dict(
+        tb=tb, it=jnp.int32(0),
+        emb_frontier=jnp.full((emb_cap, N_PAD), -1, jnp.int32),
+        emb_slot=jnp.zeros((emb_cap,), jnp.int32), n_emb=jnp.int32(0),
+        id_ctr=jnp.asarray(id_base, jnp.int32),
+        pat=StoreCounters.zeros(n_slots),
+        d_expanded=zs, d_rows=zs, d_prunes=zs, d_inj=zs, d_stored=zs,
+        **lanes)
+
+    lane_keys = tuple(lanes.keys())
+
+    def cond(s):
+        return ((s["it"] < t_max)
+                & (jnp.where(active, s["ptop"], 0) > 0).any()
+                & (s["n_emb"] + f * kpr <= emb_cap))
+
+    def body(s):
+        st, ptop = s["state"], s["ptop"]
+
+        # ---- wave selection: waterfill quota over pending slots --------
+        pend = jnp.where(active, ptop, 0)
+        free_now = (st == STK_FREE).sum(axis=1).astype(jnp.int32)
+        quota_cap = jnp.maximum(free_now // (kpr + 1), 1)
+        desire = jnp.minimum(pend, quota_cap)
+        n_act = jnp.maximum((desire > 0).sum(), 1)
+        base = jnp.int32(f) // n_act
+        q1 = jnp.minimum(desire, base)
+        want = desire - q1
+        rem = jnp.int32(f) - q1.sum()
+        extra = jnp.clip(jnp.minimum(
+            want, rem - (jnp.cumsum(want) - want)), 0, None)
+        q = q1 + extra                                       # [S]
+        offs = jnp.cumsum(q) - q
+        total = q.sum()
+        s_of = jnp.searchsorted(jnp.cumsum(q), f_rows,
+                                side="right").astype(jnp.int32)
+        row_valid = f_rows < total
+        s_of_c = jnp.where(row_valid, s_of, 0).clip(0, n_slots - 1)
+        k_in = (f_rows - offs[s_of_c]).clip(0)
+        ent_sel = s["pstack"][s_of_c, (ptop[s_of_c] - 1 - k_in).clip(0)]
+        e_c = jnp.where(row_valid, ent_sel, 0)
+        ptop2 = ptop - q
+
+        wf = s["frontier"][s_of_c, e_c]
+        wu = s["used"][s_of_c, e_c]
+        wphi = s["phi"][s_of_c, e_c]
+        wd = s["depth"][s_of_c, e_c]
+        wcand = s["cand"][s_of_c, e_c]
+        wg = s["gamma"][s_of_c, e_c]
+        st_sel = st[s_of_c, e_c]
+        is_left = (st_sel == STK_LEFT) & row_valid
+        is_fresh = (st_sel == STK_FRESH) & row_valid
+
+        # ---- expansion (fresh: full Eq.2 pass; LEFT: re-extraction) ----
+        refined = refine_eq2_mq(g, qb, s_of_c, wf, wd, backend)
+        refined = jnp.where(is_fresh[:, None], refined, jnp.uint32(0))
+        refined_empty = is_fresh & (_popcount_rows(refined) == 0)
+
+        inj_words = refined & wu
+        n_inj_row = jnp.where(is_fresh, _popcount_rows(inj_words), 0)
+        depth_bits = _position_bits(wd)
+
+        # vectorized over positions (no fori_loop): position bits are
+        # disjoint across p, so the OR-fold is an exact integer sum
+        verts = wf.clip(0)                                   # [F, NP]
+        words = jnp.take_along_axis(refined, verts // 32, axis=1)
+        hit = ((words >> (verts % 32).astype(jnp.uint32)) & 1) > 0
+        hit &= (jnp.arange(N_PAD)[None, :] < wd[:, None]) \
+            & is_fresh[:, None]
+        posb = _position_bits(jnp.arange(N_PAD, dtype=jnp.int32))
+        inj_mask = (hit[:, :, None].astype(jnp.uint32)
+                    * posb[None, :, :]).sum(axis=1, dtype=jnp.uint32)
+        inj_mask = inj_mask | jnp.where(hit.any(axis=1)[:, None],
+                                        depth_bits, jnp.uint32(0))
+
+        live = jnp.where(is_left[:, None], wcand, refined & ~wu)
+        child_v, leftover, n_leftover = _extract_topk_packed(live, kpr)
+        prune, prune_mask, tb_l = deadend_lookup_children_mq(
+            s["tb"], wphi, s_of_c, wd, child_v)
+        child_valid = (child_v >= 0) & ~prune & row_valid[:, None]
+        partial = jnp.where(is_left[:, None], prune_mask,
+                            inj_mask | prune_mask)
+        n_pruned_row = jnp.where(row_valid, prune.sum(axis=1), 0)
+
+        # ---- materialize children (flat [F*kpr], slot-grouped) ---------
+        parent_local = jnp.repeat(jnp.arange(f, dtype=jnp.int32), kpr)
+        flat_v = child_v.reshape(-1)
+        cvalid_flat = child_valid.reshape(-1)
+        d_par = wd[parent_local]
+        slot_flat = s_of_c[parent_local]
+        is_last = wd + 1 == qb.n_query[s_of_c]
+        last_flat = is_last[parent_local]
+        pos = jnp.arange(N_PAD)
+        cf2 = wf[parent_local]
+        cf2 = jnp.where((pos[None, :] == d_par[:, None])
+                        & cvalid_flat[:, None], flat_v[:, None], cf2)
+        vv = flat_v.clip(0)
+
+        # ---- embeddings: last-level children, no allocation ------------
+        emb_valid = cvalid_flat & last_flat
+        emb_off = jnp.cumsum(emb_valid.astype(jnp.int32)) - 1
+        emb_idx = jnp.where(emb_valid, s["n_emb"] + emb_off, emb_cap)
+        emb_frontier = s["emb_frontier"].at[emb_idx].set(cf2, mode="drop")
+        emb_slot = s["emb_slot"].at[emb_idx].set(slot_flat, mode="drop")
+        n_emb_new = emb_valid.sum().astype(jnp.int32)
+        n_emb_row = (child_valid & is_last[:, None]).sum(
+            axis=1).astype(jnp.int32)
+
+        # ---- allocate non-last children into free entries --------------
+        # compacted to at most ``a_cap`` rows: the CPU backend executes
+        # scatter updates serially, so every lane scatter below costs
+        # per-row — and most of the F·kpr child rows are dead padding.
+        # Children past the cap simply fold back into their parent's
+        # leftover bitmap (LEFT requeue), the same sound degradation as
+        # running out of free entries.
+        eor_l = _free_entry_order(st == STK_FREE)
+        app_valid = cvalid_flat & ~last_flat
+        a_sel = _select_set_bits(app_valid, a_cap)           # [A]
+        a_valid = a_sel < f * kpr
+        a_i = a_sel.clip(0, f * kpr - 1)
+        slot_a = slot_flat[a_i]
+        par_a = parent_local[a_i]
+        j = _group_rank(slot_a, a_valid, n_slots)
+        ent_ch = eor_l[slot_a, j.clip(0, d_cap - 1)]
+        ok = a_valid & (ent_ch < d_cap)
+        alloc_flag = jnp.zeros((f * kpr,), bool).at[
+            jnp.where(ok, a_sel, f * kpr)].set(True, mode="drop")
+        fail = app_valid & ~alloc_flag
+
+        # children that found no entry fold back into the parent row's
+        # leftover bitmap (distinct vertices → add == or)
+        fold = jnp.zeros((f, w), jnp.uint32).at[
+            parent_local, (vv // 32)].add(
+                jnp.where(fail,
+                          jnp.uint32(1) << (vv % 32).astype(jnp.uint32),
+                          jnp.uint32(0)))
+        leftover = leftover | fold
+        n_leftover = _popcount_rows(leftover)
+
+        ok_s = jnp.where(ok, slot_a, n_slots)
+        ok_e = jnp.where(ok, ent_ch, 0)
+        child_ids = s["id_ctr"] + jnp.cumsum(ok.astype(jnp.int32)) - 1
+        d_par_a = d_par[a_i]
+        vv_a = vv[a_i]
+        cf_a = cf2[a_i]
+        cu_a = wu[par_a] | jnp.zeros((a_cap, w), jnp.uint32).at[
+            jnp.arange(a_cap), (vv_a // 32)].set(
+                jnp.uint32(1) << (vv_a % 32).astype(jnp.uint32))
+        pos_phi = jnp.arange(N_PAD + 1)
+        cp_a = wphi[par_a]
+        cp_a = jnp.where((pos_phi[None, :] == d_par_a[:, None] + 1)
+                         & ok[:, None], child_ids[:, None], cp_a)
+        n_alloc = ok.sum().astype(jnp.int32)
+        n_alloc_row = alloc_flag.reshape(f, kpr).sum(
+            axis=1).astype(jnp.int32)
+        alloc_s = _slot_counts(slot_a, ok, n_slots)
+
+        fr_l = s["frontier"].at[ok_s, ok_e].set(cf_a, mode="drop")
+        us_l = s["used"].at[ok_s, ok_e].set(cu_a, mode="drop")
+        ph_l = s["phi"].at[ok_s, ok_e].set(cp_a, mode="drop")
+        de_l = s["depth"].at[ok_s, ok_e].set(d_par_a + 1, mode="drop")
+        st_l = st.at[ok_s, ok_e].set(jnp.int8(STK_FRESH), mode="drop")
+        gm_l = s["gamma"].at[ok_s, ok_e].set(jnp.uint32(0), mode="drop")
+        ou_l = s["outstanding"].at[ok_s, ok_e].set(0, mode="drop")
+        re_l = s["reported"].at[ok_s, ok_e].set(False, mode="drop")
+        pa_l = s["parent"].at[ok_s, ok_e].set(
+            ent_sel[par_a], mode="drop")
+        ca_l = s["cand"].at[ok_s, ok_e].set(jnp.uint32(0), mode="drop")
+
+        # ---- in-loop Lemma-1 stores (Eq. 2 came back empty) ------------
+        do_store = (refined_empty & (wd >= 1)
+                    & qb.learn[s_of_c] & learn_enabled)
+        qnbr = _pack_mask_rows(qb.nbr_mask[s_of_c, wd])
+        gamma_w = qnbr & _below_bits_rows(wd)
+        key_pos = (wd - 1).clip(0)
+        key_v = jnp.take_along_axis(wf, key_pos[:, None], axis=1)[:, 0]
+        mu = _mask_bitlen(gamma_w & _below_bits_rows(key_pos))
+        phi_id = jnp.take_along_axis(wphi, mu[:, None], axis=1)[:, 0]
+        tb2, pat_c = store_patterns_mq(tb_l, s_of_c, key_pos, key_v,
+                                       phi_id, mu, gamma_w, do_store)
+
+        # ---- update the selected entries -------------------------------
+        has_left = (n_leftover > 0) & row_valid & ~refined_empty
+        new_state = jnp.where(
+            refined_empty, jnp.int8(STK_RES),
+            jnp.where(has_left, jnp.int8(STK_LEFT), jnp.int8(STK_WAIT)))
+        new_g = (wg | partial
+                 | jnp.where(refined_empty[:, None], gamma_w,
+                             jnp.uint32(0)))
+        sel_s = jnp.where(row_valid, s_of_c, n_slots)
+        st_l = st_l.at[sel_s, e_c].set(new_state, mode="drop")
+        gm_l = gm_l.at[sel_s, e_c].set(new_g, mode="drop")
+        ou_l = ou_l.at[sel_s, e_c].set(
+            s["outstanding"][s_of_c, e_c] + n_alloc_row, mode="drop")
+        re_l = re_l.at[sel_s, e_c].set(
+            s["reported"][s_of_c, e_c] | (n_emb_row > 0), mode="drop")
+        ca_l = ca_l.at[sel_s, e_c].set(
+            jnp.where(has_left[:, None], leftover, jnp.uint32(0)),
+            mode="drop")
+
+        # ---- re-queue: LEFT entries below, fresh children on top -------
+        lrank = _group_rank(s_of_c, has_left, n_slots)
+        lpos = jnp.where(has_left, ptop2[s_of_c] + lrank, 0)
+        ps_l = s["pstack"].at[
+            jnp.where(has_left, s_of_c, n_slots), lpos].set(
+                ent_sel, mode="drop")
+        n_left_s = _slot_counts(s_of_c, has_left, n_slots)
+        ptop3 = ptop2 + n_left_s
+        cpos = jnp.where(ok, ptop3[slot_a] + j, 0)
+        ps_l = ps_l.at[jnp.where(ok, slot_a, n_slots), cpos].set(
+            ent_ch, mode="drop")
+        ptop4 = ptop3 + alloc_s
+
+        new_lanes = dict(
+            frontier=fr_l, used=us_l, phi=ph_l, depth=de_l, cand=ca_l,
+            state=st_l, gamma=gm_l, outstanding=ou_l, reported=re_l,
+            parent=pa_l, pstack=ps_l, ptop=ptop4)
+
+        # ---- one resolution sweep per iteration ------------------------
+        tb3, new_lanes, n_stored_fin, pat_f = _resolution_sweep(
+            qb, tb2, new_lanes, learn_enabled, f)
+
+        return dict(
+            tb=tb3, it=s["it"] + 1,
+            emb_frontier=emb_frontier, emb_slot=emb_slot,
+            n_emb=s["n_emb"] + n_emb_new, id_ctr=s["id_ctr"] + n_alloc,
+            pat=s["pat"].add(pat_c).add(pat_f),
+            d_expanded=s["d_expanded"] + _slot_counts(
+                s_of_c, row_valid, n_slots),
+            d_rows=s["d_rows"] + alloc_s,
+            d_prunes=s["d_prunes"] + _slot_counts(
+                s_of_c, row_valid, n_slots, n_pruned_row),
+            d_inj=s["d_inj"] + _slot_counts(
+                s_of_c, row_valid, n_slots, n_inj_row),
+            d_stored=s["d_stored"] + n_stored_fin + _slot_counts(
+                s_of_c, do_store, n_slots),
+            **new_lanes)
+
+    s = lax.while_loop(cond, body, carry)
+
+    # ---- final drain: a few more resolution sweeps ---------------------
+    # Bounded by a small constant, not run to quiescence: each sweep
+    # costs real time even when nearly empty, and unresolved WAIT/RES
+    # state legally persists across dispatches — the next dispatch's
+    # in-loop sweeps (or its own drain) continue the fold, and trailing
+    # resolution-only dispatches are cheap because the expansion loop
+    # exits immediately with nothing pending.
+    def drain_cond(d):
+        can_fold = (d["state"] == STK_RES).any()
+        can_fin = ((d["state"] == STK_WAIT)
+                   & (d["outstanding"] == 0)).any()
+        return (can_fold | can_fin) & (d["it"] < 12)
+
+    def drain_body(d):
+        lanes_d = {k: d[k] for k in lane_keys}
+        tb_d, lanes_d, n_st, pat_d = _resolution_sweep(
+            qb, d["tb"], lanes_d, learn_enabled, f)
+        return dict(d, tb=tb_d, it=d["it"] + 1,
+                    d_stored=d["d_stored"] + n_st,
+                    pat=d["pat"].add(pat_d), **lanes_d)
+
+    s = lax.while_loop(drain_cond, drain_body,
+                       dict(s, it=jnp.int32(0)))
+
+    sb_out = StackBank(**{k: s[k] for k in lane_keys})
+    live = (s["state"] != STK_FREE).sum(axis=1).astype(jnp.int32)
+    return DeviceResult(
+        tb=s["tb"], sb=sb_out,
+        d_accepted=d_accepted, d_expanded=s["d_expanded"],
+        d_rows=s["d_rows"], d_prunes=s["d_prunes"], d_inj=s["d_inj"],
+        d_stored=s["d_stored"], d_pending=s["ptop"], d_live=live,
+        pat_stored=s["pat"].stored, pat_overwrites=s["pat"].overwrites,
+        pat_evictions=s["pat"].evictions, pat_dropped=s["pat"].dropped,
+        emb_frontier=s["emb_frontier"], emb_slot=s["emb_slot"],
+        n_emb=s["n_emb"],
         n_ids=s["id_ctr"] - jnp.asarray(id_base, jnp.int32))
 
 

@@ -148,6 +148,10 @@ class QueryState:
         # device-side eviction/aging (allocated by the scheduler when
         # the table is exported).
         self.hit_counts: dict[tuple[int, int], int] | None = None
+        # packed (depth << 32 | v) int64 hit keys buffered per digest;
+        # folded into hit_counts by materialize_hits() at export time so
+        # the per-wave hot path never touches the Python dict
+        self._hit_buf: list[np.ndarray] = []
         # canonical template fingerprint (patterns.cache) — set at
         # admission so retirement can snapshot under the same key
         self.fingerprint: bytes | None = None
@@ -258,14 +262,37 @@ class QueryState:
         dd = np.broadcast_to(np.asarray(depth)[..., None], pv.shape)
         sel = pv >= 0
         if sel.any():
-            # collapse to one packed int64 key so the dedup is a single
-            # vectorized unique; the Python loop only walks the (few)
-            # distinct keys, not every pruned child
-            flat = (dd[sel].astype(np.int64) << np.int64(32)) | pv[sel]
-            uniq, counts = np.unique(flat, return_counts=True)
-            for f, c in zip(uniq.tolist(), counts.tolist()):
-                key = (int(f >> 32), int(f & 0xFFFFFFFF))
-                self.hit_counts[key] = self.hit_counts.get(key, 0) + c
+            # buffer packed int64 keys; the dict fold happens once in
+            # materialize_hits(), not on every digest
+            self._hit_buf.append(
+                (dd[sel].astype(np.int64) << np.int64(32)) | pv[sel])
+
+    def materialize_hits(self) -> None:
+        """Fold every buffered ``note_hits`` batch into ``hit_counts``
+        with a single ``np.unique``/``bincount`` pass (the old per-key
+        Python loop walked each digest separately)."""
+        if self.hit_counts is None or not self._hit_buf:
+            return
+        buf = self._hit_buf
+        self._hit_buf = []
+        if self.hit_counts:
+            old = np.fromiter(
+                ((np.int64(d) << np.int64(32)) | np.int64(v)
+                 for d, v in self.hit_counts), np.int64,
+                count=len(self.hit_counts))
+            weights = np.concatenate(
+                [np.fromiter(self.hit_counts.values(), np.float64,
+                             count=len(self.hit_counts))]
+                + [np.ones(len(b)) for b in buf])
+            flat = np.concatenate([old] + buf)
+        else:
+            flat = np.concatenate(buf)
+            weights = np.ones(len(flat))
+        uniq, inv = np.unique(flat, return_inverse=True)
+        counts = np.bincount(inv, weights=weights).astype(np.int64)
+        self.hit_counts = {
+            (int(f >> 32), int(f & 0xFFFFFFFF)): int(c)
+            for f, c in zip(uniq.tolist(), counts.tolist())}
 
     def evict(self) -> None:
         """Drop all in-flight work (abort / completion)."""

@@ -68,6 +68,7 @@ import collections
 import dataclasses
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -77,9 +78,13 @@ from ..patterns import (DeadEndStats, PatternCache, PatternStore,
                         PatternStoreBank, age_hits, empty_entries,
                         entries_to_store, store_to_entries)
 from .backtrack import MatchResult, _prepare
-from .engine_step import (MASK_WORDS, N_PAD, GraphArrays, MegaResult,
-                          QueryBank, assemble_children_mq, expand_wave_mq,
-                          extract_more_mq, load_slot, read_store_slot,
+from .engine_step import (MASK_WORDS, N_PAD, STK_FREE, STK_FRESH,
+                          STK_LEFT, STK_RES, STK_WAIT, DeviceResult,
+                          GraphArrays, MegaResult, QueryBank, StackBank,
+                          assemble_children_mq, clear_slot_stack,
+                          clear_slot_stacks, expand_wave_mq,
+                          extract_more_mq, load_slot, load_slots,
+                          read_store_slot, run_device_megastep,
                           run_megastep_mq, store_patterns_mq)
 from .graph import Graph, pack_bitmap
 from .segments import (EngineStats, QueryState, Segment, SegmentPool,
@@ -137,6 +142,20 @@ class _Inflight:
     us: np.ndarray | None = None   # host-side child assembly
     ph: np.ndarray | None = None
     depth_v: np.ndarray | None = None
+
+
+@dataclasses.dataclass
+class _InflightDev:
+    """A dispatched-but-unread device-resident dispatch (stack path).
+
+    The digest is per-slot scalars plus the embedding batch — no per-row
+    lanes ever cross back; ``slot_map`` snapshots slot ownership at
+    dispatch time so a slot recycled mid-flight drops the stale digest.
+    """
+    res: DeviceResult              # unmaterialized device digest
+    slot_map: dict                 # slot -> QueryState at dispatch time
+    root_slots: tuple              # slots whose root batch rode along
+    t_max: int
 
 
 class WaveScheduler:
@@ -237,6 +256,10 @@ class WaveScheduler:
                                          self.pattern_capacity)
         self._empty_store = PatternStore.empty(
             self.pattern_capacity)                      # reused, immutable
+        # cached [k]-stacked empty stores for burst admission (most
+        # admissions carry no seed patterns — stacking on every burst
+        # would cost seven dispatches per flush)
+        self._empty_store_stacks: dict[int, PatternStore] = {}
         self.pool = SegmentPool(self.n_slots)
         self.queue: collections.deque[_Request] = collections.deque()
         self.finished: dict[int, MatchResult] = {}
@@ -246,6 +269,20 @@ class WaveScheduler:
         self._next_qid = 0
         self._rr = 0
         self._inflight: _Inflight | None = None
+        # device-resident frontier stacks (DESIGN.md §2): plain
+        # parallelism-1 queries keep their whole DFS stack in device
+        # arrays and the host only sees per-slot scalar digests.
+        # keep_table / parallelism>1 / single-step traffic stays on the
+        # host SegmentPool path (it needs row-level introspection).
+        self._use_device = (bool(opts.device_stacks)
+                            and self.megastep_depth > 1)
+        self.stack_capacity = int(opts.stack_capacity)
+        # eager: the bank is a construction cost, not a first-query
+        # latency cost (a fresh server's first batch used to pay it)
+        self.sb: StackBank | None = (
+            StackBank.empty(self.n_slots, self.stack_capacity, self.w)
+            if self._use_device else None)
+        self._inflight_dev: _InflightDev | None = None
         # aggregate wave statistics (for occupancy / SLO reporting)
         self.waves = 0
         self.rows_packed = 0
@@ -262,6 +299,12 @@ class WaveScheduler:
         self.t_dispatch_s = 0.0     # pack + async dispatch (host)
         self.t_sync_s = 0.0         # blocked materializing digests
         self.t_host_s = 0.0         # digest processing / bookkeeping
+        # host-time breakdown (disjoint buckets inside the above):
+        # admission / digest fold / query retirement / pattern flush
+        self.t_admit_s = 0.0
+        self.t_digest_s = 0.0
+        self.t_retire_s = 0.0
+        self.t_flush_s = 0.0
 
     # ------------------------------------------------------------------
     # submission / admission
@@ -409,10 +452,16 @@ class WaveScheduler:
         return req
 
     def _admit(self) -> None:
+        # deferred slot installs: one fused load_slots / clear dispatch
+        # for the whole admission burst instead of a per-query jit call
+        # (a fresh batch of k queries used to pay k host dispatches of
+        # ~0.3 ms each before the first wave could launch)
+        loads: list[tuple] = []
+        dev_clears: list[int] = []
         while self.queue:
             slot = self.pool.free_slot()
             if slot is None:
-                return
+                break
             req = self._pop_admission()
             learn = req.learn and self.pool.learning_enabled
             # Δ seed priority: explicit entries (restore / cross-host
@@ -437,9 +486,8 @@ class WaveScheduler:
                 store = entries_to_store(entries, self.pattern_capacity)
             else:
                 store = self._empty_store
-            self.qb, self.tb = load_slot(
-                self.qb, self.tb, np.int32(slot), req.cand_bitmap,
-                req.nbr_mask, np.int32(req.n), store, learn)
+            loads.append((slot, req.cand_bitmap, req.nbr_mask,
+                          req.n, store, learn))
             now = time.perf_counter()
             deadline = (None if req.time_budget_s is None
                         else now + req.time_budget_s)
@@ -467,31 +515,102 @@ class WaveScheduler:
                         q.hit_counts[(int(p), int(v))] = int(h)
             r = len(req.roots)
             q.stats.rows_created += r
-            # shard-as-segments: one root segment per contiguous slice
-            # of the root-candidate range (parallelism == 1 keeps the
-            # single root segment of the classic schedule)
-            bounds = np.linspace(0, r, q.parallelism + 1).astype(int)
-            for shard in range(q.parallelism):
-                lo, hi = int(bounds[shard]), int(bounds[shard + 1])
-                if hi <= lo:
-                    continue
-                roots = req.roots[lo:hi]
-                k = hi - lo
-                frontier = np.full((k, N_PAD), -1, np.int32)
-                frontier[:, 0] = roots
-                used = np.zeros((k, self.w), np.uint32)
-                used[np.arange(k), roots // 32] = (
-                    np.uint32(1) << (roots.astype(np.uint32)
-                                     % np.uint32(32)))
-                phi = np.zeros((k, N_PAD + 1), np.int32)
-                base = self.pool.alloc_ids(k)
-                phi[:, 1] = np.arange(base, base + k)
-                root_seg = q.new_segment(1, frontier, used, phi,
-                                         np.full(k, -1, np.int32),
-                                         np.zeros(k, np.int32),
-                                         shard=shard)
-                q.push(WorkItem(root_seg.seg_id, 0, k, "fresh", shard))
+            if (self._use_device and q.parallelism == 1
+                    and not req.keep_table):
+                # device-resident stack path: no host segments — roots
+                # trickle onto the device stack as it has headroom (the
+                # cursor advances by the digest's per-slot accept count)
+                q.device = True
+                q.pending_roots = req.roots
+                q.root_cursor = 0
+                q.dev_roots_inflight = False
+                q.dev_wedge = 0
+                q.dev_sig = None
+                if self.sb is None:
+                    self.sb = StackBank.empty(
+                        self.n_slots, self.stack_capacity, self.w)
+                else:
+                    dev_clears.append(slot)
+            else:
+                self._admit_host_roots(q, req.roots)
             self.pool.attach(slot, q)
+        self._flush_slot_loads(loads, dev_clears)
+
+    def _flush_slot_loads(self, loads: list[tuple],
+                          dev_clears: list[int]) -> None:
+        """Install an admission burst's bank rows in O(1) dispatches.
+
+        Bursts are padded to the next power of two (pad rows carry slot
+        index ``n_slots`` and are dropped by the scatter) so the number
+        of distinct compiled shapes stays ``log2(n_slots) + 1`` per
+        function instead of one compilation — and one dispatch — per
+        admitted query."""
+        if dev_clears:
+            if len(dev_clears) == 1:
+                self.sb = clear_slot_stack(self.sb,
+                                           np.int32(dev_clears[0]))
+            else:
+                k = 1 << (len(dev_clears) - 1).bit_length()
+                slots = np.full((k,), self.n_slots, np.int32)
+                slots[:len(dev_clears)] = dev_clears
+                self.sb = clear_slot_stacks(self.sb, slots)
+        if not loads:
+            return
+        if len(loads) == 1:
+            slot, cb, nm, n, store, learn = loads[0]
+            self.qb, self.tb = load_slot(
+                self.qb, self.tb, np.int32(slot), cb, nm,
+                np.int32(n), store, learn)
+            return
+        k = 1 << (len(loads) - 1).bit_length()
+        rows = loads + [loads[-1]] * (k - len(loads))
+        slots = np.full((k,), self.n_slots, np.int32)
+        slots[:len(loads)] = [r[0] for r in loads]
+        if all(r[4] is self._empty_store for r in rows):
+            store = self._empty_store_stacks.get(k)
+            if store is None:
+                store = jax.tree.map(
+                    lambda x: jnp.broadcast_to(x, (k,) + x.shape),
+                    self._empty_store)
+                self._empty_store_stacks[k] = store
+        else:
+            store = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                 *[r[4] for r in rows])
+        self.qb, self.tb = load_slots(
+            self.qb, self.tb, slots,
+            np.stack([np.asarray(r[1]) for r in rows]),
+            np.stack([np.asarray(r[2]) for r in rows]),
+            np.array([r[3] for r in rows], np.int32), store,
+            np.array([r[5] for r in rows], bool))
+
+    def _admit_host_roots(self, q: QueryState, all_roots: np.ndarray
+                          ) -> None:
+        """Seed host root segments (SegmentPool path). Shard-as-segments:
+        one root segment per contiguous slice of the root-candidate range
+        (``parallelism == 1`` keeps the single root segment of the
+        classic schedule)."""
+        r = len(all_roots)
+        bounds = np.linspace(0, r, q.parallelism + 1).astype(int)
+        for shard in range(q.parallelism):
+            lo, hi = int(bounds[shard]), int(bounds[shard + 1])
+            if hi <= lo:
+                continue
+            roots = all_roots[lo:hi]
+            k = hi - lo
+            frontier = np.full((k, N_PAD), -1, np.int32)
+            frontier[:, 0] = roots
+            used = np.zeros((k, self.w), np.uint32)
+            used[np.arange(k), roots // 32] = (
+                np.uint32(1) << (roots.astype(np.uint32)
+                                 % np.uint32(32)))
+            phi = np.zeros((k, N_PAD + 1), np.int32)
+            base = self.pool.alloc_ids(k)
+            phi[:, 1] = np.arange(base, base + k)
+            root_seg = q.new_segment(1, frontier, used, phi,
+                                     np.full(k, -1, np.int32),
+                                     np.zeros(k, np.int32),
+                                     shard=shard)
+            q.push(WorkItem(root_seg.seg_id, 0, k, "fresh", shard))
 
     # ------------------------------------------------------------------
     # streamed-embedding delivery
@@ -517,7 +636,10 @@ class WaveScheduler:
     # completion / abort / cancellation
     # ------------------------------------------------------------------
     def _finish(self, q: QueryState) -> None:
+        t0 = time.perf_counter()
+        f0 = self.t_flush_s
         self._deliver(q)
+        q.materialize_hits()
         want_cache = (self.pattern_cache is not None and q.learn
                       and q.fingerprint is not None)
         if (q.keep_table or want_cache) and q.store_buf:
@@ -581,7 +703,14 @@ class WaveScheduler:
                     old_fp, store_to_entries(old_snap, old_hits))
         self.finished[q.query_id] = MatchResult(q.embeddings, q.stats)
         self._fresh_done.append(q.query_id)
+        if getattr(q, "device", False) and self.sb is not None:
+            # release the slot's device stack; the clear chains in
+            # program order after any in-flight dispatch (the handle is
+            # that dispatch's output), so live entries cannot revive
+            self.sb = clear_slot_stack(self.sb, np.int32(q.slot))
         self.pool.release(q.slot)
+        self.t_retire_s += (time.perf_counter() - t0
+                            - (self.t_flush_s - f0))
 
     def _abort(self, q: QueryState, reason: str) -> None:
         """Abort a query (budget exhausted or limit reached) and evict
@@ -834,12 +963,15 @@ class WaveScheduler:
         bufs = self._pending_stores()
         if not bufs:
             return
+        t0 = time.perf_counter()
         if not self.pool.learning_enabled:
             for q, buf in bufs:
                 buf.clear()
+            self.t_flush_s += time.perf_counter() - t0
             return
         total = sum(len(buf) for _, buf in bufs)
         if not force and total < self.store_flush_min:
+            self.t_flush_s += time.perf_counter() - t0
             return
         dedup = self._drain_dedup(bufs, None)
         n_pad = 16
@@ -849,6 +981,7 @@ class WaveScheduler:
             self.tb, *self._pack_store_batch(dedup, n_pad))
         self._flush_ctr_dev = (counters if self._flush_ctr_dev is None
                                else self._flush_ctr_dev.add(counters))
+        self.t_flush_s += time.perf_counter() - t0
 
     def _materialize_flush_counters(self) -> None:
         """Fold the accumulated flush counters into stats. Correct
@@ -864,13 +997,16 @@ class WaveScheduler:
         """Drain up to ``store_pad`` host-queued pattern stores into the
         fixed-length arrays that ride the next megastep dispatch.
         Leftover entries stay queued for the next wave."""
+        t0 = time.perf_counter()
         bufs = self._pending_stores()
         if not self.pool.learning_enabled:
             for q, buf in bufs:
                 buf.clear()
             bufs = []
-        return self._pack_store_batch(
+        out = self._pack_store_batch(
             self._drain_dedup(bufs, self.store_pad), self.store_pad)
+        self.t_flush_s += time.perf_counter() - t0
+        return out
 
     # ------------------------------------------------------------------
     # one scheduling step (double-buffered pipeline)
@@ -884,7 +1020,9 @@ class WaveScheduler:
         device compute (double buffering).
         """
         self._check_budgets()
+        t_a = time.perf_counter()
         self._admit()
+        self.t_admit_s += time.perf_counter() - t_a
         if self.waves - self._last_aged_wave >= self.hit_decay_every:
             # age the device hit counters so eviction ranks *recent*
             # usefulness (stale hot entries decay back into candidates);
@@ -893,7 +1031,27 @@ class WaveScheduler:
             self._last_aged_wave = self.waves
         if self.megastep_depth <= 1:
             return self._step_single()
-        if self._prune_ema > self.adaptive_prune_threshold:
+        ema_high = self._prune_ema > self.adaptive_prune_threshold
+        # device-resident pipeline: dispatched before any host-side
+        # digest processing so device compute overlaps it. Under a high
+        # prune EMA the dispatch runs with t_max=1 (traced, no
+        # recompile) — the paper's tight store→lookup cadence.
+        retired_dev = False
+        if self._inflight_dev is not None and self._device_tail():
+            # tail regime (every root already on device): retire the
+            # in-flight call *before* dispatching, so a pool that just
+            # completed skips the speculative trailing dispatch — at
+            # tail the lost dispatch/retire overlap is worth less than
+            # a wasted fixed-cost device call
+            sync_dev, self._inflight_dev = self._inflight_dev, None
+            self._retire_device(sync_dev)
+            retired_dev = True
+        t0 = time.perf_counter()
+        rec_dev = self._dispatch_device(
+            1 if ema_high else self.megastep_depth)
+        self.t_dispatch_s += time.perf_counter() - t0
+        prev_dev, self._inflight_dev = self._inflight_dev, rec_dev
+        if ema_high:
             # failure-heavy regime: drain the pipeline and fall back to
             # the synchronous single-step schedule so every wave sees
             # the patterns learned from the one before it.
@@ -903,23 +1061,293 @@ class WaveScheduler:
                     self._retire_mega(prev)
                 else:
                     self._retire_leftover(prev)
-            return self._step_single() or prev is not None
+            progressed = self._step_single() or prev is not None
+        else:
+            t0 = time.perf_counter()
+            picks = self._pack_wave()
+            rec: _Inflight | None = None
+            if picks is not None:
+                if self._wave_kind == "fresh":
+                    rec = self._dispatch_mega(picks)
+                else:
+                    rec = self._dispatch_leftover(picks)
+            self.t_dispatch_s += time.perf_counter() - t0
+            prev, self._inflight = self._inflight, rec
+            if prev is not None:
+                if prev.kind == "mega":
+                    self._retire_mega(prev)
+                else:
+                    self._retire_leftover(prev)
+            progressed = prev is not None or rec is not None
+        if prev_dev is not None:
+            self._retire_device(prev_dev)
+        return (progressed or retired_dev or prev_dev is not None
+                or rec_dev is not None)
+
+    # ------------------------------------------------------------------
+    # device-resident stack dispatch / retire (DESIGN.md §2)
+    # ------------------------------------------------------------------
+    def _device_tail(self) -> bool:
+        """True when every device query's roots are already on device —
+        there is nothing left to feed, so dispatches only continue the
+        device-resident expansion/resolution."""
+        if self.queue:
+            return False             # queued admissions bring new roots
+        devq = [q for q in self.pool.active_queries()
+                if getattr(q, "device", False)]
+        return bool(devq) and not any(
+            len(q.pending_roots) > q.root_cursor for q in devq)
+
+    def _dispatch_device(self, t_max: int) -> _InflightDev | None:
+        """Dispatch one device-resident scheduling step: feed pending
+        roots into slots with headroom and let the device repack, expand
+        and resolve up to ``t_max`` waves from its per-slot stacks. The
+        host never sees rows — only the per-slot scalar digest."""
+        devq = [q for q in self.pool.active_queries()
+                if getattr(q, "device", False)]
+        if not devq or self.sb is None:
+            return None
+        devq.sort(key=lambda q: q.slot)      # _group_rank wants slot order
+        # root intake is wider than the wave: a fresh batch's roots land
+        # in one dispatch instead of trickling across several
+        f = 2 * self.wave_size
+        in_root = np.full(f, -1, np.int32)
+        in_rid = np.zeros(f, np.int32)
+        in_slot = np.zeros(f, np.int32)
+        in_valid = np.zeros(f, bool)
+        active = np.zeros(self.n_slots, bool)
+        root_slots = []
+        off = 0
+        for q in devq:
+            active[q.slot] = True
+            if q.dev_roots_inflight:
+                continue                     # previous batch unacked
+            rest = len(q.pending_roots) - q.root_cursor
+            if rest <= 0 or off >= f:
+                continue
+            k = min(rest, f - off)
+            roots = q.pending_roots[q.root_cursor:q.root_cursor + k]
+            base = self.pool.alloc_ids(k)
+            in_root[off:off + k] = roots
+            in_rid[off:off + k] = np.arange(base, base + k,
+                                            dtype=np.int32)
+            in_slot[off:off + k] = q.slot
+            in_valid[off:off + k] = True
+            q.dev_roots_inflight = True
+            root_slots.append(q.slot)
+            off += k
+        if t_max > 1 and off == 0 and not any(
+                len(q.pending_roots) > q.root_cursor for q in devq):
+            # tail regime: every root is already on device, so there is
+            # no admission granularity left to preserve — deepen the
+            # call to amortize its fixed dispatch cost (t_max is traced,
+            # so this changes no compilation)
+            t_max = 2 * t_max
+        # worst-case fresh-id reservation for the in-loop allocations —
+        # reserving up front keeps the dispatch fully async
+        id_base = self.pool.alloc_ids(t_max * f * self._mega_kpr)
+        self._reset_learning_on_overflow()
+        res = run_device_megastep(
+            self.g, self.qb, self.tb, self.sb, in_root, in_rid, in_slot,
+            in_valid, active, np.int32(id_base),
+            bool(self.pool.learning_enabled), np.int32(t_max),
+            kpr=self._mega_kpr, emb_cap=self._emb_cap,
+            backend=self._kernel_backend, wave=self.wave_size)
+        self.tb = res.tb                     # handles only — not
+        self.sb = res.sb                     # materialized
+        # wave/occupancy/EMA accounting happens at retire time, where
+        # the digest says whether the wave actually carried work — the
+        # trailing empty dispatches that detect completion must not
+        # dilute occupancy or decay the adaptive-depth EMA
+        return _InflightDev(res, {q.slot: q for q in devq},
+                            tuple(root_slots), t_max)
+
+    def _retire_device(self, rec: _InflightDev) -> None:
+        """Fold one device-resident digest: per-slot scalars into query
+        stats (no per-row lanes exist), the embedding batch out to the
+        owning queries, then completion / budget / wedge checks."""
+        res = rec.res
         t0 = time.perf_counter()
-        picks = self._pack_wave()
-        rec: _Inflight | None = None
-        if picks is not None:
-            if self._wave_kind == "fresh":
-                rec = self._dispatch_mega(picks)
+        d_accepted = np.asarray(res.d_accepted)
+        d_expanded = np.asarray(res.d_expanded)
+        d_rows = np.asarray(res.d_rows)
+        d_prunes = np.asarray(res.d_prunes)
+        d_inj = np.asarray(res.d_inj)
+        d_stored = np.asarray(res.d_stored)
+        d_pending = np.asarray(res.d_pending)
+        d_live = np.asarray(res.d_live)
+        n_emb = int(res.n_emb)
+        embF = np.asarray(res.emb_frontier)[:n_emb]
+        embS = np.asarray(res.emb_slot)[:n_emb]
+        t1 = time.perf_counter()
+        self.t_sync_s += t1 - t0
+        r0, f0 = self.t_retire_s, self.t_flush_s
+
+        self._fold_store_counters(
+            (res.pat_stored, res.pat_overwrites, res.pat_evictions,
+             res.pat_dropped), rec.slot_map)
+        self.slot_rows_expanded += d_expanded.astype(np.int64)
+        self.slot_children_created += d_rows.astype(np.int64)
+        expanded_total = int(d_expanded.sum())
+        worked = bool(expanded_total or n_emb or d_accepted.sum())
+        if worked:
+            self.rows_packed += expanded_total
+            occ = min(1.0, expanded_total / (self.wave_size * rec.t_max))
+            self.occ_sum += occ
+            self.waves += 1
+            for q in rec.slot_map.values():
+                if q.active:
+                    q.stats.waves += 1
+            if self.pool.n_active == self.n_slots:
+                self.waves_steady += 1
+                self.occ_sum_steady += occ
+
+        emb_per_slot = (np.bincount(embS, minlength=self.n_slots)
+                        if n_emb else np.zeros(self.n_slots, np.int64))
+
+        # ---- per-query scalar digest fold ------------------------------
+        for slot, q in rec.slot_map.items():
+            if not q.active or not getattr(q, "device", False):
+                continue
+            q.stats.rows_created += int(d_rows[slot])
+            q.stats.deadend_prunes += int(d_prunes[slot])
+            q.stats.injectivity_fails += int(d_inj[slot])
+            q.stats.patterns_stored += int(d_stored[slot])
+            if q.dev_roots_inflight and slot in rec.root_slots:
+                q.root_cursor += int(d_accepted[slot])
+                q.dev_roots_inflight = False
+
+        # ---- embeddings found on device (+ limit aborts) ---------------
+        if n_emb:
+            for sl_v in np.unique(embS):
+                q = rec.slot_map.get(int(sl_v))
+                if q is None or not q.active:
+                    continue
+                rows = embF[embS == sl_v]
+                take = len(rows)
+                if q.limit is not None:
+                    take = min(take, q.limit - q.stats.found)
+                if take > 0:
+                    out = np.empty((take, q.n), np.int32)
+                    out[:, q.order[:q.n]] = rows[:take, :q.n]
+                    q.embeddings.extend(out)
+                    q.stats.found += take
+                    self._deliver(q)       # stream before retirement
+                if q.limit is not None and q.stats.found >= q.limit:
+                    self._abort(q, "limit")
+
+        # ---- completion / budget / wedge checks ------------------------
+        for slot, q in rec.slot_map.items():
+            if not q.active or not getattr(q, "device", False):
+                continue
+            if (q.max_rows is not None
+                    and q.stats.rows_created > q.max_rows):
+                self._abort(q, "rows")
+                continue
+            roots_done = (q.root_cursor >= len(q.pending_roots)
+                          and not q.dev_roots_inflight)
+            if (roots_done and d_pending[slot] == 0
+                    and d_live[slot] == 0):
+                # done — any embedding batch that landed this retire was
+                # already streamed above (the embedding fold runs before
+                # this loop), so consumers observe delivery-then-done
+                # within the same retire and no trailing empty dispatch
+                # is needed to finish the query
+                self._finish(q)
+                continue
+            # wedge detection: a full stack can throttle to a state
+            # where iterations select rows but nothing allocates,
+            # resolves, embeds or stores. After 3 observably identical
+            # digests, export the stack back to host segments.
+            moved = (int(d_accepted[slot]) or int(d_rows[slot])
+                     or int(emb_per_slot[slot]) or int(d_stored[slot])
+                     or int(d_prunes[slot]))
+            sig = (int(d_pending[slot]), int(d_live[slot]))
+            if moved or sig != q.dev_sig:
+                q.dev_wedge = 0
             else:
-                rec = self._dispatch_leftover(picks)
-        self.t_dispatch_s += time.perf_counter() - t0
-        prev, self._inflight = self._inflight, rec
-        if prev is not None:
-            if prev.kind == "mega":
-                self._retire_mega(prev)
-            else:
-                self._retire_leftover(prev)
-        return prev is not None or rec is not None
+                q.dev_wedge += 1
+            q.dev_sig = sig
+            if q.dev_wedge >= 3:
+                self._export_device_query(q)
+        if worked:
+            self._note_prunes(int(d_prunes.sum()), int(d_rows.sum()))
+        dt = time.perf_counter() - t1
+        self.t_host_s += dt
+        self.t_digest_s += max(0.0, dt - (self.t_retire_s - r0)
+                               - (self.t_flush_s - f0))
+
+    def _export_device_query(self, q: QueryState) -> None:
+        """Wedge fallback: materialize one slot's device stack back into
+        host segments (one 1-row segment per live entry, parent links
+        preserved) and route the query through the SegmentPool path from
+        here on. Rare — only when the bounded stack throttles into a
+        no-progress state — and exact: entry lanes carry the identical
+        Lemma-4 bookkeeping the host keeps."""
+        slot = q.slot
+        if self._inflight_dev is not None:
+            # the in-flight dispatch's mutations are already in the
+            # materialized stack (program order): ack its root batch now
+            # and drop its digest for this query at retire time
+            if (q.dev_roots_inflight
+                    and slot in self._inflight_dev.root_slots):
+                q.root_cursor += int(np.asarray(
+                    self._inflight_dev.res.d_accepted)[slot])
+        q.dev_roots_inflight = False
+        q.device = False
+        sb = self.sb
+        st = np.asarray(sb.state[slot])
+        frontier = np.asarray(sb.frontier[slot])
+        used = np.asarray(sb.used[slot])
+        phi = np.asarray(sb.phi[slot])
+        depth = np.asarray(sb.depth[slot])
+        cand = np.asarray(sb.cand[slot])
+        gamma64 = mask64(np.asarray(sb.gamma[slot]))
+        outstanding = np.asarray(sb.outstanding[slot])
+        reported = np.asarray(sb.reported[slot])
+        parent = np.asarray(sb.parent[slot])
+        live = np.nonzero(st != STK_FREE)[0]
+        seg_of: dict[int, Segment] = {}
+        for e in live.tolist():
+            seg = q.new_segment(
+                int(depth[e]), frontier[e:e + 1].copy(),
+                used[e:e + 1].copy(), phi[e:e + 1].copy(),
+                np.full(1, -1, np.int32), np.zeros(1, np.int32))
+            seg_of[e] = seg
+        res_items: list = []
+        for e in live.tolist():
+            seg = seg_of[e]
+            p = int(parent[e])
+            if p >= 0 and p in seg_of:
+                seg.parent_seg[0] = seg_of[p].seg_id
+                seg.parent_row[0] = 0
+            state = int(st[e])
+            if state == STK_FRESH:
+                q.push(WorkItem(seg.seg_id, 0, 1, "fresh", 0))
+                continue
+            seg.expanded[0] = True
+            seg.gamma[0] = gamma64[e]
+            seg.outstanding[0] = int(outstanding[e])
+            seg.reported[0] = bool(reported[e])
+            if state == STK_LEFT:
+                seg.pending_leftover[0] = cand[e]
+                q.push(WorkItem(seg.seg_id, 0, 1, "leftover", 0))
+            elif state == STK_RES:
+                # already finalized on device (pattern stored there)
+                seg.stored[0] = True
+                res_items.append((seg.seg_id, 0, bool(reported[e]),
+                                  gamma64[e]))
+            elif state == STK_WAIT and int(outstanding[e]) == 0:
+                res_items.append(q.finalize_row(seg, 0))
+        q.resolve_rows(res_items)
+        rest = q.pending_roots[q.root_cursor:]
+        if len(rest):
+            self._admit_host_roots(q, rest)
+            q.stats.rows_created -= len(rest)   # counted at admission
+        q.root_cursor = len(q.pending_roots)
+        self.sb = clear_slot_stack(self.sb, np.int32(slot))
+        if not q.segments:
+            self._finish(q)
 
     # ------------------------------------------------------------------
     # megastep dispatch / retire
@@ -975,6 +1403,7 @@ class WaveScheduler:
         embS = np.asarray(res.emb_slot)[:n_emb]
         t1 = time.perf_counter()
         self.t_sync_s += t1 - t0
+        r0, f0 = self.t_retire_s, self.t_flush_s
 
         # ---- Δ store accounting (digest counter lanes) -----------------
         self._fold_store_counters(
@@ -1134,7 +1563,10 @@ class WaveScheduler:
             elif not q.segments:
                 self._finish(q)
         self._note_prunes(int(nprun[:tail].sum()), max(0, tail - f_in))
-        self.t_host_s += time.perf_counter() - t1
+        dt = time.perf_counter() - t1
+        self.t_host_s += dt
+        self.t_digest_s += max(0.0, dt - (self.t_retire_s - r0)
+                               - (self.t_flush_s - f0))
 
     # ------------------------------------------------------------------
     # leftover extraction dispatch / retire (single-step program)
@@ -1163,6 +1595,7 @@ class WaveScheduler:
         pruned_v = np.asarray(res[6])
         t1 = time.perf_counter()
         self.t_sync_s += t1 - t0
+        r0, f0 = self.t_retire_s, self.t_flush_s
         f_pad = self.wave_size
         digest = dict(
             refined_empty=np.zeros(f_pad, bool),
@@ -1173,7 +1606,10 @@ class WaveScheduler:
             pruned_v=pruned_v)
         self._process_wave("leftover", rec.metas, rec.fr, rec.us, rec.ph,
                            rec.depth_v, digest)
-        self.t_host_s += time.perf_counter() - t1
+        dt = time.perf_counter() - t1
+        self.t_host_s += dt
+        self.t_digest_s += max(0.0, dt - (self.t_retire_s - r0)
+                               - (self.t_flush_s - f0))
 
     # ------------------------------------------------------------------
     # single-step wave processing (megastep_depth == 1 reference path,
@@ -1229,8 +1665,12 @@ class WaveScheduler:
                 pruned_v=np.asarray(res[6]))
         t2 = time.perf_counter()
         self.t_sync_s += t2 - t1
+        r0, f0 = self.t_retire_s, self.t_flush_s
         self._process_wave(kind, metas, fr, us, ph, depth_v, digest)
-        self.t_host_s += time.perf_counter() - t2
+        dt = time.perf_counter() - t2
+        self.t_host_s += dt
+        self.t_digest_s += max(0.0, dt - (self.t_retire_s - r0)
+                               - (self.t_flush_s - f0))
         return True
 
     def _process_wave(self, kind: str, metas: list, fr, us, ph, depth_v,
@@ -1297,19 +1737,20 @@ class WaveScheduler:
 
             item_last = seg.depth + 1 == q.n
             if item_last:
-                # complete embeddings
+                # complete embeddings (vectorized gather + permute)
                 emb_rows, emb_cols = np.nonzero(child_valid[sl])
-                for i, j in zip(emb_rows.tolist(), emb_cols.tolist()):
-                    if (q.limit is not None
-                            and q.stats.found >= q.limit):
-                        break
-                    mrow = seg.frontier[s + i].copy()
-                    mrow[seg.depth] = child_v[woff + i, j]
-                    emb = np.empty(q.n, np.int32)
-                    emb[q.order] = mrow[:q.n]
-                    q.embeddings.append(emb)
-                    q.stats.found += 1
-                    seg.reported[s + i] = True
+                take = len(emb_rows)
+                if q.limit is not None:
+                    take = min(take, q.limit - q.stats.found)
+                if take > 0:
+                    mrows = seg.frontier[s + emb_rows[:take]].copy()
+                    mrows[:, seg.depth] = \
+                        child_v[woff + emb_rows[:take], emb_cols[:take]]
+                    out = np.empty((take, q.n), np.int32)
+                    out[:, q.order[:q.n]] = mrows[:, :q.n]
+                    q.embeddings.extend(out)
+                    q.stats.found += take
+                    seg.reported[s + emb_rows[:take]] = True
                 self._deliver(q)           # stream before retirement
                 if q.limit is not None and q.stats.found >= q.limit:
                     self._abort(q, "limit")
@@ -1367,7 +1808,8 @@ class WaveScheduler:
     @property
     def idle(self) -> bool:
         return (not self.queue and self.pool.n_active == 0
-                and self._inflight is None)
+                and self._inflight is None
+                and self._inflight_dev is None)
 
     def run(self) -> dict[int, MatchResult]:
         """Drain all queued and in-flight queries; returns the finished
@@ -1411,6 +1853,14 @@ class WaveScheduler:
             "dispatch_time_s": self.t_dispatch_s,
             "device_sync_time_s": self.t_sync_s,
             "host_time_s": self.t_host_s,
+            # disjoint host-time breakdown (ISSUE 6): where host wall
+            # actually goes — digest folding, admission, retirement
+            # (_finish), Δ pattern flushing
+            "host_admission_time_s": self.t_admit_s,
+            "host_digest_time_s": self.t_digest_s,
+            "host_retirement_time_s": self.t_retire_s,
+            "host_flush_time_s": self.t_flush_s,
+            "device_stacks": self._use_device,
             # bounded hashed Δ store + cross-query template cache
             # (occupancy reads the live bank so every schedule path —
             # single-step included — reports real store pressure)

@@ -515,6 +515,92 @@ def _matcher_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
                 (res_spec, tb_out_spec))
 
 
+def _matcher_stack_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
+    """Lower the device-resident scheduling step
+    (``run_device_megastep``): per-slot frontier stacks (StackBank),
+    on-device wave repacking and Lemma-4 resolution. Only root lanes
+    cross the boundary in; only per-slot scalars + embedding rows come
+    back — this is the program the serving scheduler dispatches when
+    ``MatchOptions.device_stacks`` is on, so its dry-run/roofline
+    numbers describe the steady-state serving step."""
+    from ..core.engine_step import (MASK_WORDS, N_PAD, GraphArrays,
+                                    QueryBank, StackBank,
+                                    run_device_megastep)
+    from ..patterns.store import PatternStoreBank
+    d = cell.dims
+    v = d["n_vertices"]
+    w = (v + 31) // 32
+    f = d["wave_size"]
+    kpr = d["kpr"]
+    s = d.get("n_slots", 16)
+    cap = d.get("pattern_capacity", 65_536)
+    depth_cap = d["stack_capacity"]
+    t_max = d.get("megastep_depth", 6)
+    emb_cap = d.get("emb_cap", max(512, f * kpr))
+    dpa = dp(mesh)
+    g = GraphArrays(adj_bitmap=sds((v, w), jnp.uint32),
+                    n_vertices=sds((), jnp.int32))
+    qb = QueryBank(cand_bitmap=sds((s, N_PAD, w), jnp.uint32),
+                   nbr_mask=sds((s, N_PAD, N_PAD), bool),
+                   n_query=sds((s,), jnp.int32),
+                   learn=sds((s,), bool))
+    tb = PatternStoreBank(key_pos=sds((s, cap), jnp.int32),
+                          key_v=sds((s, cap), jnp.int32),
+                          phi=sds((s, cap), jnp.int32),
+                          mu=sds((s, cap), jnp.int32),
+                          mask=sds((s, cap, MASK_WORDS), jnp.uint32),
+                          valid=sds((s, cap), bool),
+                          hits=sds((s, cap), jnp.int32))
+    sb = StackBank(frontier=sds((s, depth_cap, N_PAD), jnp.int32),
+                   used=sds((s, depth_cap, w), jnp.uint32),
+                   phi=sds((s, depth_cap, N_PAD + 1), jnp.int32),
+                   depth=sds((s, depth_cap), jnp.int32),
+                   cand=sds((s, depth_cap, w), jnp.uint32),
+                   state=sds((s, depth_cap), jnp.int8),
+                   gamma=sds((s, depth_cap, MASK_WORDS), jnp.uint32),
+                   outstanding=sds((s, depth_cap), jnp.int32),
+                   reported=sds((s, depth_cap), bool),
+                   parent=sds((s, depth_cap), jnp.int32),
+                   pstack=sds((s, depth_cap), jnp.int32),
+                   ptop=sds((s,), jnp.int32))
+    in_root = sds((f,), jnp.int32)
+    in_rid = sds((f,), jnp.int32)
+    in_slot = sds((f,), jnp.int32)
+    in_valid = sds((f,), bool)
+    active = sds((s,), bool)
+
+    gspec = GraphArrays(adj_bitmap=P("model", None), n_vertices=P())
+    # the stack is per-slot scheduler state — O(n_slots * depth_cap),
+    # data-graph independent — so like the query/store banks it
+    # replicates; only the (rare) root lanes are data-sharded
+    qbspec = QueryBank(cand_bitmap=P(None, None, None),
+                       nbr_mask=P(None, None, None),
+                       n_query=P(None), learn=P(None))
+    tbspec = PatternStoreBank(key_pos=P(None, None), key_v=P(None, None),
+                              phi=P(None, None), mu=P(None, None),
+                              mask=P(None, None, None),
+                              valid=P(None, None), hits=P(None, None))
+    sbspec = jax.tree.map(
+        lambda x: P(*([None] * len(x.shape))), sb)
+    rspec = _sanitize(P(dpa), (f,), mesh)
+
+    def step(g, qb, tb, sb, in_root, in_rid, in_slot, in_valid, active):
+        return run_device_megastep(
+            g, qb, tb, sb, in_root, in_rid, in_slot, in_valid, active,
+            jnp.int32(1), True, jnp.int32(t_max),
+            kpr=kpr, emb_cap=emb_cap)
+
+    out_spec = jax.tree.map(lambda _: P(), jax.eval_shape(
+        step, g, qb, tb, sb, in_root, in_rid, in_slot, in_valid,
+        active))
+    return Cell(spec.arch_id, cell.name, step,
+                (g, qb, tb, sb, in_root, in_rid, in_slot, in_valid,
+                 active),
+                (gspec, qbspec, tbspec, sbspec, rspec, rspec, rspec,
+                 rspec, P(None)),
+                out_spec)
+
+
 # ================================================================ dispatch
 def build_cell(arch_id: str, shape_name: str, mesh) -> Cell:
     spec = get_arch(arch_id)
@@ -536,5 +622,7 @@ def build_cell(arch_id: str, shape_name: str, mesh) -> Cell:
     if spec.family == "recsys":
         return _din_cells(spec, cell, mesh)
     if spec.family == "matcher":
+        if "stack_capacity" in cell.dims:
+            return _matcher_stack_cell(spec, cell, mesh)
         return _matcher_cell(spec, cell, mesh)
     raise ValueError(spec.family)

@@ -26,6 +26,13 @@ store (``patterns.store``) leans on exactly this invariant for its
 counter-guided eviction; :class:`DeadEndStats` is the shared accounting
 record for both — the engine fills the eviction/occupancy fields from the
 megastep digest counters.
+
+With device-resident stacks (``engine_step.run_device_megastep``) the
+in-loop Δ stores are fed from rows that never exist on the host: Lemma-1
+patterns at expansion time and Lemma-4 patterns at on-device finalize
+(``_resolution_sweep``), both through ``store_patterns_mq`` against the
+same advisory invariant. The host tables here stay the oracle the
+device-path equality tests pin against.
 """
 from __future__ import annotations
 

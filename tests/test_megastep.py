@@ -135,3 +135,84 @@ def test_adaptive_depth_falls_back_on_trap():
     ref = backtrack_deadend(query, data, limit=None)
     assert embset(res.embeddings) == embset(ref.embeddings)
     assert sched._prune_ema > sched.adaptive_prune_threshold
+
+
+# ------------------------------------------------------- device stacks
+def test_device_stacks_match_host_path_across_depths():
+    """Device-resident stacks vs the host SegmentPool path must
+    enumerate identical sets at megastep_depth 1 and 6 (depth 1 routes
+    through the single-step host schedule in both modes)."""
+    data = er_labeled_graph(35, 100, 3, seed=11)
+    queries = query_set(data, 4, 8, seed=5)
+    for depth in (1, 6):
+        per_mode = {}
+        for use_dev in (True, False):
+            sched = WaveScheduler(data, n_slots=4, wave_size=32, kpr=4,
+                                  megastep_depth=depth,
+                                  adaptive_prune_threshold=ALWAYS_DEEP,
+                                  device_stacks=use_dev)
+            qids = [sched.submit(q, limit=None) for q in queries]
+            sched.run()
+            per_mode[use_dev] = [sched.finished.pop(qid)
+                                 for qid in qids]
+        for a, b, q in zip(per_mode[True], per_mode[False], queries):
+            ref = backtrack_deadend(q, data, limit=None)
+            assert embset(a.embeddings) == embset(ref.embeddings)
+            assert embset(b.embeddings) == embset(ref.embeddings)
+
+
+def test_device_stacks_mid_run_eviction_and_rows_abort():
+    """A rows-budget eviction of a device-resident query must clear its
+    slot stack without disturbing device neighbors mid-megastep."""
+    data = er_labeled_graph(35, 100, 3, seed=11)
+    queries = query_set(data, 4, 6, seed=5)
+    sched = WaveScheduler(data, n_slots=4, wave_size=32, kpr=4,
+                          megastep_depth=4,
+                          adaptive_prune_threshold=ALWAYS_DEEP)
+    doomed = sched.submit(queries[0], limit=None, max_rows=1)
+    healthy = [sched.submit(q, limit=None) for q in queries]
+    sched.run()
+    d = sched.finished.pop(doomed)
+    assert d.stats.aborted and d.stats.abort_reason == "rows"
+    for sqid, q in zip(healthy, queries):
+        res = sched.finished.pop(sqid)
+        ref = backtrack_deadend(q, data, limit=None)
+        assert not res.stats.aborted
+        assert embset(res.embeddings) == embset(ref.embeddings)
+
+
+def test_device_stacks_cancellation_mid_run():
+    """Cancelling a device-resident query drops its in-flight stack and
+    digest rows; a neighbor sharing the waves stays exact."""
+    query, data = trap_graph(n_b=30, n_c=30, n_good=2, tail_len=2, seed=0)
+    sched = WaveScheduler(data, n_slots=2, wave_size=32, kpr=4,
+                          megastep_depth=4,
+                          adaptive_prune_threshold=ALWAYS_DEEP)
+    victim = sched.submit(query, limit=None)
+    keeper = sched.submit(query, limit=None)
+    sched.step()
+    sched.step()
+    if not sched.cancel(victim):
+        pytest.skip("query finished before the cancel landed")
+    sched.run()
+    v = sched.finished.pop(victim)
+    assert v.stats.aborted and v.stats.abort_reason == "cancelled"
+    k = sched.finished.pop(keeper)
+    ref = backtrack_deadend(query, data, limit=None)
+    assert embset(k.embeddings) == embset(ref.embeddings)
+
+
+def test_device_stacks_tiny_capacity_stays_exact():
+    """A stack far too small for the workload must throttle (fold-back /
+    wedge export), never drop or duplicate rows."""
+    data = er_labeled_graph(35, 100, 3, seed=11)
+    queries = query_set(data, 4, 6, seed=5)
+    sched = WaveScheduler(data, n_slots=2, wave_size=32, kpr=4,
+                          megastep_depth=4, stack_capacity=32,
+                          adaptive_prune_threshold=ALWAYS_DEEP)
+    qids = [sched.submit(q, limit=None) for q in queries]
+    sched.run()
+    for qid, q in zip(qids, queries):
+        res = sched.finished.pop(qid)
+        ref = backtrack_deadend(q, data, limit=None)
+        assert embset(res.embeddings) == embset(ref.embeddings)

@@ -192,3 +192,24 @@ def test_slo_report_has_occupancy(workload):
                 "waves", "peak_active"):
         assert key in rep
     assert 0.0 < rep["mean_occupancy"] <= 1.0
+
+
+def test_device_stacks_alongside_sharded_parallelism(workload):
+    """Shard-as-segments queries (host path, shards 1/2/4) must stay
+    exact — with stealing accounted — while single-shard neighbors ride
+    the device-resident stacks in the same waves."""
+    data, queries, oracle = workload
+    for shards in (1, 2, 4):
+        srv = QueryServer(data, backend="engine", limit=None, n_slots=4,
+                          wave_size=32, kpr=4)
+        results = srv.submit_batch(
+            queries[:4], parallelism=[1, 1, shards, shards])
+        for res, ref in zip(results, oracle[:4]):
+            assert embset(res.embeddings) == embset(ref.embeddings)
+        rep = srv.slo_report()
+        assert rep["steals"] >= 0
+        if shards > 1:
+            sharded = results[2]
+            assert len(sharded.stats.shard_rows) == shards
+            assert sum(sharded.stats.shard_rows) == \
+                sharded.stats.rows_created
