@@ -21,7 +21,16 @@ DESIGN.md §4). Tracks the serving-perf trajectory across PRs:
 
     PYTHONPATH=src python -m benchmarks.serving_bench
     PYTHONPATH=src python -m benchmarks.serving_bench --smoke   # CI
+    PYTHONPATH=src python -m benchmarks.serving_bench --smoke --chaos
     PYTHONPATH=src python -m benchmarks.run --only serving
+
+``--chaos`` replays the uniform workload under a seeded FaultPlan
+(dispatch exceptions/hangs, digest corruption, retry exhaustion, a
+flush drop and an admission failure — DESIGN.md §8) and emits a
+recovery payload instead: every query must end in a terminal status
+(ok/limit/timeout/error — never hang), the injected digest corruption
+must be caught by the validator, and the payload reports the
+recovered-query count plus recovery-latency p50/p99.
 """
 from __future__ import annotations
 
@@ -324,13 +333,86 @@ def run(csv_rows: list | None = None, budget_s: float = 90.0,
     return payload
 
 
+def run_chaos(smoke: bool = True) -> dict:
+    """The uniform serving workload under a seeded :class:`FaultPlan`
+    (DESIGN.md §8). Returns a recovery payload — validated by
+    ``scripts/check_smoke.py --chaos`` — instead of the perf payload;
+    never writes BENCH_serving.json."""
+    import numpy as np
+    from repro.core.faults import FaultPlan, FaultSpec
+    from repro.data.graph_gen import ba_labeled_graph, query_set
+    from repro.serving.query_server import QueryServer
+
+    if smoke:
+        n_queries, query_size = 8, 4
+        n_slots, wave_size, kpr = 8, 64, 8
+        n_vertices, extra_edges = 128, 128
+    else:
+        n_queries, query_size = 32, QUERY_SIZE
+        n_slots, wave_size, kpr = N_SLOTS, WAVE_SIZE, KPR
+        n_vertices, extra_edges = 512, 512
+
+    data = ba_labeled_graph(n_vertices, 3, 24, extra_edges=extra_edges,
+                            seed=0)
+    queries = query_set(data, query_size, n_queries, seed=7)
+    # the seeded chaos schedule: one of every failure mode the runtime
+    # is expected to absorb, spread across the run's boundary crossings
+    plan = FaultPlan([
+        FaultSpec("dispatch", "exception", at=2),      # retried
+        FaultSpec("digest", "corrupt", at=2),          # quarantined
+        FaultSpec("dispatch", "hang", at=4),           # watchdog
+        FaultSpec("dispatch", "exception", at=6, times=4),  # exhausted
+        FaultSpec("flush", "exception", at=1),         # dropped batch
+    ], seed=0)
+    server = QueryServer(data, backend="engine",
+                         time_budget_s=TIME_BUDGET_S, limit=LIMIT,
+                         wave_size=wave_size, kpr=kpr, n_slots=n_slots,
+                         faults=plan)
+    t0 = time.perf_counter()
+    results = server.submit_batch(queries)
+    wall = time.perf_counter() - t0
+    statuses = [r.status for r in results]
+    terminal = ("ok", "limit", "timeout", "error", "cancelled", "shed")
+    recovered = [r for r in results
+                 if getattr(r.stats, "fallback", False)]
+    rec_lat = np.asarray([r.latency_s for r in recovered])
+    f = server.scheduler.scheduler_stats()["faults"]
+    return {
+        "chaos": True,
+        "smoke": bool(smoke),
+        "n_queries": len(results),
+        "wall_time_s": wall,
+        "statuses": {s: statuses.count(s) for s in sorted(set(statuses))},
+        # the headline chaos invariant: every query reached a terminal
+        # status — an injected fault may cost work, never a hang
+        "all_terminal": all(s in terminal for s in statuses),
+        "faults_planned": len(plan.specs),
+        "faults_fired": len(plan.fired),
+        "fired": [[site, kind, n] for site, kind, n, _ in plan.fired],
+        "fault_counters": f,
+        "digest_failures_caught": f["digest_failures"],
+        "recovered_queries": len(recovered),
+        "recovery_p50_ms": (float(np.percentile(rec_lat, 50) * 1e3)
+                            if len(rec_lat) else None),
+        "recovery_p99_ms": (float(np.percentile(rec_lat, 99) * 1e3)
+                            if len(rec_lat) else None),
+        "total_embeddings": int(sum(r.n_found for r in results)),
+    }
+
+
 if __name__ == "__main__":
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
                            / "src"))
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-size CI run; does not write BENCH_serving")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the seeded fault-injection workload and "
+                         "emit the recovery payload instead")
     args = ap.parse_args()
+    if args.chaos:
+        print(json.dumps(run_chaos(smoke=args.smoke), indent=2))
+        sys.exit(0)
     payload = run(smoke=args.smoke)
     print(json.dumps(payload, indent=2))
     if not args.smoke:

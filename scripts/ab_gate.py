@@ -12,6 +12,11 @@ The run appends ``{commit, qps_ratio, host_frac}`` to the ``ab_history``
 list in BENCH_serving.json so the normalized trajectory is versioned
 alongside the absolute headline numbers.
 
+When the gate *would* fail while the baseline disagrees with itself by
+more than 2x across its own runs (best/worst self-ratio — a noisy
+container, not a regression), the measurement is retried once before
+failing and the history entry records ``retried: true``.
+
 Environment knobs:
 
 * ``AB_BASE_REF``  — baseline git ref (default ``HEAD~1``)
@@ -41,12 +46,13 @@ def _git(*args: str) -> subprocess.CompletedProcess:
                           text=True)
 
 
-def _smoke_qps(tree: pathlib.Path, runs: int) -> tuple[float, dict]:
-    """Best-of-``runs`` smoke qps for one source tree (plus the payload
-    of the best run)."""
+def _smoke_qps(tree: pathlib.Path, runs: int) -> tuple[float, float, dict]:
+    """Best- and worst-of-``runs`` smoke qps for one source tree (plus
+    the payload of the best run). The best/worst spread is the
+    *self-ratio* — the gate's noise signal for this container."""
     env = dict(os.environ)
     env["PYTHONPATH"] = str(tree / "src")
-    best, best_payload = 0.0, None
+    best, worst, best_payload = 0.0, float("inf"), None
     for _ in range(runs):
         out = subprocess.run(
             [sys.executable, "-m", "benchmarks.serving_bench", "--smoke"],
@@ -56,9 +62,11 @@ def _smoke_qps(tree: pathlib.Path, runs: int) -> tuple[float, dict]:
             raise RuntimeError(
                 f"smoke bench failed in {tree}:\n{out.stderr[-2000:]}")
         payload = json.loads(out.stdout)
-        if payload["queries_per_sec"] >= best:
-            best, best_payload = payload["queries_per_sec"], payload
-    return best, best_payload
+        qps = payload["queries_per_sec"]
+        worst = min(worst, qps)
+        if qps >= best:
+            best, best_payload = qps, payload
+    return best, worst, best_payload
 
 
 def main() -> int:
@@ -84,21 +92,43 @@ def main() -> int:
             print("ab_gate: skipped (worktree add failed: "
                   f"{add.stderr.strip()})")
             return 0
+        retried = False
         try:
             try:
-                old_qps, _ = _smoke_qps(base_tree, runs)
+                old_qps, old_worst, _ = _smoke_qps(base_tree, runs)
             except (RuntimeError, json.JSONDecodeError,
                     subprocess.TimeoutExpired) as e:
                 print(f"ab_gate: skipped (baseline bench unusable: {e})")
                 return 0
-            new_qps, new_payload = _smoke_qps(ROOT, runs)
+            new_qps, _, new_payload = _smoke_qps(ROOT, runs)
+            ratio = new_qps / max(old_qps, 1e-9)
+            # noisy-container guard: when the gate would fail while the
+            # baseline disagrees with *itself* by > 2x across its own
+            # runs, the measurement — not the code — is suspect.
+            # Re-measure both sides once before failing.
+            self_ratio = old_qps / max(old_worst, 1e-9)
+            if ratio < min_ratio and self_ratio > 2.0:
+                print(f"ab_gate: retrying — baseline self-ratio "
+                      f"{self_ratio:.2f} > 2.0 (noisy container), "
+                      f"first ratio was {ratio:.3f}")
+                retried = True
+                try:
+                    old_qps, old_worst, _ = _smoke_qps(base_tree, runs)
+                except (RuntimeError, json.JSONDecodeError,
+                        subprocess.TimeoutExpired) as e:
+                    print("ab_gate: skipped (baseline bench unusable "
+                          f"on retry: {e})")
+                    return 0
+                new_qps, _, new_payload = _smoke_qps(ROOT, runs)
+                ratio = new_qps / max(old_qps, 1e-9)
         finally:
             _git("worktree", "remove", "--force", str(base_tree))
 
-    ratio = new_qps / max(old_qps, 1e-9)
     head = _git("rev-parse", "--short", "HEAD").stdout.strip()
     record = {"commit": head, "qps_ratio": round(ratio, 4),
               "host_frac": round(new_payload.get("host_frac", 0.0), 4)}
+    if retried:
+        record["retried"] = True
     if BENCH.exists():
         bench = json.loads(BENCH.read_text())
         bench.setdefault("ab_history", []).append(record)

@@ -14,7 +14,14 @@ Reads the JSON payload from stdin and checks:
   uniform workload (embeddings really are delivered mid-flight);
 * the repeated-template workload actually demonstrates the warm-start
   win (warm prune rate above cold).
+
+``--chaos`` validates the ``serving_bench --chaos`` recovery payload
+instead (DESIGN.md §8): every query ended in a terminal status (never a
+hang), the injected digest corruption was caught by the validator —
+never silently absorbed — and at least one query recovered via the
+host fallback.
 """
+import argparse
 import json
 import sys
 
@@ -46,7 +53,12 @@ RESULT_SCHEMA = {
     "ttfe_ms": (float, type(None)), "timed_out": (bool,),
     "aborted": (bool,),
 }
-STATUSES = ("ok", "limit", "timeout", "cancelled")
+STATUSES = ("ok", "limit", "timeout", "cancelled", "error", "shed")
+CHAOS_REQUIRED = [
+    "n_queries", "statuses", "all_terminal", "faults_planned",
+    "faults_fired", "fired", "fault_counters", "digest_failures_caught",
+    "recovered_queries", "recovery_p50_ms", "recovery_p99_ms",
+]
 
 
 def _check_result_dicts(results) -> str | None:
@@ -67,8 +79,56 @@ def _check_result_dicts(results) -> str | None:
     return None
 
 
+def check_chaos(payload) -> int:
+    missing = [k for k in CHAOS_REQUIRED if k not in payload]
+    if missing:
+        print(f"chaos payload missing keys: {missing}", file=sys.stderr)
+        return 1
+    if not payload["all_terminal"]:
+        print("chaos regression: a query ended outside the terminal "
+              f"statuses (got {payload['statuses']}) — something hung "
+              "or leaked", file=sys.stderr)
+        return 1
+    bad = [s for s in payload["statuses"] if s not in STATUSES]
+    if bad:
+        print(f"chaos payload has unknown statuses: {bad}",
+              file=sys.stderr)
+        return 1
+    if payload["faults_fired"] < 3:
+        print("chaos regression: only "
+              f"{payload['faults_fired']}/{payload['faults_planned']} "
+              "planned faults fired — the schedule no longer reaches "
+              "its boundary crossings", file=sys.stderr)
+        return 1
+    if payload["digest_failures_caught"] < 1:
+        print("chaos regression: the injected digest corruption was "
+              "NOT caught by the validator (silently absorbed)",
+              file=sys.stderr)
+        return 1
+    if payload["recovered_queries"] < 1:
+        print("chaos regression: no query recovered via the host "
+              "fallback", file=sys.stderr)
+        return 1
+    p50 = payload["recovery_p50_ms"]
+    p99 = payload["recovery_p99_ms"]
+    print("serving_bench --chaos: OK "
+          f"(n={payload['n_queries']}, statuses={payload['statuses']}, "
+          f"faults_fired={payload['faults_fired']}/"
+          f"{payload['faults_planned']}, "
+          f"digest_caught={payload['digest_failures_caught']}, "
+          f"recovered={payload['recovered_queries']}, "
+          f"recovery_p50={p50:.0f}ms, recovery_p99={p99:.0f}ms)")
+    return 0
+
+
 def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--chaos", action="store_true",
+                    help="validate the --chaos recovery payload instead")
+    args = ap.parse_args()
     payload = json.load(sys.stdin)
+    if args.chaos:
+        return check_chaos(payload)
     missing = [k for k in REQUIRED if k not in payload]
     if missing:
         print(f"smoke payload missing keys: {missing}", file=sys.stderr)

@@ -28,6 +28,11 @@ python -m pytest tests/test_distributed.py -q
 # pattern-store/cache metrics, and that warm-started queries out-prune
 # cold ones — and prints a one-line summary.
 python -m benchmarks.serving_bench --smoke | python scripts/check_smoke.py
+# chaos smoke (DESIGN.md §8): the same workload under a seeded
+# FaultPlan — every query must end in a terminal status (never hang),
+# the injected digest corruption must be caught by the validator, and
+# at least one query must recover through the host fallback.
+python -m benchmarks.serving_bench --smoke --chaos | python scripts/check_smoke.py --chaos
 # normalized old-vs-new A/B perf gate: both trees benched back-to-back
 # in this container, only the qps *ratio* is thresholded (absolute
 # smoke qps has moved ~2x between containers). Appends a

@@ -18,12 +18,14 @@ eagerly; ``MatchSession`` and ``QueueFull`` resolve lazily because the
 core scheduler itself consumes ``api.options`` (PEP 562 keeps the
 package importable from either direction).
 """
-from .handle import MatchHandle, QueryResult, Status, status_of
+from .handle import (MatchError, MatchHandle, MatchTimeout, QueryResult,
+                     Status, status_of)
 from .options import MatchOptions, MatchRequest
 
 __all__ = [
-    "MatchHandle", "MatchOptions", "MatchRequest", "MatchSession",
-    "QueryResult", "QueueFull", "Status", "status_of",
+    "MatchError", "MatchHandle", "MatchOptions", "MatchRequest",
+    "MatchSession", "MatchTimeout", "QueryResult", "QueueFull",
+    "Status", "status_of",
 ]
 
 _LAZY = {

@@ -14,21 +14,38 @@ Status taxonomy (one definition for every backend):
     "limit"     stopped at the per-query result cap
     "timeout"   recursion or wall-clock budget exhausted
     "cancelled" evicted by MatchHandle.cancel()
+    "error"     quarantined past the failure budget (DESIGN.md §8);
+                the typed failure is on ``MatchHandle.error``
+    "shed"      dropped by the shed_lowest overload policy
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Iterator, Literal
 
 import numpy as np
 
 from .options import MatchRequest
 
-__all__ = ["QueryResult", "MatchHandle", "Status", "status_of"]
+__all__ = ["QueryResult", "MatchHandle", "Status", "status_of",
+           "MatchError", "MatchTimeout"]
 
-Status = Literal["ok", "limit", "timeout", "cancelled"]
-STATUSES: tuple[str, ...] = ("ok", "limit", "timeout", "cancelled")
+Status = Literal["ok", "limit", "timeout", "cancelled", "error", "shed"]
+STATUSES: tuple[str, ...] = ("ok", "limit", "timeout", "cancelled",
+                             "error", "shed")
+
+
+class MatchError(RuntimeError):
+    """A query was quarantined past its failure budget (or with
+    fallback disabled): runtime fault, not a budget stop. Attached to
+    ``MatchHandle.error`` when ``status == "error"``."""
+
+
+class MatchTimeout(TimeoutError):
+    """``MatchHandle.result(timeout=...)`` deadline expired before the
+    query completed (the query keeps running; call ``result`` again)."""
 
 
 def status_of(stats, limit: int | None) -> Status:
@@ -37,8 +54,8 @@ def status_of(stats, limit: int | None) -> Status:
     if not stats.aborted:
         return "ok"
     reason = stats.abort_reason
-    if reason == "cancelled":
-        return "cancelled"
+    if reason in ("cancelled", "error", "shed"):
+        return reason
     if reason == "limit" or (reason is None and limit is not None
                              and stats.found >= limit):
         return "limit"
@@ -110,6 +127,8 @@ class MatchHandle:
         self._result: QueryResult | None = None
         self._cancel_requested = False
         self._worker = None        # sequential stream() worker thread
+        # typed failure attached by the session when status == "error"
+        self.error: MatchError | None = None
 
     # ------------------------------------------------------------------
     def done(self) -> bool:
@@ -120,10 +139,24 @@ class MatchHandle:
         return self._result.status if self._result is not None \
             else "pending"
 
-    def result(self) -> QueryResult:
+    def result(self, timeout: float | None = None) -> QueryResult:
         """Drive the session until this query completes (returns
-        immediately when it already has)."""
+        immediately when it already has).
+
+        ``timeout`` bounds the wall-clock time spent pumping; past the
+        deadline :class:`MatchTimeout` is raised instead of blocking on
+        a stalled scheduler. The query itself keeps its state — calling
+        ``result`` again resumes pumping."""
+        if timeout is None:
+            while self._result is None:
+                self._session._pump(self)
+            return self._result
+        deadline = time.perf_counter() + timeout
         while self._result is None:
+            if time.perf_counter() >= deadline:
+                raise MatchTimeout(
+                    f"query {self.query_id} did not complete within "
+                    f"{timeout:g}s")
             self._session._pump(self)
         return self._result
 

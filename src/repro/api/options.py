@@ -81,6 +81,20 @@ class MatchOptions:
     pattern_cache_templates: int = 64
     pattern_cache_top_k: int = 512
     hit_decay_every: int = 256
+    # ---- fault tolerance (DESIGN.md §8) -------------------------------
+    # Watchdog deadline per device/megastep dispatch (None = off: a
+    # first dispatch legitimately spends tens of seconds in jit
+    # compilation). A dispatch past the deadline is treated as hung:
+    # its digest is untrusted and the involved queries are demoted.
+    dispatch_timeout_s: float | None = None
+    dispatch_retries: int = 2         # re-dispatch attempts on failure
+    retry_backoff_s: float = 0.05     # base of the exponential backoff
+    validate_digests: bool = True     # check DeviceResult invariants
+    fallback_on_failure: bool = True  # demote failing queries to host
+    max_query_failures: int = 2       # failures before status="error"
+    shed_policy: str = "reject"       # "reject" (QueueFull) | "shed_lowest"
+    micro_checkpoint_every: int | None = None  # distributed waves/ckpt
+    faults: Any = None                # core.faults.FaultPlan (tests/chaos)
 
     # ------------------------------------------------------------------
     def validate(self) -> "MatchOptions":
@@ -108,6 +122,19 @@ class MatchOptions:
         if self.pattern_capacity & (self.pattern_capacity - 1):
             raise ValueError("pattern_capacity must be a power of two, "
                              f"got {self.pattern_capacity!r}")
+        _nonneg("dispatch_timeout_s", self.dispatch_timeout_s)
+        _nonneg("retry_backoff_s", self.retry_backoff_s, allow_none=False)
+        _nonneg("dispatch_retries", self.dispatch_retries,
+                allow_none=False)
+        _nonneg("max_query_failures", self.max_query_failures,
+                allow_none=False)
+        if self.shed_policy not in ("reject", "shed_lowest"):
+            raise ValueError("shed_policy must be 'reject' or "
+                             f"'shed_lowest', got {self.shed_policy!r}")
+        if (self.micro_checkpoint_every is not None
+                and self.micro_checkpoint_every < 1):
+            raise ValueError("micro_checkpoint_every must be >= 1, got "
+                             f"{self.micro_checkpoint_every!r}")
         return self
 
     def replace(self, **overrides: Any) -> "MatchOptions":

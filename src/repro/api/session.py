@@ -37,7 +37,7 @@ import numpy as np
 
 from ..core.backtrack import backtrack_deadend
 from ..core.vectorized import QueueFull, WaveScheduler
-from .handle import MatchHandle, QueryResult, status_of
+from .handle import MatchError, MatchHandle, QueryResult, status_of
 from .options import MatchOptions, MatchRequest
 
 __all__ = ["MatchSession"]
@@ -199,6 +199,9 @@ class MatchSession:
     def _finish_handle(self, h: MatchHandle, embeddings, stats,
                        latency_s: float) -> None:
         status = status_of(stats, h.request.options.limit)
+        if status == "error":
+            h.error = MatchError(getattr(stats, "fault", None)
+                                 or "query failed")
         qr = QueryResult(
             query_id=h.query_id, n_found=stats.found,
             embeddings=embeddings, latency_s=latency_s,

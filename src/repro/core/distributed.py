@@ -58,6 +58,13 @@ CHECKPOINT_VERSION = 3
 _V2_TABLE_KEYS = ("phi", "mu", "mask", "valid")
 
 
+class CheckpointCorrupt(RuntimeError):
+    """A checkpoint failed structural validation (truncated archive,
+    missing field, wrong shape/version). Raised by
+    :meth:`DistributedMatcher.load_state` *before* any matcher state is
+    mutated, naming the offending field — never a raw numpy traceback."""
+
+
 def select_exchange_patterns(entries: dict, top_k: int,
                              transferable_only: bool = True) -> dict:
     """Deterministic top-k pattern selection for the cross-host exchange
@@ -131,12 +138,18 @@ class DistributedMatcher:
         self.n_shards = int(n_shards)
         self.share_patterns = share_patterns
         self.share_top_k = share_top_k
-        self.checkpoint_every_waves = int(checkpoint_every_waves)
         # shared mode: ONE resident query whose n_shards root segments
         # share one slot-private Δ store. Ablation mode: one isolated
         # scheduler query (own slot, own store) per shard.
         opts = MatchOptions.resolve(options, **knobs).replace(
             n_slots=(1 if share_patterns else self.n_shards))
+        # micro-checkpoint cadence (DESIGN.md §8): the MatchOptions knob
+        # overrides the ctor arg so the serving surface can tune it
+        self.checkpoint_every_waves = int(
+            opts.micro_checkpoint_every
+            if opts.micro_checkpoint_every is not None
+            else checkpoint_every_waves)
+        self._faults = opts.faults
         self._session = MatchSession(data, options=opts)
         self.scheduler = self._session.scheduler
         self._entries: dict | None = None     # last match's Δ snapshot
@@ -211,17 +224,56 @@ class DistributedMatcher:
                                       res.stats, limit)
 
         seed_patterns = (prior.entries if prior is not None else None)
-        h = self.submit(query, limit=run_limit, cand=sub_cand,
-                        order=order, max_rows=max_rows,
-                        seed_patterns=seed_patterns)
-        waves = 0
-        while self._session.step():
-            waves += 1
-            if (checkpoint_dir is not None
-                    and waves % self.checkpoint_every_waves == 0):
-                ck = self._snapshot(h.query_id, prior_embs)
-                if ck is not None:
-                    self.save_state(checkpoint_dir, ck)
+        while True:
+            h = self.submit(query, limit=run_limit, cand=sub_cand,
+                            order=order, max_rows=max_rows,
+                            seed_patterns=seed_patterns)
+            waves = 0
+            lost = False
+            while self._session.step():
+                waves += 1
+                if (checkpoint_dir is not None
+                        and waves % self.checkpoint_every_waves == 0):
+                    ck = self._snapshot(h.query_id, prior_embs)
+                    if ck is not None:
+                        self._save_checkpoint(checkpoint_dir, ck)
+                # injected shard loss (DESIGN.md §8): the lost shard is
+                # a root segment of the one resident query, so its
+                # frontier state dies with the query — recovery is
+                # restore-from-micro-checkpoint on the survivors
+                if (self._faults is not None and self.n_shards > 1
+                        and not h.done()
+                        and self._faults.poke("shard", wave=waves)
+                        is not None):
+                    h.cancel()
+                    self._session.run()      # drain the teardown
+                    self.n_shards -= 1
+                    lost = True
+                    break
+            if not lost:
+                break
+            # re-seed the lost shard's unresolved roots onto the
+            # survivors from the latest micro-checkpoint (or from
+            # scratch when there is none — dedup makes that sound)
+            recov = (self.load_state(checkpoint_dir)
+                     if checkpoint_dir is not None else None)
+            if recov is not None:
+                pending = self._pending_roots(recov, roots)
+                prior_embs = [np.asarray(e, np.int32)
+                              for e in recov.embeddings]
+                if recov.entries is not None:
+                    self.scheduler.reserve_phi_floor(recov.phi_floor)
+                seed_patterns = recov.entries
+            else:
+                pending = roots
+            if len(pending) == 0 or (
+                    limit is not None and len(prior_embs) >= limit):
+                return self._merge_result(prior_embs, [], EngineStats(),
+                                          limit)
+            run_limit = (None if limit is None
+                         else limit + len(prior_embs))
+            sub_cand = self._restrict_roots(cand_by_pos, order, pending,
+                                            query.n)
         qr = h.result()
         self._entries = self.scheduler.tables.pop(h.query_id, None)
         out = self._merge_result(prior_embs, qr.embeddings, qr.stats,
@@ -230,7 +282,7 @@ class DistributedMatcher:
         # segments are already evicted, so the last periodic snapshot
         # (still on disk) is the correct restore point.
         if checkpoint_dir is not None and not qr.stats.aborted:
-            self.save_state(checkpoint_dir, Checkpoint(
+            self._save_checkpoint(checkpoint_dir, Checkpoint(
                 version=CHECKPOINT_VERSION,
                 pending_roots=np.zeros(0, np.int32),
                 embeddings=[np.asarray(e, np.int32)
@@ -239,6 +291,15 @@ class DistributedMatcher:
                 phi_floor=self.scheduler.pool.id_counter,
                 n_shards=self.n_shards))
         return out
+
+    def _save_checkpoint(self, path: str, ck: Checkpoint) -> None:
+        """One save, with the ``checkpoint`` fault boundary: an injected
+        save failure skips this snapshot (the previous one on disk stays
+        the restore point) instead of killing the match."""
+        if (self._faults is not None
+                and self._faults.poke("checkpoint") is not None):
+            return
+        self.save_state(path, ck)
 
     # -- pattern export (cross-host exchange) -------------------------------
     def export_patterns(self, top_k: int | None = None,
@@ -400,27 +461,93 @@ class DistributedMatcher:
     def load_state(path: str) -> Checkpoint | None:
         """Load the latest snapshot. Prefers ``state.npz`` (v3 entries;
         v2 dense-table snapshots are converted on read); falls back to
-        the legacy ``state.json`` (v1: root-index ranges, no Δ)."""
+        the legacy ``state.json`` (v1: root-index ranges, no Δ).
+
+        The archive is structurally validated *before* any state is
+        assembled: a truncated file, a missing/unreadable field, a
+        wrong-shape array or an unsupported version raises
+        :class:`CheckpointCorrupt` naming the bad field — callers never
+        see a raw numpy/zipfile traceback, and a matcher resuming from
+        a corrupt snapshot mutates nothing."""
         p = pathlib.Path(path)
         npz = p / "state.npz"
         if npz.exists():
-            with np.load(npz) as z:
+            try:
+                z = np.load(npz)
+            except Exception as exc:
+                raise CheckpointCorrupt(
+                    f"checkpoint {npz} is unreadable (truncated or not "
+                    f"an npz archive): {exc}") from exc
+            with z:
+                files = set(z.files)
+                for k in ("version", "n_shards", "phi_floor",
+                          "pending_roots", "embeddings"):
+                    if k not in files:
+                        raise CheckpointCorrupt(
+                            f"checkpoint {npz} is missing required "
+                            f"field {k!r}")
+
+                def _arr(name: str, ndim: int | None = None):
+                    try:
+                        a = z[name]
+                    except Exception as exc:
+                        raise CheckpointCorrupt(
+                            f"checkpoint {npz}: field {name!r} is "
+                            f"unreadable (truncated member): {exc}"
+                        ) from exc
+                    if ndim is not None and a.ndim != ndim:
+                        raise CheckpointCorrupt(
+                            f"checkpoint {npz}: field {name!r} has "
+                            f"shape {a.shape}, expected a {ndim}-D "
+                            f"array")
+                    return a
+
+                def _scalar(name: str) -> int:
+                    a = _arr(name)
+                    if a.size != 1:
+                        raise CheckpointCorrupt(
+                            f"checkpoint {npz}: field {name!r} must be "
+                            f"a scalar, got shape {a.shape}")
+                    return int(a)
+
+                version = _scalar("version")
+                if not 1 <= version <= CHECKPOINT_VERSION:
+                    raise CheckpointCorrupt(
+                        f"checkpoint {npz}: field 'version' = "
+                        f"{version} unsupported (expected 1.."
+                        f"{CHECKPOINT_VERSION})")
+                n_shards = _scalar("n_shards")
+                phi_floor = _scalar("phi_floor")
+                pending = _arr("pending_roots", ndim=1)
+                embs = _arr("embeddings", ndim=2)
                 entries = None
-                if "delta_pos" in z.files:
-                    entries = {k: z[f"delta_{k}"] for k in ENTRY_KEYS}
-                elif "table_valid" in z.files:
+                if "delta_pos" in files:
+                    for k in ENTRY_KEYS:
+                        if f"delta_{k}" not in files:
+                            raise CheckpointCorrupt(
+                                f"checkpoint {npz} is missing Δ field "
+                                f"'delta_{k}' (has delta_pos)")
+                    entries = {k: _arr(f"delta_{k}", ndim=1)
+                               for k in ENTRY_KEYS}
+                    n_ent = len(entries["pos"])
+                    for k in ENTRY_KEYS:
+                        if len(entries[k]) != n_ent:
+                            raise CheckpointCorrupt(
+                                f"checkpoint {npz}: field 'delta_{k}' "
+                                f"has {len(entries[k])} entries, "
+                                f"expected {n_ent} (= len(delta_pos))")
+                elif "table_valid" in files:
                     entries = _entries_from_dense_v2(
-                        {k: z[f"table_{k}"] for k in _V2_TABLE_KEYS},
-                        z["table_hits"] if "table_hits" in z.files
+                        {k: _arr(f"table_{k}") for k in _V2_TABLE_KEYS},
+                        _arr("table_hits") if "table_hits" in files
                         else None)
-                embs = z["embeddings"]
                 return Checkpoint(
-                    version=int(z["version"]),
-                    pending_roots=z["pending_roots"].astype(np.int32),
+                    version=version,
+                    pending_roots=pending.astype(np.int32),
                     embeddings=[e for e in embs.astype(np.int32)],
                     entries=entries,
-                    phi_floor=int(z["phi_floor"]),
-                    n_shards=int(z["n_shards"]))
+                    phi_floor=phi_floor,
+                    n_shards=n_shards)
         legacy = p / "state.json"
         if legacy.exists():
             state = json.loads(legacy.read_text())

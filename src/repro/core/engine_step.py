@@ -898,6 +898,8 @@ class DeviceResult(NamedTuple):
     d_stored: jax.Array      # int32 [S] patterns stored (L1 + L4)
     d_pending: jax.Array     # int32 [S] pending LIFO size after
     d_live: jax.Array        # int32 [S] non-FREE entries after
+    d_outsum: jax.Array      # int32 [S] sum of live entries' outstanding
+    d_childlive: jax.Array   # int32 [S] live entries with a parent
     pat_stored: jax.Array    # int32 [S] Δ insert counters
     pat_overwrites: jax.Array
     pat_evictions: jax.Array
@@ -1448,12 +1450,22 @@ def run_device_megastep(g: GraphArrays, qb: QueryBank,
                        dict(s, it=jnp.int32(0)))
 
     sb_out = StackBank(**{k: s[k] for k in lane_keys})
-    live = (s["state"] != STK_FREE).sum(axis=1).astype(jnp.int32)
+    live_mask = s["state"] != STK_FREE
+    live = live_mask.sum(axis=1).astype(jnp.int32)
+    # Lemma-4 conservation lanes for the host-side digest validator:
+    # every live non-root entry is counted exactly once in its parent's
+    # outstanding counter, so per slot
+    #   sum(outstanding over live) == count(live with parent >= 0)
+    d_outsum = jnp.where(live_mask, s["outstanding"], 0) \
+        .sum(axis=1).astype(jnp.int32)
+    d_childlive = (live_mask & (s["parent"] >= 0)) \
+        .sum(axis=1).astype(jnp.int32)
     return DeviceResult(
         tb=s["tb"], sb=sb_out,
         d_accepted=d_accepted, d_expanded=s["d_expanded"],
         d_rows=s["d_rows"], d_prunes=s["d_prunes"], d_inj=s["d_inj"],
         d_stored=s["d_stored"], d_pending=s["ptop"], d_live=live,
+        d_outsum=d_outsum, d_childlive=d_childlive,
         pat_stored=s["pat"].stored, pat_overwrites=s["pat"].overwrites,
         pat_evictions=s["pat"].evictions, pat_dropped=s["pat"].dropped,
         emb_frontier=s["emb_frontier"], emb_slot=s["emb_slot"],

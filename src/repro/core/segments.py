@@ -96,6 +96,9 @@ class EngineStats(SearchStats):
     # cross-query template cache (patterns.cache, DESIGN.md §6)
     cache_hit: bool = False          # Δ was warm-started from the cache
     warm_patterns: int = 0           # entries seeded at admission
+    # fault tolerance (DESIGN.md §8)
+    fault: str | None = None         # what failed (status == "error")
+    fallback: bool = False           # completed on the degraded path
 
 
 @dataclasses.dataclass
@@ -162,9 +165,26 @@ class QueryState:
         self.emb_sink = None
         self.emb_delivered = 0
         self.store_buf: list[tuple[int, int, int, int, np.uint64]] = []
-        self.status = "running"         # "running" | "done"
-        self.abort_reason: str | None = None  # "limit" | "rows" | "time"
+        # "running" | "done" | "quarantined" (torn down for fallback
+        # re-admission, no result published — DESIGN.md §8). Only
+        # "running" is ``active``; in-flight digests for any other
+        # status drop at retire time.
+        self.status = "running"
+        self.abort_reason: str | None = None  # "limit"|"rows"|"time"|...
         self._next_seg = 0
+        # -- device-resident stack path (set by the scheduler at
+        # admission when the query runs with no host segments) ----------
+        self.device = False
+        self.pending_roots: np.ndarray | None = None
+        self.root_cursor = 0
+        self.dev_roots_inflight = False
+        self.dev_wedge = 0
+        self.dev_sig = None
+        # -- fault tolerance (DESIGN.md §8) -----------------------------
+        self.request = None             # originating _Request (replay)
+        self.fail_count = 0             # quarantines across incarnations
+        self.force_single = False       # fallback: one item per wave
+        self.emb_seen: set | None = None  # replay dedup (tobytes keys)
 
     # -- segment / stack management ------------------------------------
     def new_segment(self, depth: int, frontier: np.ndarray,

@@ -78,6 +78,7 @@ from ..patterns import (DeadEndStats, PatternCache, PatternStore,
                         PatternStoreBank, age_hits, empty_entries,
                         entries_to_store, store_to_entries)
 from .backtrack import MatchResult, _prepare
+from .faults import DISPATCH_ERRORS, FaultInjected, corrupt_digest
 from .engine_step import (MASK_WORDS, N_PAD, STK_FREE, STK_FRESH,
                           STK_LEFT, STK_RES, STK_WAIT, DeviceResult,
                           GraphArrays, MegaResult, QueryBank, StackBank,
@@ -96,6 +97,13 @@ __all__ = ["WaveScheduler", "WaveEngine", "EngineStats", "QueueFull",
 
 class QueueFull(RuntimeError):
     """Raised when the bounded admission queue rejects a submission."""
+
+
+# per-slot scalar lanes of a DeviceResult digest, materialized as one
+# dict so the validator / fault injector can address them uniformly
+_DEV_LANES = ("d_accepted", "d_expanded", "d_rows", "d_prunes", "d_inj",
+              "d_stored", "d_pending", "d_live", "d_outsum",
+              "d_childlive")
 
 
 @dataclasses.dataclass
@@ -124,6 +132,16 @@ class _Request:
     priority: int = 0
     # streamed-embedding sink (MatchHandle._push); None = no streaming
     on_embeddings: object | None = None
+    # ---- degraded-mode replay (DESIGN.md §8) --------------------------
+    # a quarantined query is re-admitted as a fresh request on the host
+    # single-step fallback path, carrying the embeddings it already
+    # found (deduplicated on replay) and its failure count
+    host_only: bool = False
+    fail_count: int = 0
+    prior_embeddings: list | None = None   # [n_query] int32 rows
+    emb_seen: set | None = None            # tobytes() of every prior row
+    prior_rows: int = 0                    # rows_created before demotion
+    prior_ttfe: float | None = None
 
 
 @dataclasses.dataclass
@@ -142,6 +160,8 @@ class _Inflight:
     us: np.ndarray | None = None   # host-side child assembly
     ph: np.ndarray | None = None
     depth_v: np.ndarray | None = None
+    t_dispatch: float = 0.0        # watchdog reference point
+    hung: bool = False             # injected hang: digest untrusted
 
 
 @dataclasses.dataclass
@@ -156,6 +176,8 @@ class _InflightDev:
     slot_map: dict                 # slot -> QueryState at dispatch time
     root_slots: tuple              # slots whose root batch rode along
     t_max: int
+    t_dispatch: float = 0.0        # watchdog reference point
+    hung: bool = False             # injected hang: digest untrusted
 
 
 class WaveScheduler:
@@ -305,6 +327,21 @@ class WaveScheduler:
         self.t_digest_s = 0.0
         self.t_retire_s = 0.0
         self.t_flush_s = 0.0
+        # ---- fault tolerance (DESIGN.md §8) ---------------------------
+        # every hook below is gated on its knob (or ``_faults is None``)
+        # so the disabled path costs one attribute load per boundary
+        self.dispatch_timeout_s = opts.dispatch_timeout_s
+        self.dispatch_retries = int(opts.dispatch_retries)
+        self.retry_backoff_s = float(opts.retry_backoff_s)
+        self.validate_digests = bool(opts.validate_digests)
+        self.fallback_on_failure = bool(opts.fallback_on_failure)
+        self.max_query_failures = int(opts.max_query_failures)
+        self.shed_policy = opts.shed_policy
+        self._faults = opts.faults          # core.faults.FaultPlan | None
+        self.fault_counters = {
+            "dispatch_retries": 0, "hangs": 0, "digest_failures": 0,
+            "quarantined": 0, "fallbacks": 0, "errors": 0,
+            "flush_drops": 0, "shed": 0, "admission_failures": 0}
 
     # ------------------------------------------------------------------
     # submission / admission
@@ -353,7 +390,8 @@ class WaveScheduler:
         """
         opts = MatchOptions.resolve(
             options if options is not None else self.options, **overrides)
-        if len(self.queue) >= self.max_queue:
+        if (len(self.queue) >= self.max_queue
+                and self.shed_policy != "shed_lowest"):
             raise QueueFull(
                 f"admission queue at capacity ({self.max_queue})")
         if query.n > N_PAD:
@@ -400,8 +438,33 @@ class WaveScheduler:
             if self.pattern_cache is not None and learn:
                 req.fingerprint = PatternCache.fingerprint(
                     n, cand_packed, nbr_mask)
+            if len(self.queue) >= self.max_queue:
+                # shed_lowest overload policy: the overall lowest-
+                # priority request — queued or the new arrival, newest
+                # within a tie — completes immediately with
+                # status="shed" instead of growing the queue (or
+                # rejecting a high-priority arrival behind low traffic)
+                victim = min(range(len(self.queue)),
+                             key=lambda i: (self.queue[i].priority, -i))
+                if req.priority <= self.queue[victim].priority:
+                    self._shed_request(req)
+                    return qid
+                shed_req = self.queue[victim]
+                del self.queue[victim]
+                self._shed_request(shed_req)
             self.queue.append(req)
         return qid
+
+    def _shed_request(self, req: _Request) -> None:
+        """Finish a load-shed request: empty result, status "shed"."""
+        stats = EngineStats()
+        stats.aborted = True
+        stats.abort_reason = "shed"
+        stats.table_stats = None
+        stats.wall_time_s = time.perf_counter() - req.t_submit
+        self.finished[req.query_id] = MatchResult([], stats)
+        self._fresh_done.append(req.query_id)
+        self.fault_counters["shed"] += 1
 
     def _finish_trivial(self, req: _Request) -> None:
         stats = EngineStats()
@@ -463,6 +526,11 @@ class WaveScheduler:
             if slot is None:
                 break
             req = self._pop_admission()
+            if self._faults is not None and self._faults.poke(
+                    "admission", query_id=req.query_id) is not None:
+                self.fault_counters["admission_failures"] += 1
+                self._fail_request(req, "injected admission fault")
+                continue
             learn = req.learn and self.pool.learning_enabled
             # Δ seed priority: explicit entries (restore / cross-host
             # import) > template-cache warm start (μ == 0 only, sound
@@ -499,6 +567,24 @@ class WaveScheduler:
                            parallelism=req.parallelism)
             q.fingerprint = req.fingerprint
             q.emb_sink = req.on_embeddings
+            # stash the request so a quarantined query can be replayed
+            # on the fallback path (DESIGN.md §8)
+            q.request = req
+            q.fail_count = req.fail_count
+            q.force_single = req.host_only
+            if req.prior_embeddings:
+                # degraded-mode replay: carry the embeddings found
+                # before demotion; the replay deduplicates against
+                # ``emb_seen`` so re-enumeration cannot double-count
+                q.embeddings.extend(req.prior_embeddings)
+                q.emb_delivered = len(req.prior_embeddings)  # streamed
+                q.stats.found = len(req.prior_embeddings)
+                q.stats.ttfe_s = req.prior_ttfe
+            if req.host_only:
+                q.emb_seen = req.emb_seen if req.emb_seen is not None \
+                    else set()
+                q.stats.rows_created += req.prior_rows
+                q.stats.fallback = True
             q.stats.table_stats = DeadEndStats(
                 capacity=self.pattern_capacity)
             if warm:
@@ -516,7 +602,7 @@ class WaveScheduler:
             r = len(req.roots)
             q.stats.rows_created += r
             if (self._use_device and q.parallelism == 1
-                    and not req.keep_table):
+                    and not req.keep_table and not req.host_only):
                 # device-resident stack path: no host segments — roots
                 # trickle onto the device stack as it has headroom (the
                 # cursor advances by the digest's per-slot accept count)
@@ -747,6 +833,204 @@ class WaveScheduler:
                 return True
         return False
 
+    # ------------------------------------------------------------------
+    # fault tolerance: retry, quarantine, degraded-mode fallback
+    # (DESIGN.md §8)
+    # ------------------------------------------------------------------
+    def _fail_request(self, req: _Request, msg: str) -> None:
+        """Finish a request that failed before (or at) admission with
+        ``status="error"``; any embeddings carried from a prior
+        incarnation are kept."""
+        stats = EngineStats()
+        stats.aborted = True
+        stats.abort_reason = "error"
+        stats.fault = msg
+        stats.table_stats = None
+        stats.found = len(req.prior_embeddings or ())
+        stats.wall_time_s = time.perf_counter() - req.t_submit
+        self.finished[req.query_id] = MatchResult(
+            list(req.prior_embeddings or ()), stats)
+        self._fresh_done.append(req.query_id)
+        self.fault_counters["errors"] += 1
+
+    def _run_dispatch(self, call, queries: list, stacks: bool):
+        """Run one device dispatch with bounded retry + exponential
+        backoff. Returns ``(result, hung)``; ``result is None`` means
+        the retry budget is exhausted — the involved ``queries`` have
+        been quarantined and the device banks rebuilt (``stacks=True``
+        additionally rebuilds the frontier StackBank). An injected hang
+        runs the dispatch but flags its digest untrusted for the
+        retire-side watchdog."""
+        attempt = 0
+        while True:
+            hung = False
+            try:
+                if self._faults is not None:
+                    spec = self._faults.poke("dispatch")
+                    if spec is not None:
+                        if spec.kind == "hang":
+                            self.fault_counters["hangs"] += 1
+                            hung = True
+                        else:
+                            raise FaultInjected(
+                                "injected dispatch exception")
+                return call(), hung
+            except DISPATCH_ERRORS as exc:
+                attempt += 1
+                if attempt > self.dispatch_retries:
+                    self._dispatch_failed(queries, exc, stacks)
+                    return None, False
+                self.fault_counters["dispatch_retries"] += 1
+                time.sleep(self.retry_backoff_s * (2 ** (attempt - 1)))
+
+    def _dispatch_failed(self, queries: list, exc: BaseException,
+                         stacks: bool) -> None:
+        msg = (f"dispatch failed after {self.dispatch_retries + 1} "
+               f"attempts: {exc}")
+        self._invalidate_device_state(stacks)
+        for q in list(queries):
+            if q.active:
+                self._quarantine(q, msg)
+
+    def _invalidate_device_state(self, stacks: bool) -> None:
+        """Rebuild the device banks after a hang / failed dispatch /
+        globally-invalid digest. Always sound: Δ patterns only ever
+        prune (losing them costs pruning, never correctness) and every
+        query whose frontier stack lived in the bank is quarantined by
+        the caller before the rebuild, so no live state is dropped."""
+        self.tb = PatternStoreBank.empty(self.n_slots,
+                                         self.pattern_capacity)
+        self._flush_ctr_dev = None
+        self._pending_snaps.clear()
+        if stacks and self._use_device:
+            self.sb = StackBank.empty(self.n_slots, self.stack_capacity,
+                                      self.w)
+
+    def _quarantine(self, q: QueryState, reason: str) -> None:
+        """Quarantine state machine: resident → quarantined →
+        fallback re-admission on the host/single-step path, or — past
+        the per-query failure budget (or with fallback disabled) —
+        errored through the existing abort/eviction path."""
+        self.fault_counters["quarantined"] += 1
+        q.fail_count += 1
+        req = q.request
+        if (self.fallback_on_failure and req is not None
+                and q.fail_count <= self.max_query_failures):
+            self.fault_counters["fallbacks"] += 1
+            self._demote_to_host(q, req, reason)
+        else:
+            self.fault_counters["errors"] += 1
+            q.stats.fault = reason
+            self._abort(q, "error")
+
+    def _demote_to_host(self, q: QueryState, req: _Request,
+                        reason: str) -> None:
+        """Tear the query down *without* publishing a result and
+        re-enqueue its original request on the host single-step
+        fallback path (``host_only``: no device stack, one item per
+        wave). Embeddings found so far ride along and the replay
+        deduplicates against them, so the final set is exact; neighbors
+        are untouched — their rows never leave their own slots."""
+        seen = set()
+        prior = []
+        for e in q.embeddings:
+            b = np.asarray(e, np.int32)
+            key = b.tobytes()
+            if key not in seen:
+                seen.add(key)
+                prior.append(b)
+        req2 = dataclasses.replace(
+            req, host_only=True, fail_count=q.fail_count,
+            prior_embeddings=prior, emb_seen=seen,
+            prior_rows=q.stats.rows_created, prior_ttfe=q.stats.ttfe_s,
+            seed_patterns=None, on_embeddings=q.emb_sink)
+        q.status = "quarantined"    # in-flight digests for this slot drop
+        q.evict()
+        if q.device and self.sb is not None:
+            self.sb = clear_slot_stack(self.sb, np.int32(q.slot))
+        self.pool.release(q.slot)
+        # internal re-admission: jumps the max_queue bound (the query
+        # already held a slot) and front-runs its priority tie
+        self.queue.appendleft(req2)
+
+    def _validate_device_digest(self, dig: dict, n_emb: int,
+                                embS: np.ndarray, embF: np.ndarray,
+                                slot_map: dict) -> tuple[dict, bool]:
+        """Check every invariant a sound digest must satisfy (see
+        DESIGN.md §8 for why each is implied by Lemma 1/4 soundness).
+        Returns ``(bad, global_bad)`` — ``bad`` maps a failing slot to
+        the violated invariant; ``global_bad`` flags corruption that
+        cannot be blamed on one slot (the whole digest is dropped)."""
+        cap = self.stack_capacity
+        v = self.data.n
+        if n_emb < 0 or n_emb > self._emb_cap:
+            return {}, True
+        if n_emb and ((embS < 0) | (embS >= self.n_slots)).any():
+            return {}, True
+        bad: dict[int, str] = {}
+        for slot, q in slot_map.items():
+            if not q.active or not q.device:
+                continue
+            pend, live = int(dig["d_pending"][slot]), \
+                int(dig["d_live"][slot])
+            if not (0 <= pend <= live <= cap):
+                bad[slot] = (f"stack occupancy out of bounds: "
+                             f"pending={pend} live={live} capacity={cap}")
+                continue
+            neg = [k for k in ("d_accepted", "d_expanded", "d_rows",
+                               "d_prunes", "d_inj", "d_stored")
+                   if int(dig[k][slot]) < 0]
+            if neg:
+                bad[slot] = f"negative counter lane {neg[0]}"
+                continue
+            if int(dig["d_outsum"][slot]) != int(dig["d_childlive"][slot]):
+                bad[slot] = (
+                    "Lemma-4 outstanding-counter conservation violated: "
+                    f"sum(outstanding)={int(dig['d_outsum'][slot])} != "
+                    f"live children={int(dig['d_childlive'][slot])}")
+                continue
+            if n_emb:
+                rows = embF[embS == slot][:, :q.n]
+                if len(rows) and ((rows < 0) | (rows >= v)).any():
+                    bad[slot] = "embedding row vertex out of range"
+        return bad, False
+
+    def _fold_embeddings(self, q: QueryState, rows: np.ndarray
+                         ) -> np.ndarray:
+        """Fold a ``[k, >= q.n]`` batch of found embedding rows into the
+        query: permute to query-vertex order, deduplicate against a
+        fallback replay's carried set, apply the limit, stream. Returns
+        a bool mask marking rows that must count as *reported* (they
+        produced a valid embedding — duplicates included, so Lemma-1/4
+        resolution can never learn a failure pattern from a successful
+        row). Rows clipped by the limit stay unmarked: the caller
+        aborts on the limit immediately after, so they are never
+        resolved as failures."""
+        k = len(rows)
+        out = np.empty((k, q.n), np.int32)
+        out[:, q.order[:q.n]] = rows[:, :q.n]
+        if q.emb_seen is None:
+            accept = np.ones(k, bool)
+        else:
+            accept = np.fromiter(
+                (r.tobytes() not in q.emb_seen for r in out),
+                bool, count=k)
+        take = int(accept.sum())
+        if q.limit is not None:
+            take = min(take, q.limit - q.stats.found)
+        report = np.ones(k, bool)
+        idx = np.nonzero(accept)[0]
+        report[idx[max(0, take):]] = False
+        if take > 0:
+            idx = idx[:take]
+            if q.emb_seen is not None:
+                for i in idx:
+                    q.emb_seen.add(out[i].tobytes())
+            q.embeddings.extend(out[idx])
+            q.stats.found += take
+            self._deliver(q)           # stream before retirement
+        return report
+
     def _reset_learning_on_overflow(self) -> None:
         """Embedding-id overflow: clear all stores and pause learning
         (sound — only pruning is lost); the pool re-enables learning
@@ -819,7 +1103,9 @@ class WaveScheduler:
             for qi, q in enumerate(order):
                 if remaining == 0:
                     break
-                if taken[qi] >= item_cap:
+                # fallback queries keep the strict single-item cadence
+                # regardless of the engine-wide packing mode
+                if taken[qi] >= (1 if q.force_single else item_cap):
                     continue
                 if kind is None:
                     kind = q.peek_kind()
@@ -974,6 +1260,13 @@ class WaveScheduler:
             self.t_flush_s += time.perf_counter() - t0
             return
         dedup = self._drain_dedup(bufs, None)
+        if self._faults is not None and dedup and self._faults.poke(
+                "flush", n=len(dedup)) is not None:
+            # injected flush failure: drop the batch — sound, patterns
+            # only ever prune
+            self.fault_counters["flush_drops"] += 1
+            self.t_flush_s += time.perf_counter() - t0
+            return
         n_pad = 16
         while n_pad < len(dedup):
             n_pad *= 2
@@ -1003,8 +1296,13 @@ class WaveScheduler:
             for q, buf in bufs:
                 buf.clear()
             bufs = []
-        out = self._pack_store_batch(
-            self._drain_dedup(bufs, self.store_pad), self.store_pad)
+        dedup = self._drain_dedup(bufs, self.store_pad)
+        if self._faults is not None and dedup and self._faults.poke(
+                "flush", n=len(dedup)) is not None:
+            # injected flush failure: drop the pattern batch (sound)
+            self.fault_counters["flush_drops"] += 1
+            dedup = {}
+        out = self._pack_store_batch(dedup, self.store_pad)
         self.t_flush_s += time.perf_counter() - t0
         return out
 
@@ -1147,40 +1445,110 @@ class WaveScheduler:
         # reserving up front keeps the dispatch fully async
         id_base = self.pool.alloc_ids(t_max * f * self._mega_kpr)
         self._reset_learning_on_overflow()
-        res = run_device_megastep(
-            self.g, self.qb, self.tb, self.sb, in_root, in_rid, in_slot,
-            in_valid, active, np.int32(id_base),
-            bool(self.pool.learning_enabled), np.int32(t_max),
-            kpr=self._mega_kpr, emb_cap=self._emb_cap,
-            backend=self._kernel_backend, wave=self.wave_size)
-        self.tb = res.tb                     # handles only — not
-        self.sb = res.sb                     # materialized
+        res, hung = self._run_dispatch(
+            lambda: run_device_megastep(
+                self.g, self.qb, self.tb, self.sb, in_root, in_rid,
+                in_slot, in_valid, active, np.int32(id_base),
+                bool(self.pool.learning_enabled), np.int32(t_max),
+                kpr=self._mega_kpr, emb_cap=self._emb_cap,
+                backend=self._kernel_backend, wave=self.wave_size),
+            devq, stacks=True)
+        if res is None:
+            return None                      # retries exhausted: the
+        self.tb = res.tb                     # queries were quarantined
+        self.sb = res.sb                     # handles only — not
         # wave/occupancy/EMA accounting happens at retire time, where
         # the digest says whether the wave actually carried work — the
         # trailing empty dispatches that detect completion must not
         # dilute occupancy or decay the adaptive-depth EMA
         return _InflightDev(res, {q.slot: q for q in devq},
-                            tuple(root_slots), t_max)
+                            tuple(root_slots), t_max,
+                            t_dispatch=time.perf_counter(), hung=hung)
+
+    def _watchdog_fire(self, slot_map: dict, msg: str,
+                       stacks: bool) -> None:
+        """A hung or untrusted dispatch retires cleanly instead of
+        blocking all slots: rebuild the device banks and quarantine
+        every involved query (each restarts on the fallback path or
+        errors out past its failure budget)."""
+        self._invalidate_device_state(stacks)
+        for q in list(slot_map.values()):
+            if q.active:
+                self._quarantine(q, msg)
 
     def _retire_device(self, rec: _InflightDev) -> None:
         """Fold one device-resident digest: per-slot scalars into query
         stats (no per-row lanes exist), the embedding batch out to the
         owning queries, then completion / budget / wedge checks."""
+        if rec.hung:
+            # injected hang: neither the digest nor the banks it chains
+            # from are trusted — don't even materialize it
+            self._watchdog_fire(rec.slot_map, "injected dispatch hang",
+                                stacks=True)
+            return
         res = rec.res
         t0 = time.perf_counter()
-        d_accepted = np.asarray(res.d_accepted)
-        d_expanded = np.asarray(res.d_expanded)
-        d_rows = np.asarray(res.d_rows)
-        d_prunes = np.asarray(res.d_prunes)
-        d_inj = np.asarray(res.d_inj)
-        d_stored = np.asarray(res.d_stored)
-        d_pending = np.asarray(res.d_pending)
-        d_live = np.asarray(res.d_live)
-        n_emb = int(res.n_emb)
+        dig = {k: np.asarray(getattr(res, k)) for k in _DEV_LANES}
+        n_emb = max(0, min(int(res.n_emb), self._emb_cap))
         embF = np.asarray(res.emb_frontier)[:n_emb]
         embS = np.asarray(res.emb_slot)[:n_emb]
         t1 = time.perf_counter()
         self.t_sync_s += t1 - t0
+        if (self.dispatch_timeout_s is not None
+                and t1 - rec.t_dispatch > self.dispatch_timeout_s):
+            # per-dispatch watchdog: the call blocked past its deadline
+            # — whatever it returned is not worth trusting over a clean
+            # restart of the involved queries
+            self.fault_counters["hangs"] += 1
+            self._watchdog_fire(
+                rec.slot_map, "dispatch exceeded watchdog deadline "
+                f"({self.dispatch_timeout_s:g}s)", stacks=True)
+            return
+        if self._faults is not None:
+            slots = sorted(s for s, q in rec.slot_map.items()
+                           if q.active and q.device)
+            spec = (self._faults.poke("digest", slots=slots)
+                    if slots else None)
+            if spec is not None:
+                dig = {k: np.array(v) for k, v in dig.items()}
+                corrupt_digest(dig, spec,
+                               stack_capacity=self.stack_capacity,
+                               slots=slots)
+        if self.validate_digests:
+            bad, global_bad = self._validate_device_digest(
+                dig, int(res.n_emb), embS, embF, rec.slot_map)
+            if global_bad:
+                self.fault_counters["digest_failures"] += 1
+                self._watchdog_fire(rec.slot_map,
+                                    "device digest globally invalid",
+                                    stacks=True)
+                return
+            if bad:
+                # quarantine each failing slot's query and zero its
+                # lanes/rows so the aggregate folds below stay clean —
+                # neighbors' digests (and embedding rows) are untouched
+                dig = {k: (v if v.flags.writeable else v.copy())
+                       for k, v in dig.items()}
+                for slot, why in bad.items():
+                    self.fault_counters["digest_failures"] += 1
+                    q = rec.slot_map[slot]
+                    for k in _DEV_LANES:
+                        dig[k][slot] = 0
+                    if q.active:
+                        self._quarantine(
+                            q, f"digest validation failed: {why}")
+                if len(embS):
+                    keep = ~np.isin(embS, list(bad))
+                    embF, embS = embF[keep], embS[keep]
+        n_emb = len(embS)
+        d_accepted = dig["d_accepted"]
+        d_expanded = dig["d_expanded"]
+        d_rows = dig["d_rows"]
+        d_prunes = dig["d_prunes"]
+        d_inj = dig["d_inj"]
+        d_stored = dig["d_stored"]
+        d_pending = dig["d_pending"]
+        d_live = dig["d_live"]
         r0, f0 = self.t_retire_s, self.t_flush_s
 
         self._fold_store_counters(
@@ -1223,16 +1591,7 @@ class WaveScheduler:
                 q = rec.slot_map.get(int(sl_v))
                 if q is None or not q.active:
                     continue
-                rows = embF[embS == sl_v]
-                take = len(rows)
-                if q.limit is not None:
-                    take = min(take, q.limit - q.stats.found)
-                if take > 0:
-                    out = np.empty((take, q.n), np.int32)
-                    out[:, q.order[:q.n]] = rows[:take, :q.n]
-                    q.embeddings.extend(out)
-                    q.stats.found += take
-                    self._deliver(q)       # stream before retirement
+                self._fold_embeddings(q, embF[embS == sl_v])
                 if q.limit is not None and q.stats.found >= q.limit:
                     self._abort(q, "limit")
 
@@ -1361,12 +1720,17 @@ class WaveScheduler:
         # dispatch go out before this digest is read.
         id_base = self.pool.alloc_ids(self._ring_capacity - self.wave_size)
         self._reset_learning_on_overflow()
-        res = run_megastep_mq(
-            self.g, self.qb, self.tb, fr, us, ph, valid, slot_v, depth_v,
-            *st, np.int32(id_base), bool(self.pool.learning_enabled),
-            kpr=self._mega_kpr, k_depth=self.megastep_depth,
-            capacity=self._ring_capacity, emb_cap=self._emb_cap,
-            backend=self._kernel_backend)
+        res, hung = self._run_dispatch(
+            lambda: run_megastep_mq(
+                self.g, self.qb, self.tb, fr, us, ph, valid, slot_v,
+                depth_v, *st, np.int32(id_base),
+                bool(self.pool.learning_enabled),
+                kpr=self._mega_kpr, k_depth=self.megastep_depth,
+                capacity=self._ring_capacity, emb_cap=self._emb_cap,
+                backend=self._kernel_backend),
+            list({q.slot: q for q, *_ in metas}.values()), stacks=False)
+        if res is None:
+            return None             # retries exhausted: queries demoted
         self.tb = res.tb            # handle only — not materialized
         for q in {q.slot: q for q, *_ in metas}.values():
             q.stats.waves += 1
@@ -1374,9 +1738,15 @@ class WaveScheduler:
         # picks: the drained store batch carries buffered patterns from
         # every active query, so digest counter attribution must too
         slot_map = {q.slot: q for q in self.pool.active_queries()}
-        return _Inflight("mega", res, metas, slot_map)
+        return _Inflight("mega", res, metas, slot_map,
+                         t_dispatch=time.perf_counter(), hung=hung)
 
     def _retire_mega(self, rec: _Inflight) -> None:
+        if rec.hung:
+            self._watchdog_fire(
+                {q.slot: q for q, *_ in rec.metas},
+                "injected dispatch hang", stacks=False)
+            return
         res: MegaResult = rec.res
         t0 = time.perf_counter()
         head = int(res.head)
@@ -1399,10 +1769,29 @@ class WaveScheduler:
         dstored = np.asarray(res.dev_stored)
         pruned_v = np.asarray(res.pruned_v)
         n_emb = int(res.n_emb)
-        embF = np.asarray(res.emb_frontier)[:n_emb]
-        embS = np.asarray(res.emb_slot)[:n_emb]
+        embF = np.asarray(res.emb_frontier)[:max(0, n_emb)]
+        embS = np.asarray(res.emb_slot)[:max(0, n_emb)]
         t1 = time.perf_counter()
         self.t_sync_s += t1 - t0
+        if (self.dispatch_timeout_s is not None
+                and t1 - rec.t_dispatch > self.dispatch_timeout_s):
+            self.fault_counters["hangs"] += 1
+            self._watchdog_fire({q.slot: q for q, *_ in rec.metas},
+                                "dispatch exceeded watchdog deadline "
+                                f"({self.dispatch_timeout_s:g}s)",
+                                stacks=False)
+            return
+        if self.validate_digests and not (
+                0 <= head <= tail <= self._ring_capacity
+                and 0 <= n_emb <= self._emb_cap):
+            # the ring digest has no per-slot blame: an out-of-bounds
+            # head/tail invalidates the whole dispatch
+            self.fault_counters["digest_failures"] += 1
+            self._watchdog_fire(
+                {q.slot: q for q, *_ in rec.metas},
+                f"megastep digest globally invalid (head={head} "
+                f"tail={tail} n_emb={n_emb})", stacks=False)
+            return
         r0, f0 = self.t_retire_s, self.t_flush_s
 
         # ---- Δ store accounting (digest counter lanes) -----------------
@@ -1460,16 +1849,7 @@ class WaveScheduler:
                 q = slot_map.get(int(sl_v))
                 if q is None or not q.active:
                     continue
-                rows = embF[embS == sl_v]
-                take = len(rows)
-                if q.limit is not None:
-                    take = min(take, q.limit - q.stats.found)
-                if take > 0:
-                    out = np.empty((take, q.n), np.int32)
-                    out[:, q.order[:q.n]] = rows[:take, :q.n]
-                    q.embeddings.extend(out)
-                    q.stats.found += take
-                    self._deliver(q)       # stream before retirement
+                self._fold_embeddings(q, embF[embS == sl_v])
                 if q.limit is not None and q.stats.found >= q.limit:
                     self._abort(q, "limit")
 
@@ -1739,19 +2119,12 @@ class WaveScheduler:
             if item_last:
                 # complete embeddings (vectorized gather + permute)
                 emb_rows, emb_cols = np.nonzero(child_valid[sl])
-                take = len(emb_rows)
-                if q.limit is not None:
-                    take = min(take, q.limit - q.stats.found)
-                if take > 0:
-                    mrows = seg.frontier[s + emb_rows[:take]].copy()
+                if len(emb_rows):
+                    mrows = seg.frontier[s + emb_rows].copy()
                     mrows[:, seg.depth] = \
-                        child_v[woff + emb_rows[:take], emb_cols[:take]]
-                    out = np.empty((take, q.n), np.int32)
-                    out[:, q.order[:q.n]] = mrows[:, :q.n]
-                    q.embeddings.extend(out)
-                    q.stats.found += take
-                    seg.reported[s + emb_rows[:take]] = True
-                self._deliver(q)           # stream before retirement
+                        child_v[woff + emb_rows, emb_cols]
+                    report = self._fold_embeddings(q, mrows)
+                    seg.reported[s + emb_rows[report]] = True
                 if q.limit is not None and q.stats.found >= q.limit:
                     self._abort(q, "limit")
                     continue
@@ -1875,6 +2248,10 @@ class WaveScheduler:
                 if self.n_slots else 0.0),
             "warm_started": self.warm_started,
             "warm_patterns_seeded": self.warm_patterns_seeded,
+            # fault-tolerance counters (DESIGN.md §8): retries, hangs,
+            # digest validation failures, quarantines and their
+            # outcomes (fallback vs error), flush drops, load shedding
+            "faults": dict(self.fault_counters),
             "pattern_cache": (self.pattern_cache.report()
                               if self.pattern_cache is not None else None),
         }

@@ -67,6 +67,8 @@ class QueryServer:
         self.ttfes: list[float] = []
         self.n_timeouts = 0
         self.n_cancelled = 0
+        self.n_errors = 0
+        self.n_shed = 0
         self.session.on_complete = self._record
 
     # convenience views of the resolved per-query defaults
@@ -91,6 +93,8 @@ class QueryServer:
             self.ttfes.append(qr.ttfe_s)
         self.n_timeouts += qr.timed_out
         self.n_cancelled += qr.status == "cancelled"
+        self.n_errors += qr.status == "error"
+        self.n_shed += qr.status == "shed"
 
     # ------------------------------------------------------------------
     # request/handle API
@@ -176,7 +180,9 @@ class QueryServer:
                "p99_ms": float(np.percentile(lat, 99) * 1e3),
                "mean_ms": float(lat.mean() * 1e3),
                "timeouts": int(self.n_timeouts),
-               "cancelled": int(self.n_cancelled)}
+               "cancelled": int(self.n_cancelled),
+               "errors": int(self.n_errors),
+               "shed": int(self.n_shed)}
         # time-to-first-embedding percentiles (queries that found >= 1
         # embedding): the streaming SLO — how long until a consumer of
         # MatchHandle.stream() sees its first batch
