@@ -144,6 +144,10 @@ def run(csv_rows: list | None = None, budget_s: float = 90.0,
         "store_overwrites": rep["store_overwrites"],
         "store_load_factor": rep["store_load_factor"],
         "pattern_cache": rep["pattern_cache"],
+        # the tuning record the server resolved at construction
+        # (DESIGN.md §9): names the consumed TUNING_CACHE.json record
+        # ("source" = "tuning-cache") or the built-in defaults
+        "tuning": rep["tuning"],
         # per-query JSON-safe summaries (QueryResult.to_dict) — what a
         # serving client would log; check_smoke.py validates the schema
         "results": [r.to_dict() for r in results],
@@ -207,6 +211,11 @@ def run(csv_rows: list | None = None, budget_s: float = 90.0,
         "prune_rate": trep["prune_rate"],
         "device_sync_time_s": trep["device_sync_time_s"],
         "host_time_s": trep["host_time_s"],
+        # per-workload store pressure (the capacity right-sizing signal:
+        # uniform traffic holds ~15 patterns, trap/corridor are the
+        # workloads that actually fill the store)
+        "store_load_factor": trep["store_load_factor"],
+        "pattern_capacity": trep["pattern_capacity"],
     }
 
     # --- distributed workload: one heavy trap query matched as
@@ -278,6 +287,8 @@ def run(csv_rows: list | None = None, budget_s: float = 90.0,
                                 / len(warm)),
         "warm_started": rrep["warm_started"],
         "cache": rrep["pattern_cache"],
+        "store_load_factor": rrep["store_load_factor"],
+        "pattern_capacity": rrep["pattern_capacity"],
     }
 
     if out_path is not None:

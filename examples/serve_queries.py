@@ -51,10 +51,22 @@ def main():
     ap.add_argument("--query-size", type=int, default=10)
     ap.add_argument("--backend", default="engine",
                     choices=["sequential", "engine"])
-    ap.add_argument("--n-slots", type=int, default=32,
-                    help="concurrent queries resident per wave (engine)")
-    ap.add_argument("--wave-size", type=int, default=256)
+    # default None, NOT a number: an always-explicit argparse default
+    # used to pin every run to n_slots=32/wave_size=256, so the server
+    # never resolved the tuned configuration the committed
+    # BENCH_serving.json was measured with — the printed baseline delta
+    # compared unlike configs. Leave unset to let the server resolve
+    # MatchOptions > tuning cache > built-in default (DESIGN.md §9).
+    ap.add_argument("--n-slots", type=int, default=None,
+                    help="concurrent queries resident per wave (engine); "
+                         "default: tuned/built-in resolution")
+    ap.add_argument("--wave-size", type=int, default=None,
+                    help="rows per device wave; default: tuned/built-in "
+                         "resolution")
     args = ap.parse_args()
+    knobs = {k: v for k, v in (("n_slots", args.n_slots),
+                               ("wave_size", args.wave_size))
+             if v is not None}
 
     data = yeast_like_graph(0)
     print(f"data graph: |V|={data.n} |E|={data.n_edges} "
@@ -77,12 +89,18 @@ def main():
     # a cold megastep compile would eat the per-query time budgets
     warm = queries[:min(4, len(queries))] + [heavy]
     QueryServer(data, backend=args.backend, limit=100,
-                time_budget_s=60.0, n_slots=args.n_slots,
-                wave_size=args.wave_size).submit_batch(
+                time_budget_s=60.0, **knobs).submit_batch(
                     warm, parallelism=[1] * (len(warm) - 1) + [8])
     server = QueryServer(data, backend=args.backend, limit=1000,
-                         time_budget_s=2.0, n_slots=args.n_slots,
-                         wave_size=args.wave_size)
+                         time_budget_s=2.0, **knobs)
+    if args.backend == "engine":
+        tun = server.scheduler.tuning_record
+        print(f"engine config: {tun['source']}"
+              f"{' ' + tun['record'] if tun['record'] else ''} -> "
+              f"n_slots={server.scheduler.n_slots} "
+              f"wave_size={server.scheduler.wave_size} "
+              f"megastep_depth={server.scheduler.megastep_depth} "
+              f"pattern_capacity={server.scheduler.pattern_capacity}")
     import time
     t0 = time.perf_counter()
     results = server.submit_batch(queries, parallelism=par)

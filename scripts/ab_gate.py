@@ -10,7 +10,10 @@ qps (first-run jitter from the shared JIT cache is real).
 
 The run appends ``{commit, qps_ratio, host_frac}`` to the ``ab_history``
 list in BENCH_serving.json so the normalized trajectory is versioned
-alongside the absolute headline numbers.
+alongside the absolute headline numbers. When the new tree consumed a
+tuning-cache record, a second new-tree measurement with
+``REPRO_TUNING_DISABLE=1`` adds ``tuned_ratio`` (tuned / built-in-default
+qps, same container) to the record — the autotuner's standing evidence.
 
 When the gate *would* fail while the baseline disagrees with itself by
 more than 2x across its own runs (best/worst self-ratio — a noisy
@@ -46,12 +49,14 @@ def _git(*args: str) -> subprocess.CompletedProcess:
                           text=True)
 
 
-def _smoke_qps(tree: pathlib.Path, runs: int) -> tuple[float, float, dict]:
+def _smoke_qps(tree: pathlib.Path, runs: int,
+               extra_env: dict | None = None) -> tuple[float, float, dict]:
     """Best- and worst-of-``runs`` smoke qps for one source tree (plus
     the payload of the best run). The best/worst spread is the
     *self-ratio* — the gate's noise signal for this container."""
     env = dict(os.environ)
     env["PYTHONPATH"] = str(tree / "src")
+    env.update(extra_env or {})
     best, worst, best_payload = 0.0, float("inf"), None
     for _ in range(runs):
         out = subprocess.run(
@@ -124,9 +129,29 @@ def main() -> int:
         finally:
             _git("worktree", "remove", "--force", str(base_tree))
 
+    # tuned-vs-default leg (DESIGN.md §9): re-run the *new* tree with
+    # the tuning cache disabled so the scheduler falls back to the
+    # built-in defaults, and record tuned/default qps in the same
+    # container. Only meaningful when the tuned run actually consumed a
+    # cache record; a builtin-resolved run would measure noise vs noise.
+    tuned_ratio = None
+    if new_payload.get("tuning", {}).get("source") == "tuning-cache":
+        try:
+            default_qps, _, _ = _smoke_qps(
+                ROOT, runs, extra_env={"REPRO_TUNING_DISABLE": "1"})
+            tuned_ratio = new_qps / max(default_qps, 1e-9)
+            print(f"ab_gate: tuned={new_qps:.1f} qps vs "
+                  f"default={default_qps:.1f} qps "
+                  f"(tuned_ratio={tuned_ratio:.3f})")
+        except (RuntimeError, json.JSONDecodeError,
+                subprocess.TimeoutExpired) as e:
+            print(f"ab_gate: tuned-vs-default leg skipped ({e})")
+
     head = _git("rev-parse", "--short", "HEAD").stdout.strip()
     record = {"commit": head, "qps_ratio": round(ratio, 4),
               "host_frac": round(new_payload.get("host_frac", 0.0), 4)}
+    if tuned_ratio is not None:
+        record["tuned_ratio"] = round(tuned_ratio, 4)
     if retried:
         record["retried"] = True
     if BENCH.exists():

@@ -23,7 +23,11 @@ host fallback.
 """
 import argparse
 import json
+import pathlib
 import sys
+
+TUNING_CACHE = pathlib.Path(__file__).resolve().parent.parent / \
+    "TUNING_CACHE.json"
 
 REQUIRED = [
     "n_queries", "queries_per_sec", "total_embeddings", "p50_ms", "p99_ms",
@@ -39,6 +43,9 @@ REQUIRED = [
     # bounded hashed Δ store + cross-query template cache
     "pattern_capacity", "store_evictions", "store_overwrites",
     "store_load_factor", "pattern_cache",
+    # autotuning (DESIGN.md §9): the payload must name the tuning
+    # record the server resolved
+    "tuning",
     "trap_workload", "distributed_workload", "repeated_template_workload",
 ]
 REQUIRED_TEMPLATE = [
@@ -59,6 +66,52 @@ CHAOS_REQUIRED = [
     "faults_fired", "fired", "fault_counters", "digest_failures_caught",
     "recovered_queries", "recovery_p50_ms", "recovery_p99_ms",
 ]
+
+
+def _check_tuning(payload) -> str | None:
+    """The payload must name the resolved tuning record, and a
+    committed TUNING_CACHE.json must match the cache schema *and*
+    actually be the record the bench consumed (DESIGN.md §9)."""
+    t = payload.get("tuning")
+    if not isinstance(t, dict):
+        return "tuning must be the resolved-record descriptor dict"
+    for k in ("source", "record", "params", "schema_hash"):
+        if k not in t:
+            return f"tuning descriptor missing {k!r}"
+    if t["source"] not in ("tuning-cache", "builtin"):
+        return f"tuning source {t['source']!r} unknown"
+    if not isinstance(t["params"], dict) or not t["params"]:
+        return "tuning params must be the resolved knob dict"
+    if not TUNING_CACHE.exists():
+        return None
+    try:
+        cache = json.loads(TUNING_CACHE.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return f"TUNING_CACHE.json unreadable: {e}"
+    if not isinstance(cache.get("version"), int):
+        return "TUNING_CACHE.json missing integer 'version'"
+    if not isinstance(cache.get("schema_hash"), str):
+        return "TUNING_CACHE.json missing 'schema_hash'"
+    records = cache.get("records")
+    if not isinstance(records, dict) or not records:
+        return "TUNING_CACHE.json 'records' must be a non-empty dict"
+    for name, rec in records.items():
+        for k in ("name", "schema_hash", "params", "measured"):
+            if k not in rec:
+                return f"record {name!r} missing {k!r}"
+        if not isinstance(rec["params"], dict):
+            return f"record {name!r} params must be a dict"
+    # a fresh-schema cache exists, so the smoke server (same backend /
+    # device / shape the tuner measured) must have consumed a record
+    if cache["schema_hash"] == t["schema_hash"] \
+            and t["source"] != "tuning-cache":
+        return ("TUNING_CACHE.json is present and schema-current but "
+                "the bench resolved builtin defaults — the record was "
+                "not consumed")
+    if t["source"] == "tuning-cache" and t["record"] not in records:
+        return (f"payload names tuning record {t['record']!r} which is "
+                "not in TUNING_CACHE.json")
+    return None
 
 
 def _check_result_dicts(results) -> str | None:
@@ -137,6 +190,18 @@ def main() -> int:
     if err:
         print(f"results payload invalid: {err}", file=sys.stderr)
         return 1
+    err = _check_tuning(payload)
+    if err:
+        print(f"tuning payload invalid: {err}", file=sys.stderr)
+        return 1
+    # per-workload store load factors (the capacity right-sizing
+    # evidence): every workload leg must report how full its Δ store got
+    for leg in ("trap_workload", "repeated_template_workload"):
+        lf = payload[leg].get("store_load_factor")
+        if not isinstance(lf, float) or not (0.0 <= lf <= 1.0):
+            print(f"{leg}: store_load_factor={lf!r} missing or out of "
+                  "[0, 1]", file=sys.stderr)
+            return 1
     # streaming assertions: union pinned to the blocking API, and TTFE
     # strictly below completion latency (uniform workload) — i.e. the
     # stream genuinely yields before the query retires
@@ -173,8 +238,10 @@ def main() -> int:
               f"n_repeats={rt['n_repeats']}: template cache not hitting",
               file=sys.stderr)
         return 1
+    tun = payload["tuning"]
     print("serving_bench --smoke: OK "
           f"(qps={payload['queries_per_sec']:.1f}, "
+          f"tuning={tun['record'] or tun['source']}, "
           f"prune_rate={payload['prune_rate']:.2f}, "
           f"ttfe_p50={payload['ttfe_p50_ms']:.0f}ms vs "
           f"p50={payload['p50_ms']:.0f}ms, "

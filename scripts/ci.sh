@@ -18,6 +18,12 @@ python -m pytest -x -q
 # selection change in the main invocation can never silently drop the
 # shard-as-segments / elastic-restore coverage)
 python -m pytest tests/test_distributed.py -q
+# autotuner smoke sweep (DESIGN.md §9): seconds-scale candidate sweep at
+# the smoke shape on the jnp backend. Refreshes TUNING_CACHE.json so the
+# serving smoke below consumes a schema-current record (check_smoke.py
+# asserts the payload names it) and aborts if any candidate's embedding
+# digest deviates — tuning may move time, never results.
+python -m repro.tuning.autotune --smoke > /dev/null
 # tiny-size serving benchmark smoke run: exercises the megastep + async
 # pipeline, the request/handle streaming API, the distributed
 # shard-as-segments workload, and the repeated-template pattern-cache

@@ -40,10 +40,29 @@ from typing import TYPE_CHECKING, Any
 if TYPE_CHECKING:                                    # pragma: no cover
     from ..core.graph import Graph
 
-__all__ = ["MatchOptions", "MatchRequest"]
+__all__ = ["MatchOptions", "MatchRequest", "ENGINE_TUNABLE_DEFAULTS"]
 
 # accepted spellings of historical kwargs -> canonical field
 _ALIASES = {"max_rows": "max_recursions"}
+
+# Engine knobs the autotuner may fill (DESIGN.md §9). Their MatchOptions
+# default is ``None`` = "let the tuning layer decide"; the values below
+# are the built-in fallback when no tuning record matches. An explicit
+# user value always wins over both (pinned by tests/test_tuning.py).
+# ``pattern_capacity`` was right-sized from 4096 by measurement: the
+# serving workloads peak near ~130 resident patterns per slot (corridor,
+# 128 baits), so 4096 ran at load factor 0.004 on uniform traffic —
+# capacity paid for but unused. 1024 keeps 8x headroom over the heaviest
+# measured workload, and eviction is sound anyway (loses pruning, never
+# results).
+ENGINE_TUNABLE_DEFAULTS = {
+    "n_slots": 8,
+    "wave_size": 512,
+    "megastep_depth": 6,
+    "store_flush_min": 16,
+    "stack_capacity": 1024,
+    "pattern_capacity": 1024,
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,20 +82,23 @@ class MatchOptions:
     seed_patterns: dict | None = None  # entries dict to warm-start Δ
 
     # ---- per-engine (consumed at scheduler construction) --------------
-    n_slots: int = 8
-    wave_size: int = 512
+    # ``None`` on a tunable knob means "resolve through the tuning layer"
+    # (tuning cache record for this backend/shape, else the built-in
+    # ENGINE_TUNABLE_DEFAULTS entry — DESIGN.md §9). Explicit values win.
+    n_slots: int | None = None
+    wave_size: int | None = None
     kpr: int = 16
-    megastep_depth: int = 6
+    megastep_depth: int | None = None
     max_queue: int = 4096
-    store_flush_min: int = 16
+    store_flush_min: int | None = None
     store_pad: int = 256
     adaptive_prune_threshold: float = 0.05
     # device-resident frontier stacks (DESIGN.md §2): per-slot DFS stack
     # depth held in device arrays. ``device_stacks=False`` forces every
     # query through the host SegmentPool path (debug / A-B testing).
     device_stacks: bool = True
-    stack_capacity: int = 1024
-    pattern_capacity: int = 4096
+    stack_capacity: int | None = None
+    pattern_capacity: int | None = None
     pattern_cache: bool = True
     pattern_cache_templates: int = 64
     pattern_cache_top_k: int = 512
@@ -115,11 +137,16 @@ class MatchOptions:
                 f"parallelism must be >= 1, got {self.parallelism!r}")
         for name in ("n_slots", "wave_size", "kpr", "megastep_depth",
                      "max_queue", "store_pad", "pattern_capacity",
-                     "hit_decay_every", "stack_capacity"):
-            if getattr(self, name) < 1:
+                     "hit_decay_every", "stack_capacity",
+                     "store_flush_min"):
+            v = getattr(self, name)
+            if v is None and name in ENGINE_TUNABLE_DEFAULTS:
+                continue              # tunable: resolved at construction
+            if v is None or v < 1:
                 raise ValueError(
                     f"{name} must be >= 1, got {getattr(self, name)!r}")
-        if self.pattern_capacity & (self.pattern_capacity - 1):
+        if (self.pattern_capacity is not None
+                and self.pattern_capacity & (self.pattern_capacity - 1)):
             raise ValueError("pattern_capacity must be a power of two, "
                              f"got {self.pattern_capacity!r}")
         _nonneg("dispatch_timeout_s", self.dispatch_timeout_s)
@@ -159,6 +186,24 @@ class MatchOptions:
         if kw:
             opts = dataclasses.replace(opts, **kw)
         return opts.validate()
+
+    def resolved_engine(self, *, backend: str | None = None,
+                        n_vertices: int | None = None
+                        ) -> tuple[dict, dict]:
+        """Concrete engine knobs + the tuning record that supplied them.
+
+        Fills every tunable knob the caller left ``None`` from the
+        persistent tuning cache (keyed by backend / device kind /
+        quantized data-graph size — DESIGN.md §9), falling back to
+        ``ENGINE_TUNABLE_DEFAULTS``. Explicit values on this options
+        object always win over the cache. Returns ``(knobs, record)``
+        where ``knobs`` maps every ENGINE_TUNABLE_DEFAULTS key (plus
+        ``block_f``, the refine-kernel row-block height) to an int and
+        ``record`` is a JSON-safe descriptor naming the consumed tuning
+        record (``source`` = "tuning-cache" | "builtin")."""
+        from ..tuning.resolve import resolve_engine_options
+        return resolve_engine_options(self, backend=backend,
+                                      n_vertices=n_vertices)
 
 
 @dataclasses.dataclass

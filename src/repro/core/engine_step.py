@@ -282,7 +282,8 @@ def read_store_slot(tb: PatternStoreBank, slot: jax.Array) -> PatternStore:
 # ===================================================================
 def refine_eq2_mq(g: GraphArrays, qb: QueryBank, query_slot: jax.Array,
                   frontier: jax.Array, depth: jax.Array,
-                  backend: str = "jnp") -> jax.Array:
+                  backend: str = "jnp",
+                  block_f: int | None = None) -> jax.Array:
     """Eq. 2 candidate refinement for a mixed-query wave.
 
     C'(row) = cand[qid, depth] ∩ ⋂_{p < depth, p ~q depth} N(frontier[p]).
@@ -303,7 +304,8 @@ def refine_eq2_mq(g: GraphArrays, qb: QueryBank, query_slot: jax.Array,
                   & (pos[None, :] < depth[:, None]))         # [F, NP]
         w = acc0.shape[1]
         out = refine_bitmap_rows(g.adj_bitmap, acc0, frontier, active,
-                                 interpret=(backend == "pallas_interpret"))
+                                 interpret=(backend == "pallas_interpret"),
+                                 block_f=block_f)
         return out[:, :w].astype(jnp.uint32)
 
     # one gather + reduce instead of a fori_loop over positions: 64
@@ -360,7 +362,7 @@ def _expand_rows(g: GraphArrays, qb: QueryBank, tb: PatternStoreBank,
                  frontier: jax.Array, used: jax.Array, phi: jax.Array,
                  row_valid: jax.Array, query_slot: jax.Array,
                  depth: jax.Array, kpr: int,
-                 backend: str = "jnp"
+                 backend: str = "jnp", block_f: int | None = None
                  ) -> tuple[WaveResultMQ, PatternStoreBank]:
     """One expansion pass over F mixed-query rows (shared by
     :func:`expand_wave_mq` and the megastep loop body): Eq. 2 refinement,
@@ -371,7 +373,7 @@ def _expand_rows(g: GraphArrays, qb: QueryBank, tb: PatternStoreBank,
     f = frontier.shape[0]
 
     refined = refine_eq2_mq(g, qb, query_slot, frontier, depth,
-                            backend)                         # [F, W]
+                            backend, block_f)                # [F, W]
     refined = jnp.where(row_valid[:, None], refined, jnp.uint32(0))
     refined_empty = (_popcount_rows(refined) == 0) & row_valid
 
@@ -426,12 +428,12 @@ def _expand_rows(g: GraphArrays, qb: QueryBank, tb: PatternStoreBank,
 
 
 @functools.partial(jax.jit, donate_argnums=(2,),
-                   static_argnames=("kpr", "backend"))
+                   static_argnames=("kpr", "backend", "block_f"))
 def expand_wave_mq(g: GraphArrays, qb: QueryBank, tb: PatternStoreBank,
                    frontier: jax.Array, used: jax.Array, phi: jax.Array,
                    row_valid: jax.Array, query_slot: jax.Array,
                    depth: jax.Array, kpr: int = 16,
-                   backend: str = "jnp"
+                   backend: str = "jnp", block_f: int = 8
                    ) -> tuple[WaveResultMQ, PatternStoreBank]:
     """Expand every row of a mixed-query wave by one query position.
 
@@ -450,7 +452,7 @@ def expand_wave_mq(g: GraphArrays, qb: QueryBank, tb: PatternStoreBank,
     Returns (result, store bank with Δ lookup hit counters bumped).
     """
     return _expand_rows(g, qb, tb, frontier, used, phi, row_valid,
-                        query_slot, depth, kpr, backend)
+                        query_slot, depth, kpr, backend, block_f)
 
 
 @functools.partial(jax.jit, donate_argnums=(0,),
@@ -588,7 +590,7 @@ class MegaResult(NamedTuple):
 
 
 @functools.partial(jax.jit, donate_argnums=(2,), static_argnames=(
-    "kpr", "k_depth", "capacity", "emb_cap", "backend"))
+    "kpr", "k_depth", "capacity", "emb_cap", "backend", "block_f"))
 def run_megastep_mq(g: GraphArrays, qb: QueryBank, tb: PatternStoreBank,
                     frontier: jax.Array, used: jax.Array, phi: jax.Array,
                     row_valid: jax.Array, query_slot: jax.Array,
@@ -598,7 +600,8 @@ def run_megastep_mq(g: GraphArrays, qb: QueryBank, tb: PatternStoreBank,
                     st_mask: jax.Array, st_valid: jax.Array,
                     id_base: jax.Array, learn_enabled: jax.Array,
                     kpr: int = 8, k_depth: int = 4, capacity: int = 1024,
-                    emb_cap: int = 512, backend: str = "jnp") -> MegaResult:
+                    emb_cap: int = 512, backend: str = "jnp",
+                    block_f: int = 8) -> MegaResult:
     """Fused expand → assemble → pattern-store over up to ``k_depth``
     consecutive depth-steps, one host round-trip.
 
@@ -684,7 +687,7 @@ def run_megastep_mq(g: GraphArrays, qb: QueryBank, tb: PatternStoreBank,
             s["buf_valid"], head, f_step)
 
         res, tb_l = _expand_rows(g, qb, s["tb"], cf, cu, cp, valid_c,
-                                 slot_c, depth_c, kpr, backend)
+                                 slot_c, depth_c, kpr, backend, block_f)
 
         is_last = depth_c + 1 == qb.n_query[slot_c]          # [F]
 
@@ -1085,7 +1088,7 @@ def _resolution_sweep(qb: QueryBank, tb: PatternStoreBank, lanes: dict,
 
 
 @functools.partial(jax.jit, donate_argnums=(2, 3), static_argnames=(
-    "kpr", "emb_cap", "backend", "wave"))
+    "kpr", "emb_cap", "backend", "wave", "block_f"))
 def run_device_megastep(g: GraphArrays, qb: QueryBank,
                         tb: PatternStoreBank, sb: StackBank,
                         in_root: jax.Array, in_rid: jax.Array,
@@ -1094,7 +1097,8 @@ def run_device_megastep(g: GraphArrays, qb: QueryBank,
                         learn_enabled: jax.Array, t_max: jax.Array,
                         kpr: int = 8, emb_cap: int = 512,
                         backend: str = "jnp",
-                        wave: int | None = None) -> DeviceResult:
+                        wave: int | None = None,
+                        block_f: int = 8) -> DeviceResult:
     """One dispatch of the device-resident scheduler loop.
 
     Admits root rows into free stack entries, then runs up to ``t_max``
@@ -1239,7 +1243,7 @@ def run_device_megastep(g: GraphArrays, qb: QueryBank,
         is_fresh = (st_sel == STK_FRESH) & row_valid
 
         # ---- expansion (fresh: full Eq.2 pass; LEFT: re-extraction) ----
-        refined = refine_eq2_mq(g, qb, s_of_c, wf, wd, backend)
+        refined = refine_eq2_mq(g, qb, s_of_c, wf, wd, backend, block_f)
         refined = jnp.where(is_fresh[:, None], refined, jnp.uint32(0))
         refined_empty = is_fresh & (_popcount_rows(refined) == 0)
 

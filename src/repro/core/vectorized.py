@@ -66,6 +66,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import logging
 import time
 
 import jax
@@ -74,6 +75,8 @@ import numpy as np
 
 from ..api.options import MatchOptions
 from ..kernels.config import get_backend
+
+_log = logging.getLogger(__name__)
 from ..patterns import (DeadEndStats, PatternCache, PatternStore,
                         PatternStoreBank, age_hits, empty_entries,
                         entries_to_store, store_to_entries)
@@ -208,21 +211,34 @@ class WaveScheduler:
         opts = MatchOptions.resolve(options, **knobs)
         self.options = opts
         self.data = data
-        self.n_slots = int(opts.n_slots)
-        self.wave_size = int(opts.wave_size)
+        self._kernel_backend = get_backend()
+        # tuning resolution (DESIGN.md §9): every tunable knob the
+        # caller left None fills from the persistent tuning cache
+        # (keyed by backend / device kind / quantized |V|), else the
+        # built-in default. Explicit values — options or kwargs — win.
+        tuned, self.tuning_record = opts.resolved_engine(
+            backend=self._kernel_backend, n_vertices=data.n)
+        _log.info(
+            "WaveScheduler tuning: %s (%s) for backend=%s |V|=%d -> %s",
+            self.tuning_record["source"],
+            self.tuning_record["record"] or "built-in defaults",
+            self._kernel_backend, data.n, tuned)
+        self.n_slots = tuned["n_slots"]
+        self.wave_size = tuned["wave_size"]
         self.kpr = int(opts.kpr)
         self.use_pruning = (True if opts.use_pruning is None
                             else opts.use_pruning)
         self.max_queue = int(opts.max_queue)
-        self.megastep_depth = int(opts.megastep_depth)
-        self.store_flush_min = int(opts.store_flush_min)
+        self.megastep_depth = tuned["megastep_depth"]
+        self.store_flush_min = tuned["store_flush_min"]
         self.store_pad = int(opts.store_pad)
+        self._block_f = tuned["block_f"]
         # bounded hashed Δ store (patterns.store): per-slot capacity is a
         # power of two, independent of the data-graph vertex count.
         # Eviction is counter-guided and always sound; ``hit_decay_every``
         # waves the device hit counters are halved so eviction tracks
         # recent usefulness.
-        self.pattern_capacity = int(opts.pattern_capacity)
+        self.pattern_capacity = tuned["pattern_capacity"]
         self.hit_decay_every = int(opts.hit_decay_every)
         # cross-query template cache (patterns.cache): retiring learners
         # snapshot their hot transferable (μ == 0) patterns; admissions
@@ -268,7 +284,6 @@ class WaveScheduler:
         # depth-steps before the guard trips.
         self._ring_capacity = 2 * self.wave_size * (self._mega_kpr + 1)
         self._emb_cap = 2 * self.wave_size * self._mega_kpr
-        self._kernel_backend = get_backend()
         self.w = (data.n + 31) // 32
         self.g = GraphArrays(
             adj_bitmap=jnp.asarray(data.adj_bitmap),
@@ -298,7 +313,7 @@ class WaveScheduler:
         # host SegmentPool path (it needs row-level introspection).
         self._use_device = (bool(opts.device_stacks)
                             and self.megastep_depth > 1)
-        self.stack_capacity = int(opts.stack_capacity)
+        self.stack_capacity = tuned["stack_capacity"]
         # eager: the bank is a construction cost, not a first-query
         # latency cost (a fresh server's first batch used to pay it)
         self.sb: StackBank | None = (
@@ -1451,7 +1466,8 @@ class WaveScheduler:
                 in_slot, in_valid, active, np.int32(id_base),
                 bool(self.pool.learning_enabled), np.int32(t_max),
                 kpr=self._mega_kpr, emb_cap=self._emb_cap,
-                backend=self._kernel_backend, wave=self.wave_size),
+                backend=self._kernel_backend, wave=self.wave_size,
+                block_f=self._block_f),
             devq, stacks=True)
         if res is None:
             return None                      # retries exhausted: the
@@ -1727,7 +1743,7 @@ class WaveScheduler:
                 bool(self.pool.learning_enabled),
                 kpr=self._mega_kpr, k_depth=self.megastep_depth,
                 capacity=self._ring_capacity, emb_cap=self._emb_cap,
-                backend=self._kernel_backend),
+                backend=self._kernel_backend, block_f=self._block_f),
             list({q.slot: q for q, *_ in metas}.values()), stacks=False)
         if res is None:
             return None             # retries exhausted: queries demoted
@@ -2012,7 +2028,8 @@ class WaveScheduler:
                 slot_v[valid], minlength=self.n_slots).astype(np.int64)
             res, self.tb = expand_wave_mq(
                 self.g, self.qb, self.tb, fr, us, ph, valid, slot_v,
-                depth_v, kpr=self.kpr, backend=self._kernel_backend)
+                depth_v, kpr=self.kpr, backend=self._kernel_backend,
+                block_f=self._block_f)
             self.t_dispatch_s += time.perf_counter() - t0
             t1 = time.perf_counter()
             digest = dict(
@@ -2252,6 +2269,10 @@ class WaveScheduler:
             # digest validation failures, quarantines and their
             # outcomes (fallback vs error), flush drops, load shedding
             "faults": dict(self.fault_counters),
+            # the tuning record this scheduler resolved at construction
+            # (DESIGN.md §9) — "tuning-cache" names the consumed
+            # TUNING_CACHE.json record, "builtin" means defaults
+            "tuning": dict(self.tuning_record),
             "pattern_cache": (self.pattern_cache.report()
                               if self.pattern_cache is not None else None),
         }

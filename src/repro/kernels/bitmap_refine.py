@@ -40,45 +40,54 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .config import interpret_mode
+from .config import interpret_mode, kernel_block_f
 
-BLOCK_F = 8     # sublanes per grid step (f32/int32 min tile height)
-
-
-def _refine_kernel(frontier_ref, active_ref, adj_ref, cand_ref, out_ref):
-    """One grid step refines BLOCK_F rows, looping positions in-body."""
-    b = pl.program_id(0)
-    np_ = frontier_ref.shape[1]
-
-    def body(p, acc):
-        rows = []
-        for i in range(BLOCK_F):            # static unroll over sublanes
-            r = b * BLOCK_F + i
-            vtx = frontier_ref[r, p]
-            act = (active_ref[r, p] != 0) & (vtx >= 0)
-            idx = jnp.where(act, vtx, 0).clip(0, adj_ref.shape[0] - 1)
-            row = adj_ref[pl.ds(idx, 1), :]             # (1, W_pad)
-            rows.append(jnp.where(act, row, jnp.int32(-1)))
-        return acc & jnp.concatenate(rows, axis=0)
-
-    out_ref[...] = lax.fori_loop(0, np_, body, cand_ref[...])
+BLOCK_F = 8     # default sublanes per grid step (int32 min tile height)
+                # — the tuned value resolves through kernels.config
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def _refine_rows_call(adj, cand, frontier, active, interpret: bool):
+def _make_refine_kernel(block_f: int):
+    """Kernel body closure over the (tuned) row-block height — the
+    sublane loop is a static unroll, so the height is a trace-time
+    constant, not a ref shape."""
+
+    def _refine_kernel(frontier_ref, active_ref, adj_ref, cand_ref,
+                       out_ref):
+        b = pl.program_id(0)
+        np_ = frontier_ref.shape[1]
+
+        def body(p, acc):
+            rows = []
+            for i in range(block_f):        # static unroll over sublanes
+                r = b * block_f + i
+                vtx = frontier_ref[r, p]
+                act = (active_ref[r, p] != 0) & (vtx >= 0)
+                idx = jnp.where(act, vtx, 0).clip(0, adj_ref.shape[0] - 1)
+                row = adj_ref[pl.ds(idx, 1), :]         # (1, W_pad)
+                rows.append(jnp.where(act, row, jnp.int32(-1)))
+            return acc & jnp.concatenate(rows, axis=0)
+
+        out_ref[...] = lax.fori_loop(0, np_, body, cand_ref[...])
+
+    return _refine_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_f"))
+def _refine_rows_call(adj, cand, frontier, active, interpret: bool,
+                      block_f: int):
     v_pad, w_pad = adj.shape
     f_pad = frontier.shape[0]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(f_pad // BLOCK_F,),
+        grid=(f_pad // block_f,),
         in_specs=[
             pl.BlockSpec((v_pad, w_pad), lambda i, *_: (0, 0)),
-            pl.BlockSpec((BLOCK_F, w_pad), lambda i, *_: (i, 0)),
+            pl.BlockSpec((block_f, w_pad), lambda i, *_: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((BLOCK_F, w_pad), lambda i, *_: (i, 0)),
+        out_specs=pl.BlockSpec((block_f, w_pad), lambda i, *_: (i, 0)),
     )
     return pl.pallas_call(
-        _refine_kernel,
+        _make_refine_kernel(block_f),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((f_pad, w_pad), jnp.int32),
         interpret=interpret,
@@ -87,7 +96,8 @@ def _refine_rows_call(adj, cand, frontier, active, interpret: bool):
 
 def refine_bitmap_rows(adj_bitmap: jax.Array, cand_rows: jax.Array,
                        frontier: jax.Array, active: jax.Array,
-                       interpret: bool | None = None) -> jax.Array:
+                       interpret: bool | None = None,
+                       block_f: int | None = None) -> jax.Array:
     """Pallas-backed Eq. 2 refinement with per-row candidates.
 
     Args:
@@ -97,6 +107,11 @@ def refine_bitmap_rows(adj_bitmap: jax.Array, cand_rows: jax.Array,
       active:     bool/int32 [F, NP] mapped-neighbor positions, per row.
       interpret:  None resolves from ``kernels.config`` (the process-wide
                   backend); pass a bool to force.
+      block_f:    rows per grid step. None resolves through the tuning
+                  layer (scope override > tuning cache > default 8,
+                  DESIGN.md §9). The compiled backend needs a multiple
+                  of 8 (int32 sublane tile); interpret mode takes any
+                  height >= 1.
 
     Returns int32 [F, W_pad >= W] refined packed bitmaps (caller slices
     the first W words).
@@ -104,10 +119,13 @@ def refine_bitmap_rows(adj_bitmap: jax.Array, cand_rows: jax.Array,
     if interpret is None:
         interpret = interpret_mode(None)
     v, w = adj_bitmap.shape
+    if block_f is None:
+        block_f = kernel_block_f(n_vertices=v)
+    block_f = max(1, int(block_f))
     f, np_ = frontier.shape
     w_pad = max(128, ((w + 127) // 128) * 128)
-    v_pad = ((v + BLOCK_F - 1) // BLOCK_F) * BLOCK_F
-    f_pad = ((max(f, 1) + BLOCK_F - 1) // BLOCK_F) * BLOCK_F
+    v_pad = ((v + 7) // 8) * 8
+    f_pad = ((max(f, 1) + block_f - 1) // block_f) * block_f
     adj = jnp.zeros((v_pad, w_pad), jnp.int32).at[:v, :w].set(
         adj_bitmap.astype(jnp.int32))
     cand = jnp.zeros((f_pad, w_pad), jnp.int32).at[:f, :w].set(
@@ -116,12 +134,14 @@ def refine_bitmap_rows(adj_bitmap: jax.Array, cand_rows: jax.Array,
         frontier.astype(jnp.int32))
     act = jnp.zeros((f_pad, np_), jnp.int32).at[:f].set(
         active.astype(jnp.int32))
-    return _refine_rows_call(adj, cand, fr, act, interpret)[:f]
+    return _refine_rows_call(adj, cand, fr, act, interpret,
+                             block_f)[:f]
 
 
 def refine_bitmap(adj_bitmap: jax.Array, cand_row: jax.Array,
                   frontier: jax.Array, active: jax.Array,
-                  interpret: bool | None = None) -> jax.Array:
+                  interpret: bool | None = None,
+                  block_f: int | None = None) -> jax.Array:
     """Single-query entry point: one shared candidate row and one shared
     active-position vector, broadcast over all F rows (the historical
     signature, kept for ``ops.refine_bitmap_op`` and the dry-run)."""
@@ -131,4 +151,4 @@ def refine_bitmap(adj_bitmap: jax.Array, cand_row: jax.Array,
     act = jnp.broadcast_to(
         active.astype(jnp.int32)[None, :], (f, active.shape[0]))
     return refine_bitmap_rows(adj_bitmap, cand_rows, frontier, act,
-                              interpret=interpret)
+                              interpret=interpret, block_f=block_f)

@@ -18,12 +18,28 @@ Resolution order: explicit ``backend=`` argument > ``set_backend()`` >
 Kernel wrappers translate the backend to their ``interpret`` flag with
 :func:`interpret_mode` — so ``interpret=True`` can only happen when the
 configuration explicitly asks for it.
+
+Since the autotuner (DESIGN.md §9) this module is also the resolution
+point for tuned *kernel* parameters: :func:`kernel_block_f` resolves the
+``bitmap_refine`` row-block height as explicit scope override >
+tuning-cache record (for the call's backend and graph size) > built-in
+``DEFAULT_BLOCK_F``. :func:`backend_scope` / :func:`kernel_param_scope`
+give tests and the tuner leak-free save/restore around the
+process-global state.
 """
 from __future__ import annotations
 
+import contextlib
 import os
 
 BACKENDS = ("jnp", "pallas_interpret", "pallas")
+
+DEFAULT_BLOCK_F = 8     # refine kernel sublanes per grid step
+                        # (int32 min tile height; see bitmap_refine.py)
+
+# scope-local kernel parameter overrides (kernel_param_scope) — the
+# "explicit arg" level of the tuning resolution order
+_kernel_overrides: dict[str, int] = {}
 
 _backend = os.environ.get("REPRO_KERNEL_BACKEND", "jnp")
 if _backend not in BACKENDS:
@@ -43,6 +59,57 @@ def set_backend(name: str) -> None:
         raise ValueError(f"unknown kernel backend {name!r}; "
                          f"choose one of {BACKENDS}")
     _backend = name
+
+
+@contextlib.contextmanager
+def backend_scope(name: str):
+    """Temporarily switch the process-wide backend — save/restore around
+    :func:`set_backend`, exception-safe, so tests and the tuner can
+    sweep backends without leaking process-global state."""
+    prev = get_backend()
+    set_backend(name)
+    try:
+        yield name
+    finally:
+        set_backend(prev)
+
+
+@contextlib.contextmanager
+def kernel_param_scope(**params: int):
+    """Temporarily pin tuned kernel parameters (e.g. ``block_f=16``) —
+    the explicit-override level of the resolution order, used by the
+    tuner to measure candidate points and by tests to pin geometry."""
+    global _kernel_overrides
+    prev = dict(_kernel_overrides)
+    _kernel_overrides.update({k: int(v) for k, v in params.items()})
+    try:
+        yield dict(_kernel_overrides)
+    finally:
+        _kernel_overrides = prev
+
+
+def kernel_override(name: str) -> int | None:
+    """The active :func:`kernel_param_scope` override for ``name``."""
+    return _kernel_overrides.get(name)
+
+
+def kernel_block_f(backend: str | None = None,
+                   n_vertices: int | None = None) -> int:
+    """Resolved ``bitmap_refine`` row-block height: scope override >
+    tuning-cache record (needs ``n_vertices`` for the shape bucket) >
+    ``DEFAULT_BLOCK_F``. Called at trace time by the kernel wrapper
+    when no explicit ``block_f`` argument was passed."""
+    bf = _kernel_overrides.get("block_f")
+    if bf is not None:
+        return int(bf)
+    if n_vertices is not None \
+            and os.environ.get("REPRO_TUNING_DISABLE") != "1":
+        from ..tuning.cache import device_kind, load_default_cache
+        rec = load_default_cache().lookup(
+            resolve(backend), device_kind(), n_vertices)
+        if rec and "block_f" in rec.get("params", {}):
+            return int(rec["params"]["block_f"])
+    return DEFAULT_BLOCK_F
 
 
 def resolve(backend: str | None) -> str:

@@ -22,12 +22,13 @@ from . import ref
 from .bitmap_refine import refine_bitmap as _refine_pallas
 from .bitmap_refine import refine_bitmap_rows as _refine_rows_pallas
 from .bitmap_spmm import bitmap_spmm as _spmm_pallas
-from .config import get_backend, interpret_mode, resolve, set_backend
+from .config import (backend_scope, get_backend, interpret_mode, resolve,
+                     set_backend)
 from .flash_attention import flash_attention as _flash_pallas
 
 __all__ = ["refine_bitmap_op", "refine_bitmap_rows_op", "bitmap_spmm_op",
            "flash_attention_op", "get_backend", "set_backend",
-           "DEFAULT_BACKEND"]
+           "backend_scope", "DEFAULT_BACKEND"]
 
 
 def __getattr__(name):
@@ -39,27 +40,32 @@ def __getattr__(name):
 
 
 def refine_bitmap_rows_op(adj_bitmap, cand_rows, frontier, active,
-                          backend: str | None = None):
+                          backend: str | None = None,
+                          block_f: int | None = None):
     """Eq. 2 packed-bitmap refinement with per-row candidate/active sets
-    (the multi-query wave layout). Returns uint32 [F, W]."""
+    (the multi-query wave layout). Returns uint32 [F, W]. ``block_f``
+    None resolves through the tuning layer (kernels.config)."""
     w = adj_bitmap.shape[1]
     if resolve(backend) == "jnp":
         return ref.refine_bitmap_rows_ref(adj_bitmap, cand_rows, frontier,
                                           active)
     out = _refine_rows_pallas(adj_bitmap, cand_rows, frontier, active,
-                              interpret=interpret_mode(backend))
+                              interpret=interpret_mode(backend),
+                              block_f=block_f)
     return out[:, :w].astype(jnp.uint32)
 
 
 def refine_bitmap_op(adj_bitmap, cand_row, frontier, active,
-                     backend: str | None = None):
+                     backend: str | None = None,
+                     block_f: int | None = None):
     """Eq. 2 packed-bitmap refinement, one shared candidate row (the
     single-query layout). Returns uint32 [F, W]."""
     if resolve(backend) == "jnp":
         return ref.refine_bitmap_ref(adj_bitmap, cand_row, frontier, active)
     w = adj_bitmap.shape[1]
     out = _refine_pallas(adj_bitmap, cand_row, frontier, active,
-                         interpret=interpret_mode(backend))
+                         interpret=interpret_mode(backend),
+                         block_f=block_f)
     return out[:, :w].astype(jnp.uint32)
 
 

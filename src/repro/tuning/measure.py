@@ -1,0 +1,165 @@
+"""Measurement harness for the autotuner (DESIGN.md §9).
+
+Two granularities, both jit-cache-aware (an untimed warmup run absorbs
+compilation; the timed trials report the median so one GC pause or
+container hiccup cannot crown a candidate):
+
+* :func:`refine_microbench` — the ``bitmap_refine`` kernel alone at a
+  given row-block height on synthetic operands of the target shape;
+* :func:`run_smoke_workload` — the serving smoke uniform workload
+  (identical graph/query construction to ``benchmarks.serving_bench
+  --smoke``) end to end through a :class:`WaveScheduler` built with the
+  candidate's knobs, returning qps, the per-slot store load factor,
+  and a digest over the sorted embedding rows. The digest is the
+  tuner's safety interlock: every candidate must produce bit-identical
+  embeddings (configuration may move time, never results).
+
+Heavy imports (core, data) stay inside the functions so the tuning
+package is importable without pulling the engine in.
+"""
+from __future__ import annotations
+
+import hashlib
+import statistics
+import time
+
+__all__ = ["timed_trials", "refine_microbench", "run_smoke_workload",
+           "SMOKE_SHAPE"]
+
+# The serving smoke workload's construction parameters
+# (benchmarks/serving_bench.py --smoke, uniform leg) — the tuner
+# measures at the same shape the smoke bench serves, so the record it
+# writes is the record the bench consumes.
+SMOKE_SHAPE = {
+    "n_vertices": 128, "extra_edges": 128, "n_labels": 24,
+    "n_queries": 8, "query_size": 4, "kpr": 8,
+    "limit": 1000, "time_budget_s": 10.0, "graph_seed": 0,
+    "query_seed": 7,
+}
+
+
+def timed_trials(fn, warmup: int = 1, trials: int = 3) -> float:
+    """Median wall seconds of ``trials`` calls after ``warmup`` untimed
+    ones (the warmup absorbs jit compilation)."""
+    for _ in range(max(0, warmup)):
+        fn()
+    samples = []
+    for _ in range(max(1, trials)):
+        t0 = time.perf_counter()
+        fn()
+        samples.append(time.perf_counter() - t0)
+    return statistics.median(samples)
+
+
+def refine_microbench(backend: str, block_f: int, n_vertices: int = 128,
+                      f: int = 64, np_: int = 8, warmup: int = 1,
+                      trials: int = 3, seed: int = 0) -> float:
+    """Median seconds of one ``refine_bitmap_rows`` call at ``block_f``
+    on synthetic operands shaped like the target workload."""
+    import numpy as np
+
+    import jax.numpy as jnp
+
+    from ..core.graph import pack_bitmap
+    from ..kernels.bitmap_refine import refine_bitmap_rows
+
+    rng = np.random.default_rng(seed)
+    dense = rng.random((n_vertices, n_vertices)) < 0.2
+    dense |= dense.T
+    adj = jnp.asarray(pack_bitmap(dense))
+    cand = jnp.asarray(pack_bitmap(rng.random((f, n_vertices)) < 0.5))
+    frontier = jnp.asarray(
+        rng.integers(-1, n_vertices, size=(f, np_)).astype(np.int32))
+    active = jnp.asarray((rng.random((f, np_)) < 0.6).astype(np.int32))
+    interpret = backend == "pallas_interpret"
+
+    def call():
+        refine_bitmap_rows(adj, cand, frontier, active,
+                           interpret=interpret,
+                           block_f=block_f).block_until_ready()
+
+    return timed_trials(call, warmup=warmup, trials=trials)
+
+
+def _embeddings_digest(finished: dict) -> str:
+    """sha256 over every query's sorted embedding rows — the
+    bit-identity interlock across candidate configurations."""
+    import numpy as np
+
+    h = hashlib.sha256()
+    for qid in sorted(finished):
+        rows = sorted(
+            np.asarray(e, np.int32).tobytes()
+            for e in finished[qid].embeddings)
+        h.update(str(qid).encode())
+        for r in rows:
+            h.update(r)
+    return h.hexdigest()
+
+
+def run_smoke_workload(params: dict, backend: str | None = None,
+                       warmup: int = 1, trials: int = 2) -> dict:
+    """End-to-end measurement of one candidate configuration on the
+    serving smoke uniform workload.
+
+    ``params`` is a ``CandidateConfig.as_params()`` dict — the engine
+    knobs are passed *explicitly* to :class:`MatchOptions` (so the
+    measurement is independent of whatever TUNING_CACHE.json currently
+    holds) and ``block_f`` is pinned through
+    ``kernels.config.kernel_param_scope``.
+    """
+    from ..api.options import MatchOptions
+    from ..core.vectorized import WaveScheduler
+    from ..data.graph_gen import ba_labeled_graph, query_set
+    from ..kernels import config as kconfig
+
+    s = SMOKE_SHAPE
+    data = ba_labeled_graph(s["n_vertices"], 3, s["n_labels"],
+                            extra_edges=s["extra_edges"],
+                            seed=s["graph_seed"])
+    queries = query_set(data, s["query_size"], s["n_queries"],
+                        seed=s["query_seed"])
+    opts = MatchOptions(
+        limit=s["limit"], time_budget_s=s["time_budget_s"], kpr=s["kpr"],
+        n_slots=params["n_slots"], wave_size=params["wave_size"],
+        megastep_depth=params["megastep_depth"],
+        stack_capacity=params["stack_capacity"],
+        pattern_capacity=params["pattern_capacity"],
+        store_flush_min=params["store_flush_min"])
+
+    state: dict = {}
+    walls: list[float] = []
+
+    def one_run():
+        sched = WaveScheduler(data, options=opts)
+        for q in queries:
+            sched.submit(q)
+        t0 = time.perf_counter()
+        finished = sched.run()
+        walls.append(time.perf_counter() - t0)
+        state["digest"] = _embeddings_digest(finished)
+        state["n_embeddings"] = int(
+            sum(len(r.embeddings) for r in finished.values()))
+        stats = sched.scheduler_stats()
+        state["store_load_factor"] = float(stats["store_load_factor"])
+        state["prune_rate"] = float(stats["prune_rate"])
+
+    scope = {"block_f": params["block_f"]} if "block_f" in params else {}
+    with kconfig.kernel_param_scope(**scope):
+        if backend is None:
+            timed_trials(one_run, warmup=warmup, trials=trials)
+        else:
+            with kconfig.backend_scope(backend):
+                timed_trials(one_run, warmup=warmup, trials=trials)
+    # construction and submit stay outside the timed window (matching
+    # serving_bench, which times submit_batch on a prebuilt server) —
+    # take the median of the *serving* walls, skipping the warmup runs
+    wall = statistics.median(walls[max(0, warmup):])
+    return {
+        "qps": len(queries) / wall if wall > 0 else 0.0,
+        "wall_s": wall,
+        "digest": state["digest"],
+        "n_embeddings": state["n_embeddings"],
+        "store_load_factor": state["store_load_factor"],
+        "prune_rate": state["prune_rate"],
+    }

@@ -1,0 +1,84 @@
+"""Knob resolution (DESIGN.md §9): explicit user value > MatchOptions >
+tuning-cache record > built-in default.
+
+:func:`resolve_engine_options` is the one funnel: ``WaveScheduler``
+calls it at construction (via ``MatchOptions.resolved_engine``) and the
+returned descriptor is what ``scheduler_stats()["tuning"]`` and the
+serving-bench payload surface — the consumed record is always visible.
+
+``REPRO_TUNING_DISABLE=1`` skips the cache entirely (the built-in
+defaults win); ``scripts/ab_gate.py`` uses it for the tuned-vs-default
+A/B and the tests use it to pin deterministic defaults.
+"""
+from __future__ import annotations
+
+import os
+
+from ..kernels import config as kconfig
+from .cache import cache_key, device_kind, load_default_cache, \
+    quantize_vertices
+from .space import schema_hash
+
+__all__ = ["resolve_engine_options", "tuning_enabled"]
+
+
+def tuning_enabled() -> bool:
+    return os.environ.get("REPRO_TUNING_DISABLE") != "1"
+
+
+def resolve_engine_options(opts, *, backend: str | None = None,
+                           n_vertices: int | None = None
+                           ) -> tuple[dict, dict]:
+    """Concrete engine knobs for ``opts`` plus the consumed-record
+    descriptor.
+
+    Every knob in ``ENGINE_TUNABLE_DEFAULTS`` the caller left ``None``
+    on ``opts`` is filled from the tuning-cache record keyed by
+    ``(backend, device_kind, quantized |V|)`` when one matches the
+    current knob schema, else from the built-in default. Explicit
+    values on ``opts`` always win. ``block_f`` (the refine-kernel
+    row-block height, not a MatchOptions field) resolves kernel-scope
+    override > record > built-in.
+    """
+    from ..api.options import ENGINE_TUNABLE_DEFAULTS
+
+    backend = kconfig.resolve(backend)
+    rec = None
+    key = None
+    if tuning_enabled() and n_vertices is not None:
+        dev = device_kind()
+        key = cache_key(backend, dev, n_vertices)
+        rec = load_default_cache().lookup_key(key)
+    rec_params = rec.get("params", {}) if rec else {}
+
+    knobs = {}
+    filled_from_cache = []
+    for name, default in ENGINE_TUNABLE_DEFAULTS.items():
+        explicit = getattr(opts, name, None)
+        if explicit is not None:
+            knobs[name] = int(explicit)
+        elif name in rec_params:
+            knobs[name] = int(rec_params[name])
+            filled_from_cache.append(name)
+        else:
+            knobs[name] = int(default)
+    block_f = kconfig.kernel_override("block_f")
+    if block_f is None:
+        block_f = rec_params.get("block_f")
+        if block_f is not None:
+            filled_from_cache.append("block_f")
+    knobs["block_f"] = int(block_f) if block_f is not None \
+        else kconfig.DEFAULT_BLOCK_F
+
+    record = {
+        "source": "tuning-cache" if rec else "builtin",
+        "record": rec["name"] if rec else None,
+        "key": key,
+        "schema_hash": schema_hash(),
+        "backend": backend,
+        "v_bucket": (quantize_vertices(n_vertices)
+                     if n_vertices is not None else None),
+        "filled_from_cache": filled_from_cache,
+        "params": dict(knobs),
+    }
+    return knobs, record

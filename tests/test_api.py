@@ -53,11 +53,15 @@ def test_options_are_the_single_default_surface():
     opts = MatchOptions()
     assert opts.limit == DEFAULT_LIMIT == 1000
     data = er_labeled_graph(20, 40, 2, seed=0)
-    # the scheduler's options ARE the canonical defaults
+    # the scheduler's options ARE the canonical defaults; the tunable
+    # engine knobs (None = "tuning layer decides", DESIGN.md §9)
+    # resolve through exactly one funnel: MatchOptions.resolved_engine
     sched = WaveScheduler(data)
     assert sched.options == opts
+    knobs, _record = opts.resolved_engine(backend="jnp",
+                                          n_vertices=data.n)
     assert (sched.max_queue, sched.wave_size, sched.n_slots) == \
-        (opts.max_queue, opts.wave_size, opts.n_slots)
+        (opts.max_queue, knobs["wave_size"], knobs["n_slots"])
     # a no-override submit queues exactly the MatchOptions defaults
     qid = sched.submit(query_set(data, 3, 1, seed=1)[0])
     req = next(r for r in sched.queue if r.query_id == qid)

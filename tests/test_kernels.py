@@ -151,7 +151,6 @@ def test_kernel_backend_rejects_unknown_names():
     """kernels.config must fail fast on unknown backend names — both at
     runtime selection and for the REPRO_KERNEL_BACKEND env var at import
     time (no silent fall-through to a default)."""
-    import importlib
     import os
     import subprocess
     import sys
@@ -162,6 +161,9 @@ def test_kernel_backend_rejects_unknown_names():
         config.set_backend("cuda")
     with pytest.raises(ValueError, match="tpu"):
         config.resolve("tpu")
+    with pytest.raises(ValueError, match="warp"):
+        with config.backend_scope("warp_drive"):
+            pass                                      # never entered
     assert config.get_backend() in config.BACKENDS    # state unchanged
     # explicit None falls back to the process-wide setting
     assert config.resolve(None) == config.get_backend()
@@ -178,4 +180,22 @@ def test_kernel_backend_rejects_unknown_names():
     assert proc.returncode != 0
     assert "warp_drive" in proc.stderr and "jnp" in proc.stderr
 
-    importlib.reload(config)          # leave a clean module behind
+
+def test_backend_scope_saves_and_restores():
+    """backend_scope must restore the process-global backend on normal
+    exit, on exception, and when nested (the leak-free replacement for
+    the importlib.reload cleanup the backend tests used to need)."""
+    from repro.kernels import config
+
+    before = config.get_backend()
+    with config.backend_scope("pallas_interpret"):
+        assert config.get_backend() == "pallas_interpret"
+        with config.backend_scope("jnp"):
+            assert config.get_backend() == "jnp"
+        assert config.get_backend() == "pallas_interpret"
+    assert config.get_backend() == before
+
+    with pytest.raises(RuntimeError, match="boom"):
+        with config.backend_scope("pallas_interpret"):
+            raise RuntimeError("boom")
+    assert config.get_backend() == before
