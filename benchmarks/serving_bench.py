@@ -48,7 +48,14 @@ KPR = 8
 LIMIT = 1000
 TIME_BUDGET_S = 10.0
 
+# graph-size sweep (--scale): 512 fits the dense kernel comfortably,
+# 8K sits just under the HBM threshold (both layouts run and must agree
+# bit-for-bit), 64K is past the VMEM ceiling — the dense [V, W] block
+# alone would be 512 MB, so only the hierarchical layout runs there
+SCALE_SIZES = (512, 8192, 65536)
+
 _OUT = pathlib.Path(__file__).resolve().parent.parent / "BENCH_serving.json"
+_OUT_SCALE = pathlib.Path(__file__).resolve().parent.parent / "BENCH_scale.json"
 
 
 def run(csv_rows: list | None = None, budget_s: float = 90.0,
@@ -344,6 +351,132 @@ def run(csv_rows: list | None = None, budget_s: float = 90.0,
     return payload
 
 
+def run_scale(smoke: bool = False,
+              out_path: pathlib.Path | None = _OUT_SCALE,
+              sizes: tuple[int, ...] | None = None,
+              n_queries: int | None = None) -> dict:
+    """Graph-size sweep for the hierarchical adjacency layout
+    (DESIGN.md §2) -> BENCH_scale.json.
+
+    For each |V| in ``SCALE_SIZES`` a labeled power-law graph
+    (``data.graph_gen.powerlaw_graph``, degree-descending relabeled)
+    serves a small uniform query batch through :class:`WaveScheduler`
+    under both adjacency layouts where both fit: the dense whole-VMEM
+    variant and the hierarchical HBM-paged variant. Records per leg:
+    qps, prune rate, the resident adjacency bytes and the leg's peak
+    device bytes (``jax.live_arrays()`` delta). At 512 and 8K the two
+    legs must enumerate bit-identical embedding sets (refinement is
+    bit-exact, so the whole schedule evolves identically); at 64K the
+    dense leg is skipped — its adjacency block alone is 512 MB — and
+    the payload instead pins the hierarchical peak as a fraction of the
+    dense-equivalent block (``scripts/check_smoke.py --scale`` asserts
+    < 10%).
+
+    Capacities are deliberately small (wave 64 / 2 slots / stack 256):
+    the sweep measures the *adjacency* scaling, so scheduler state must
+    not dominate the footprint at 64K.
+    """
+    import gc
+
+    import jax
+
+    from repro.core.vectorized import WaveScheduler
+    from repro.data.graph_gen import powerlaw_graph, query_set
+    from repro.kernels.config import get_backend
+
+    if sizes is None:
+        sizes = (256, 1024) if smoke else SCALE_SIZES
+    n_q = n_queries if n_queries is not None else (3 if smoke else 6)
+    query_size = 5
+    if smoke:
+        out_path = None
+
+    def live_bytes() -> int:
+        gc.collect()
+        return int(sum(int(getattr(x, "nbytes", 0))
+                       for x in jax.live_arrays()))
+
+    def leg(data, queries, hier: bool) -> tuple[dict, list]:
+        base = live_bytes()
+        kw = dict(n_slots=2, wave_size=64, kpr=4, stack_capacity=256,
+                  limit=10_000, hier_adjacency=hier)
+
+        def one():
+            s = WaveScheduler(data, **kw)
+            for q in queries:
+                s.submit(q)
+            s.run()
+            return s
+
+        one()                                 # compile warm-up
+        gc.collect()
+        t0 = time.perf_counter()
+        s = one()
+        wall = time.perf_counter() - t0
+        peak = live_bytes() - base
+        stats = s.scheduler_stats()
+        embs = [sorted(map(tuple, s.finished[qid].embeddings))
+                for qid in sorted(s.finished)]
+        n_emb = sum(len(e) for e in embs)
+        row = {
+            "adjacency_variant": stats["adjacency_variant"],
+            "adjacency_bytes": stats["adjacency_bytes"],
+            "chunk_words": stats["chunk_words"],
+            "wall_time_s": wall,
+            "queries_per_sec": len(queries) / wall if wall > 0 else 0.0,
+            "prune_rate": stats["prune_rate"],
+            "total_embeddings": int(n_emb),
+            "peak_device_bytes": int(peak),
+        }
+        del s
+        gc.collect()
+        return row, embs
+
+    rows = []
+    for n in sizes:
+        data = powerlaw_graph(n, 3, 16, seed=0)
+        queries = query_set(data, query_size, n_q, seed=7)
+        w = (n + 31) // 32
+        dense_equiv = n * w * 4
+        entry = {
+            "n_vertices": n,
+            "n_edges": data.n_edges,
+            "n_queries": n_q,
+            "query_size": query_size,
+            "dense_equiv_adjacency_bytes": dense_equiv,
+            "legs": {},
+        }
+        hier_row, hier_embs = leg(data, queries, hier=True)
+        entry["legs"]["hier-hbm"] = hier_row
+        # past the VMEM ceiling the dense leg is the thing that cannot
+        # exist — everything below 16K also runs it as the oracle
+        if n < 16384:
+            dense_row, dense_embs = leg(data, queries, hier=False)
+            entry["legs"]["dense-vmem"] = dense_row
+            entry["embeddings_identical"] = bool(hier_embs == dense_embs)
+            entry["hier_dense_qps_ratio"] = (
+                hier_row["queries_per_sec"]
+                / max(dense_row["queries_per_sec"], 1e-9))
+        else:
+            entry["embeddings_identical"] = None
+            entry["hier_dense_qps_ratio"] = None
+            entry["peak_frac_of_dense"] = (
+                hier_row["peak_device_bytes"] / dense_equiv)
+        rows.append(entry)
+        print(f"# scale |V|={n}: {json.dumps(entry['legs'])}",
+              file=sys.stderr)
+
+    payload = {
+        "smoke": bool(smoke),
+        "backend": get_backend(),
+        "wave_size": 64, "n_slots": 2, "kpr": 4, "limit": 10_000,
+        "sizes": rows,
+    }
+    if out_path is not None:
+        out_path.write_text(json.dumps(payload, indent=2) + "\n")
+    return payload
+
+
 def run_chaos(smoke: bool = True) -> dict:
     """The uniform serving workload under a seeded :class:`FaultPlan`
     (DESIGN.md §8). Returns a recovery payload — validated by
@@ -420,9 +553,26 @@ if __name__ == "__main__":
     ap.add_argument("--chaos", action="store_true",
                     help="run the seeded fault-injection workload and "
                          "emit the recovery payload instead")
+    ap.add_argument("--scale", action="store_true",
+                    help="run the graph-size sweep (dense vs "
+                         "hierarchical adjacency) and emit/write "
+                         "BENCH_scale.json instead")
+    ap.add_argument("--scale-gate", action="store_true",
+                    help="single 8K-vertex hier-vs-dense leg for "
+                         "scripts/ab_gate.py; never writes a file")
     args = ap.parse_args()
+    if args.scale_gate:
+        payload = run_scale(out_path=None, sizes=(8192,), n_queries=3)
+        print(json.dumps(payload, indent=2))
+        sys.exit(0)
     if args.chaos:
         print(json.dumps(run_chaos(smoke=args.smoke), indent=2))
+        sys.exit(0)
+    if args.scale:
+        payload = run_scale(smoke=args.smoke)
+        print(json.dumps(payload, indent=2))
+        if not args.smoke:
+            print(f"# wrote {_OUT_SCALE}", file=sys.stderr)
         sys.exit(0)
     payload = run(smoke=args.smoke)
     print(json.dumps(payload, indent=2))

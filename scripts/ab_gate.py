@@ -26,6 +26,16 @@ Environment knobs:
 * ``AB_MIN_RATIO`` — failure threshold on new/old qps (default ``0.85``)
 * ``AB_RUNS``      — smoke runs per side, best-of (default ``2``)
 * ``AB_SKIP=1``    — skip the gate entirely
+* ``AB_SCALE_MIN_RATIO`` — failure threshold on the scale leg's
+  hierarchical/dense qps ratio at 8K vertices (default ``0.9``)
+* ``AB_SCALE_SKIP=1`` — skip only the scale leg
+
+Besides the old-vs-new smoke ratio, the gate runs a *same-tree* scale
+leg: one 8K-vertex power-law graph served under both adjacency layouts
+(``serving_bench --scale-gate``). The hierarchical layout must hold at
+least ``AB_SCALE_MIN_RATIO`` of the dense layout's qps at a size where
+both fit — the HBM-paged kernel buys footprint, and this pins how much
+throughput it is allowed to cost.
 
 The gate skips gracefully (exit 0, with a message) when the baseline ref
 does not resolve (shallow clone, first commit) or its bench fails to
@@ -72,6 +82,41 @@ def _smoke_qps(tree: pathlib.Path, runs: int,
         if qps >= best:
             best, best_payload = qps, payload
     return best, worst, best_payload
+
+
+def _scale_gate() -> int:
+    """Same-tree hier-vs-dense qps ratio at 8K vertices (both layouts
+    fit there, so the ratio isolates the kernel-variant cost)."""
+    if os.environ.get("AB_SCALE_SKIP") == "1":
+        print("ab_gate: scale leg skipped (AB_SCALE_SKIP=1)")
+        return 0
+    min_ratio = float(os.environ.get("AB_SCALE_MIN_RATIO", "0.9"))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.serving_bench",
+         "--scale-gate"],
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=1800)
+    if out.returncode != 0:
+        print("ab_gate: scale leg FAIL — bench errored:\n"
+              f"{out.stderr[-2000:]}", file=sys.stderr)
+        return 1
+    entry = json.loads(out.stdout)["sizes"][0]
+    ratio = entry["hier_dense_qps_ratio"]
+    if entry["embeddings_identical"] is not True:
+        print("ab_gate: scale leg FAIL — hier embeddings differ from "
+              "the dense oracle at |V|="
+              f"{entry['n_vertices']}", file=sys.stderr)
+        return 1
+    print(f"ab_gate: scale leg |V|={entry['n_vertices']} "
+          f"hier={entry['legs']['hier-hbm']['queries_per_sec']:.1f} qps "
+          f"vs dense={entry['legs']['dense-vmem']['queries_per_sec']:.1f}"
+          f" qps, ratio={ratio:.3f} (threshold {min_ratio})")
+    if ratio < min_ratio:
+        print(f"ab_gate: scale leg FAIL — hier/dense qps ratio "
+              f"{ratio:.3f} < {min_ratio}", file=sys.stderr)
+        return 1
+    return 0
 
 
 def main() -> int:
@@ -167,7 +212,7 @@ def main() -> int:
         print(f"ab_gate: FAIL — qps ratio {ratio:.3f} < {min_ratio}",
               file=sys.stderr)
         return 1
-    return 0
+    return _scale_gate()
 
 
 if __name__ == "__main__":

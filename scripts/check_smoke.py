@@ -20,6 +20,12 @@ instead (DESIGN.md §8): every query ended in a terminal status (never a
 hang), the injected digest corruption was caught by the validator —
 never silently absorbed — and at least one query recovered via the
 host fallback.
+
+``--scale`` validates the ``serving_bench --scale`` payload
+(BENCH_scale.json, DESIGN.md §2): every size entry names its kernel
+variant per leg, both-layout sizes enumerated bit-identical embedding
+sets, and past-the-ceiling sizes ran hierarchical-only with a peak
+device footprint under 10% of the dense-equivalent adjacency block.
 """
 import argparse
 import json
@@ -66,6 +72,20 @@ CHAOS_REQUIRED = [
     "faults_fired", "fired", "fault_counters", "digest_failures_caught",
     "recovered_queries", "recovery_p50_ms", "recovery_p99_ms",
 ]
+SCALE_VARIANTS = ("hier-hbm", "dense-vmem")
+SCALE_LEG_REQUIRED = [
+    "adjacency_variant", "adjacency_bytes", "chunk_words", "wall_time_s",
+    "queries_per_sec", "prune_rate", "total_embeddings",
+    "peak_device_bytes",
+]
+SCALE_ENTRY_REQUIRED = [
+    "n_vertices", "n_edges", "n_queries", "query_size",
+    "dense_equiv_adjacency_bytes", "legs", "embeddings_identical",
+    "hier_dense_qps_ratio",
+]
+# hierarchical peak footprint must stay under this fraction of the
+# dense-equivalent adjacency block at past-the-ceiling sizes
+SCALE_PEAK_FRAC_MAX = 0.1
 
 
 def _check_tuning(payload) -> str | None:
@@ -174,14 +194,86 @@ def check_chaos(payload) -> int:
     return 0
 
 
+def check_scale(payload) -> int:
+    for k in ("smoke", "backend", "sizes"):
+        if k not in payload:
+            print(f"scale payload missing {k!r}", file=sys.stderr)
+            return 1
+    sizes = payload["sizes"]
+    if not isinstance(sizes, list) or not sizes:
+        print("scale payload 'sizes' must be a non-empty list",
+              file=sys.stderr)
+        return 1
+    summary = []
+    for entry in sizes:
+        n = entry.get("n_vertices")
+        missing = [k for k in SCALE_ENTRY_REQUIRED if k not in entry]
+        if missing:
+            print(f"scale |V|={n}: missing keys {missing}",
+                  file=sys.stderr)
+            return 1
+        legs = entry["legs"]
+        if not isinstance(legs, dict) or "hier-hbm" not in legs:
+            print(f"scale |V|={n}: legs must include the hier-hbm "
+                  "variant", file=sys.stderr)
+            return 1
+        for name, leg in legs.items():
+            missing = [k for k in SCALE_LEG_REQUIRED if k not in leg]
+            if missing:
+                print(f"scale |V|={n} leg {name!r}: missing {missing}",
+                      file=sys.stderr)
+                return 1
+            # the payload must *name* the kernel variant the leg ran,
+            # and the name must agree with the leg key
+            if leg["adjacency_variant"] not in SCALE_VARIANTS \
+                    or leg["adjacency_variant"] != name:
+                print(f"scale |V|={n} leg {name!r}: adjacency_variant="
+                      f"{leg['adjacency_variant']!r} unknown or "
+                      "inconsistent", file=sys.stderr)
+                return 1
+        if "dense-vmem" in legs:
+            # both layouts ran — the hierarchical leg must be the
+            # bit-identical oracle match
+            if entry["embeddings_identical"] is not True:
+                print(f"scale |V|={n}: hier embeddings differ from the "
+                      "dense oracle (embeddings_identical="
+                      f"{entry['embeddings_identical']!r})",
+                      file=sys.stderr)
+                return 1
+        else:
+            # past-the-VMEM-ceiling size: the whole point — peak device
+            # footprint well under the dense-equivalent block
+            frac = entry.get("peak_frac_of_dense")
+            if not isinstance(frac, float) \
+                    or not frac < SCALE_PEAK_FRAC_MAX:
+                print(f"scale |V|={n}: peak_frac_of_dense={frac!r} "
+                      f"!< {SCALE_PEAK_FRAC_MAX} — the hierarchical "
+                      "layout is not beating the dense footprint",
+                      file=sys.stderr)
+                return 1
+        hier = legs["hier-hbm"]
+        summary.append(
+            f"|V|={n}:{'/'.join(sorted(legs))} "
+            f"qps={hier['queries_per_sec']:.1f} "
+            f"peak={hier['peak_device_bytes'] / 2**20:.1f}MiB")
+    print("serving_bench --scale: OK "
+          f"(backend={payload['backend']}, {'; '.join(summary)})")
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--chaos", action="store_true",
-                    help="validate the --chaos recovery payload instead")
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--chaos", action="store_true",
+                      help="validate the --chaos recovery payload instead")
+    mode.add_argument("--scale", action="store_true",
+                      help="validate the --scale sweep payload instead")
     args = ap.parse_args()
     payload = json.load(sys.stdin)
     if args.chaos:
         return check_chaos(payload)
+    if args.scale:
+        return check_scale(payload)
     missing = [k for k in REQUIRED if k not in payload]
     if missing:
         print(f"smoke payload missing keys: {missing}", file=sys.stderr)

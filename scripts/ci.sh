@@ -34,6 +34,11 @@ python -m repro.tuning.autotune --smoke > /dev/null
 # pattern-store/cache metrics, and that warm-started queries out-prune
 # cold ones — and prints a one-line summary.
 python -m benchmarks.serving_bench --smoke | python scripts/check_smoke.py
+# scale smoke (DESIGN.md §2): tiny graph-size sweep under both
+# adjacency layouts — every size must enumerate bit-identical embedding
+# sets across the dense whole-VMEM and hierarchical HBM-paged variants,
+# and the payload must name the kernel variant each leg ran.
+python -m benchmarks.serving_bench --smoke --scale | python scripts/check_smoke.py --scale
 # chaos smoke (DESIGN.md §8): the same workload under a seeded
 # FaultPlan — every query must end in a terminal status (never hang),
 # the injected digest corruption must be caught by the validator, and

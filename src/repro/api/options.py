@@ -98,6 +98,16 @@ class MatchOptions:
     # query through the host SegmentPool path (debug / A-B testing).
     device_stacks: bool = True
     stack_capacity: int | None = None
+    # hierarchical / HBM-resident adjacency (DESIGN.md §2): ``None`` on
+    # every knob means "resolve through kernels.config" — the
+    # ``use_hbm_adjacency`` size threshold (or a tuning record) picks
+    # the layout, and ``chunk_words`` / ``dma_depth`` fill from the
+    # tuned kernel parameters. Explicit values pin the variant — e.g.
+    # ``hier_adjacency=True`` forces the two-level layout on a small
+    # graph for A/B and bit-identity testing.
+    hier_adjacency: bool | None = None
+    chunk_words: int | None = None    # packed words per chunk (C, pow-2)
+    dma_depth: int | None = None      # in-flight chunk copies (HBM kernel)
     pattern_capacity: int | None = None
     pattern_cache: bool = True
     pattern_cache_templates: int = 64
@@ -149,6 +159,14 @@ class MatchOptions:
                 and self.pattern_capacity & (self.pattern_capacity - 1)):
             raise ValueError("pattern_capacity must be a power of two, "
                              f"got {self.pattern_capacity!r}")
+        if self.chunk_words is not None and (
+                self.chunk_words < 1 or self.chunk_words > 128
+                or self.chunk_words & (self.chunk_words - 1)):
+            raise ValueError("chunk_words must be a power of two in "
+                             f"[1, 128], got {self.chunk_words!r}")
+        if self.dma_depth is not None and self.dma_depth < 1:
+            raise ValueError(
+                f"dma_depth must be >= 1, got {self.dma_depth!r}")
         _nonneg("dispatch_timeout_s", self.dispatch_timeout_s)
         _nonneg("retry_backoff_s", self.retry_backoff_s, allow_none=False)
         _nonneg("dispatch_retries", self.dispatch_retries,

@@ -50,9 +50,32 @@ FULL = jnp.uint32(0xFFFFFFFF)
 
 
 class GraphArrays(NamedTuple):
-    """Device view of the data graph."""
-    adj_bitmap: jax.Array    # uint32 [V, W] packed adjacency
-    n_vertices: jax.Array    # int32 scalar
+    """Device view of the data graph.
+
+    Two mutually exclusive adjacency layouts (DESIGN.md §2):
+
+      * dense  — ``adj_bitmap`` holds the whole packed [V, W] block and
+        the hier fields are None; refinement gathers rows directly (the
+        small-|V| fast path whose kernel keeps the block in VMEM).
+      * hier   — ``adj_bitmap`` is None and the two-level layout rides
+        in ``adj_summary``/``chunk_ptr``/``chunk_id``/``chunk_data``
+        (see core.graph.HierBitmap); refinement intersects summaries
+        first and touches only live chunks, so the store can stay in
+        HBM past the VMEM ceiling. ``chunk_pad`` is a dummy int32
+        [kmax] lane whose *shape* carries the layout's static
+        max-stored-chunks-per-row through jit.
+
+    Which layout a graph gets is decided once at scheduler construction
+    (kernels.config.use_hbm_adjacency); every refinement call branches
+    at trace time on ``chunk_data is not None``.
+    """
+    adj_bitmap: jax.Array | None   # uint32 [V, W] packed adjacency
+    n_vertices: jax.Array          # int32 scalar
+    adj_summary: jax.Array | None = None  # uint32 [V, SW] chunk summary
+    chunk_ptr: jax.Array | None = None    # int32 [V + 1] CSR over chunks
+    chunk_id: jax.Array | None = None     # int32 [n_stored + kmax]
+    chunk_data: jax.Array | None = None   # uint32 [n_stored + kmax, C]
+    chunk_pad: jax.Array | None = None    # int32 [kmax] (shape-only lane)
 
 
 class QueryBank(NamedTuple):
@@ -280,10 +303,48 @@ def read_store_slot(tb: PatternStoreBank, slot: jax.Array) -> PatternStore:
 # ===================================================================
 # multi-query wave programs
 # ===================================================================
+def _refine_hier_jnp(g: GraphArrays, acc0: jax.Array, frontier: jax.Array,
+                     active: jax.Array) -> jax.Array:
+    """Hierarchical Eq. 2 contraction in plain jnp.
+
+    Each active position reconstructs its frontier rows from their
+    stored chunks — an [F, kmax, C] gather proportional to the sparse
+    layout, never the [F, NP, W] dense gather that costs W ∝ V per row
+    (128 MB per wave at 64K vertices). The position loop runs to the
+    deepest active position (traced bound), not N_PAD.
+    """
+    f, w = acc0.shape
+    c = g.chunk_data.shape[1]
+    kmax = g.chunk_pad.shape[0]
+    ncp = g.adj_summary.shape[1] * 32
+    acc = acc0.astype(jnp.uint32)
+    hi = jnp.max(jnp.where(active.any(axis=0),
+                           jnp.arange(N_PAD, dtype=jnp.int32) + 1, 0))
+
+    def body(p, acc):
+        vtx = frontier[:, p]
+        act = (active[:, p] != 0) & (vtx >= 0)
+        k0 = g.chunk_ptr[vtx.clip(0)]
+        nk = g.chunk_ptr[vtx.clip(0) + 1] - k0
+        ks = k0[:, None] + jnp.arange(kmax)[None, :]
+        km = jnp.arange(kmax)[None, :] < nk[:, None]
+        ids = jnp.where(km, g.chunk_id[ks], ncp)        # pad -> dropped
+        data = jnp.where(km[:, :, None],
+                         g.chunk_data[ks].astype(jnp.uint32),
+                         jnp.uint32(0))
+        rows = jnp.zeros((f, ncp, c), jnp.uint32).at[
+            jnp.arange(f)[:, None], ids].set(data, mode="drop")
+        rows = rows.reshape(f, ncp * c)[:, :w]
+        return jnp.where(act[:, None], acc & rows, acc)
+
+    return lax.fori_loop(0, hi, body, acc)
+
+
 def refine_eq2_mq(g: GraphArrays, qb: QueryBank, query_slot: jax.Array,
                   frontier: jax.Array, depth: jax.Array,
                   backend: str = "jnp",
-                  block_f: int | None = None) -> jax.Array:
+                  block_f: int | None = None,
+                  dma_depth: int | None = None) -> jax.Array:
     """Eq. 2 candidate refinement for a mixed-query wave.
 
     C'(row) = cand[qid, depth] ∩ ⋂_{p < depth, p ~q depth} N(frontier[p]).
@@ -295,13 +356,31 @@ def refine_eq2_mq(g: GraphArrays, qb: QueryBank, query_slot: jax.Array,
     "pallas_interpret" lower to the multi-row ``bitmap_refine`` kernel,
     so one config switch moves the whole engine hot path onto the
     compiled kernel (no silent interpret-mode fallback).
+
+    The adjacency layout picks the variant at trace time: a hierarchical
+    ``g`` (``chunk_data`` set, ``adj_bitmap`` None) routes to the
+    HBM-paged kernel / the sparse-gather jnp contraction; ``dma_depth``
+    is its pipeline depth (None = tuned/config default).
     """
     acc0 = qb.cand_bitmap[query_slot, depth]                 # [F, W]
+    pos = jnp.arange(N_PAD)
+    active = (qb.nbr_mask[query_slot, depth]
+              & (pos[None, :] < depth[:, None]))             # [F, NP]
+
+    if g.chunk_data is not None:
+        if backend != "jnp":
+            from ..kernels.bitmap_refine import refine_bitmap_rows_hier
+            w = acc0.shape[1]
+            out = refine_bitmap_rows_hier(
+                g.adj_summary, g.chunk_ptr, g.chunk_id, g.chunk_data,
+                g.chunk_pad.shape[0], acc0, frontier, active,
+                interpret=(backend == "pallas_interpret"),
+                dma_depth=dma_depth)
+            return out[:, :w].astype(jnp.uint32)
+        return _refine_hier_jnp(g, acc0, frontier, active)
+
     if backend != "jnp":
         from ..kernels.bitmap_refine import refine_bitmap_rows
-        pos = jnp.arange(N_PAD)
-        active = (qb.nbr_mask[query_slot, depth]
-                  & (pos[None, :] < depth[:, None]))         # [F, NP]
         w = acc0.shape[1]
         out = refine_bitmap_rows(g.adj_bitmap, acc0, frontier, active,
                                  interpret=(backend == "pallas_interpret"),
@@ -310,9 +389,6 @@ def refine_eq2_mq(g: GraphArrays, qb: QueryBank, query_slot: jax.Array,
 
     # one gather + reduce instead of a fori_loop over positions: 64
     # sequential [F, W] dispatches cost more than the [F, NP, W] gather
-    pos = jnp.arange(N_PAD)
-    active = (qb.nbr_mask[query_slot, depth]
-              & (pos[None, :] < depth[:, None]))             # [F, NP]
     rows = g.adj_bitmap[frontier.clip(0)]                    # [F, NP, W]
     rows = jnp.where(active[:, :, None], rows, FULL)
     return acc0 & lax.reduce(rows, FULL, lax.bitwise_and, (1,))
@@ -362,7 +438,8 @@ def _expand_rows(g: GraphArrays, qb: QueryBank, tb: PatternStoreBank,
                  frontier: jax.Array, used: jax.Array, phi: jax.Array,
                  row_valid: jax.Array, query_slot: jax.Array,
                  depth: jax.Array, kpr: int,
-                 backend: str = "jnp", block_f: int | None = None
+                 backend: str = "jnp", block_f: int | None = None,
+                 dma_depth: int | None = None
                  ) -> tuple[WaveResultMQ, PatternStoreBank]:
     """One expansion pass over F mixed-query rows (shared by
     :func:`expand_wave_mq` and the megastep loop body): Eq. 2 refinement,
@@ -373,7 +450,7 @@ def _expand_rows(g: GraphArrays, qb: QueryBank, tb: PatternStoreBank,
     f = frontier.shape[0]
 
     refined = refine_eq2_mq(g, qb, query_slot, frontier, depth,
-                            backend, block_f)                # [F, W]
+                            backend, block_f, dma_depth)     # [F, W]
     refined = jnp.where(row_valid[:, None], refined, jnp.uint32(0))
     refined_empty = (_popcount_rows(refined) == 0) & row_valid
 
@@ -428,12 +505,14 @@ def _expand_rows(g: GraphArrays, qb: QueryBank, tb: PatternStoreBank,
 
 
 @functools.partial(jax.jit, donate_argnums=(2,),
-                   static_argnames=("kpr", "backend", "block_f"))
+                   static_argnames=("kpr", "backend", "block_f",
+                                    "dma_depth"))
 def expand_wave_mq(g: GraphArrays, qb: QueryBank, tb: PatternStoreBank,
                    frontier: jax.Array, used: jax.Array, phi: jax.Array,
                    row_valid: jax.Array, query_slot: jax.Array,
                    depth: jax.Array, kpr: int = 16,
-                   backend: str = "jnp", block_f: int = 8
+                   backend: str = "jnp", block_f: int = 8,
+                   dma_depth: int | None = None
                    ) -> tuple[WaveResultMQ, PatternStoreBank]:
     """Expand every row of a mixed-query wave by one query position.
 
@@ -452,7 +531,8 @@ def expand_wave_mq(g: GraphArrays, qb: QueryBank, tb: PatternStoreBank,
     Returns (result, store bank with Δ lookup hit counters bumped).
     """
     return _expand_rows(g, qb, tb, frontier, used, phi, row_valid,
-                        query_slot, depth, kpr, backend, block_f)
+                        query_slot, depth, kpr, backend, block_f,
+                        dma_depth)
 
 
 @functools.partial(jax.jit, donate_argnums=(0,),
@@ -590,7 +670,8 @@ class MegaResult(NamedTuple):
 
 
 @functools.partial(jax.jit, donate_argnums=(2,), static_argnames=(
-    "kpr", "k_depth", "capacity", "emb_cap", "backend", "block_f"))
+    "kpr", "k_depth", "capacity", "emb_cap", "backend", "block_f",
+    "dma_depth"))
 def run_megastep_mq(g: GraphArrays, qb: QueryBank, tb: PatternStoreBank,
                     frontier: jax.Array, used: jax.Array, phi: jax.Array,
                     row_valid: jax.Array, query_slot: jax.Array,
@@ -601,7 +682,8 @@ def run_megastep_mq(g: GraphArrays, qb: QueryBank, tb: PatternStoreBank,
                     id_base: jax.Array, learn_enabled: jax.Array,
                     kpr: int = 8, k_depth: int = 4, capacity: int = 1024,
                     emb_cap: int = 512, backend: str = "jnp",
-                    block_f: int = 8) -> MegaResult:
+                    block_f: int = 8,
+                    dma_depth: int | None = None) -> MegaResult:
     """Fused expand → assemble → pattern-store over up to ``k_depth``
     consecutive depth-steps, one host round-trip.
 
@@ -687,7 +769,8 @@ def run_megastep_mq(g: GraphArrays, qb: QueryBank, tb: PatternStoreBank,
             s["buf_valid"], head, f_step)
 
         res, tb_l = _expand_rows(g, qb, s["tb"], cf, cu, cp, valid_c,
-                                 slot_c, depth_c, kpr, backend, block_f)
+                                 slot_c, depth_c, kpr, backend, block_f,
+                                 dma_depth)
 
         is_last = depth_c + 1 == qb.n_query[slot_c]          # [F]
 
@@ -1088,7 +1171,7 @@ def _resolution_sweep(qb: QueryBank, tb: PatternStoreBank, lanes: dict,
 
 
 @functools.partial(jax.jit, donate_argnums=(2, 3), static_argnames=(
-    "kpr", "emb_cap", "backend", "wave", "block_f"))
+    "kpr", "emb_cap", "backend", "wave", "block_f", "dma_depth"))
 def run_device_megastep(g: GraphArrays, qb: QueryBank,
                         tb: PatternStoreBank, sb: StackBank,
                         in_root: jax.Array, in_rid: jax.Array,
@@ -1098,7 +1181,8 @@ def run_device_megastep(g: GraphArrays, qb: QueryBank,
                         kpr: int = 8, emb_cap: int = 512,
                         backend: str = "jnp",
                         wave: int | None = None,
-                        block_f: int = 8) -> DeviceResult:
+                        block_f: int = 8,
+                        dma_depth: int | None = None) -> DeviceResult:
     """One dispatch of the device-resident scheduler loop.
 
     Admits root rows into free stack entries, then runs up to ``t_max``
@@ -1243,7 +1327,8 @@ def run_device_megastep(g: GraphArrays, qb: QueryBank,
         is_fresh = (st_sel == STK_FRESH) & row_valid
 
         # ---- expansion (fresh: full Eq.2 pass; LEFT: re-extraction) ----
-        refined = refine_eq2_mq(g, qb, s_of_c, wf, wd, backend, block_f)
+        refined = refine_eq2_mq(g, qb, s_of_c, wf, wd, backend, block_f,
+                                dma_depth)
         refined = jnp.where(is_fresh[:, None], refined, jnp.uint32(0))
         refined_empty = is_fresh & (_popcount_rows(refined) == 0)
 

@@ -74,7 +74,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..api.options import MatchOptions
-from ..kernels.config import get_backend
+from ..kernels.config import (get_backend, kernel_chunk_words,
+                              kernel_dma_depth, use_hbm_adjacency)
 
 _log = logging.getLogger(__name__)
 from ..patterns import (DeadEndStats, PatternCache, PatternStore,
@@ -285,9 +286,41 @@ class WaveScheduler:
         self._ring_capacity = 2 * self.wave_size * (self._mega_kpr + 1)
         self._emb_cap = 2 * self.wave_size * self._mega_kpr
         self.w = (data.n + 31) // 32
-        self.g = GraphArrays(
-            adj_bitmap=jnp.asarray(data.adj_bitmap),
-            n_vertices=jnp.int32(data.n))
+        # adjacency layout (DESIGN.md §2): options pin wins, else the
+        # kernels.config size threshold / tuning record decides. The
+        # hierarchical path never materializes the dense [V, W] block —
+        # at 64K vertices that block alone is 512 MB, the thing the
+        # layout exists to avoid.
+        self._use_hier = (bool(opts.hier_adjacency)
+                          if opts.hier_adjacency is not None
+                          else use_hbm_adjacency(self._kernel_backend,
+                                                 data.n))
+        if self._use_hier:
+            cw = (int(opts.chunk_words) if opts.chunk_words is not None
+                  else kernel_chunk_words(self._kernel_backend, data.n))
+            self._dma_depth = (
+                int(opts.dma_depth) if opts.dma_depth is not None
+                else kernel_dma_depth(self._kernel_backend, data.n))
+            hb = data.hier_bitmap(chunk_words=cw)
+            self._chunk_words = cw
+            self.g = GraphArrays(
+                adj_bitmap=None,
+                n_vertices=jnp.int32(data.n),
+                adj_summary=jnp.asarray(hb.summary),
+                chunk_ptr=jnp.asarray(hb.chunk_ptr),
+                chunk_id=jnp.asarray(hb.chunk_id),
+                chunk_data=jnp.asarray(hb.chunk_data),
+                chunk_pad=jnp.zeros((hb.kmax,), jnp.int32))
+            self.adjacency_variant = "hier-hbm"
+            self.adjacency_bytes = int(hb.nbytes)
+        else:
+            self._chunk_words = 0
+            self._dma_depth = None
+            self.g = GraphArrays(
+                adj_bitmap=jnp.asarray(data.adj_bitmap),
+                n_vertices=jnp.int32(data.n))
+            self.adjacency_variant = "dense-vmem"
+            self.adjacency_bytes = data.n * self.w * 4
         self.qb = QueryBank.empty(self.n_slots, self.w)
         self.tb = PatternStoreBank.empty(self.n_slots,
                                          self.pattern_capacity)
@@ -1467,7 +1500,7 @@ class WaveScheduler:
                 bool(self.pool.learning_enabled), np.int32(t_max),
                 kpr=self._mega_kpr, emb_cap=self._emb_cap,
                 backend=self._kernel_backend, wave=self.wave_size,
-                block_f=self._block_f),
+                block_f=self._block_f, dma_depth=self._dma_depth),
             devq, stacks=True)
         if res is None:
             return None                      # retries exhausted: the
@@ -1743,7 +1776,8 @@ class WaveScheduler:
                 bool(self.pool.learning_enabled),
                 kpr=self._mega_kpr, k_depth=self.megastep_depth,
                 capacity=self._ring_capacity, emb_cap=self._emb_cap,
-                backend=self._kernel_backend, block_f=self._block_f),
+                backend=self._kernel_backend, block_f=self._block_f,
+                dma_depth=self._dma_depth),
             list({q.slot: q for q, *_ in metas}.values()), stacks=False)
         if res is None:
             return None             # retries exhausted: queries demoted
@@ -2029,7 +2063,7 @@ class WaveScheduler:
             res, self.tb = expand_wave_mq(
                 self.g, self.qb, self.tb, fr, us, ph, valid, slot_v,
                 depth_v, kpr=self.kpr, backend=self._kernel_backend,
-                block_f=self._block_f)
+                block_f=self._block_f, dma_depth=self._dma_depth)
             self.t_dispatch_s += time.perf_counter() - t0
             t1 = time.perf_counter()
             digest = dict(
@@ -2251,6 +2285,12 @@ class WaveScheduler:
             "host_retirement_time_s": self.t_retire_s,
             "host_flush_time_s": self.t_flush_s,
             "device_stacks": self._use_device,
+            # adjacency layout (DESIGN.md §2): which refine variant this
+            # engine compiled ("dense-vmem" | "hier-hbm") and what the
+            # resident adjacency costs — the scale bench's headline
+            "adjacency_variant": self.adjacency_variant,
+            "adjacency_bytes": self.adjacency_bytes,
+            "chunk_words": self._chunk_words,
             # bounded hashed Δ store + cross-query template cache
             # (occupancy reads the live bank so every schedule path —
             # single-step included — reports real store pressure)

@@ -20,11 +20,22 @@ step per (row, position) pair. Per grid step the body now runs
 with a dynamic ``pl.ds`` load. The frontier and active matrices are
 scalar-prefetched (SMEM) because their values index the adjacency
 operand; the adjacency bitmap itself is a single whole-array VMEM block
-(packed bitmaps are tiny: V=8192, W_pad=256 is 8 MB — graphs beyond
-VMEM capacity need an HBM + manual-DMA variant, see DESIGN.md §2).
-``W_pad`` is padded to a multiple of 128 lanes, ``F`` to a multiple of
-``BLOCK_F`` sublanes. All words are int32 (bitwise ops are
-sign-agnostic; uint32<->int32 is a bitcast at the wrapper).
+(packed bitmaps are tiny: V=8192, W_pad=256 is 8 MB). ``W_pad`` is
+padded to a multiple of 128 lanes, ``F`` to a multiple of ``BLOCK_F``
+sublanes. All words are int32 (bitwise ops are sign-agnostic;
+uint32<->int32 is a bitcast at the wrapper).
+
+Past ~8K vertices the whole-VMEM block stops fitting, so this file also
+carries the HBM-resident variant :func:`refine_bitmap_rows_hier` over
+the two-level layout (core.graph.HierBitmap, DESIGN.md §2): the chunk
+store stays in ``pltpu.ANY`` (compiler-placed, HBM at scale), the
+wrapper intersects per-row chunk summaries into a live mask, and the
+kernel walks only live chunks, double-buffering each one into VMEM
+scratch with ``make_async_copy`` before AND-folding it into the output
+row. VMEM residency is O(kmax + dma_depth·C) per grid step —
+independent of V. ``kernels/config.py`` owns the dense/hier threshold
+(``use_hbm_adjacency``) plus the ``chunk_words``/``dma_depth`` knob
+resolution.
 
 Backend selection lives in ``kernels/config.py`` — ``interpret=None``
 resolves from the process-wide config, so TPU runs cannot silently fall
@@ -40,7 +51,7 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .config import interpret_mode, kernel_block_f
+from .config import interpret_mode, kernel_block_f, kernel_dma_depth
 
 BLOCK_F = 8     # default sublanes per grid step (int32 min tile height)
                 # — the tuned value resolves through kernels.config
@@ -152,3 +163,221 @@ def refine_bitmap(adj_bitmap: jax.Array, cand_row: jax.Array,
         active.astype(jnp.int32)[None, :], (f, active.shape[0]))
     return refine_bitmap_rows(adj_bitmap, cand_rows, frontier, act,
                               interpret=interpret, block_f=block_f)
+
+
+# --------------------------------------------------------------------------
+# HBM-resident hierarchical variant (two-level layout, DESIGN.md §2)
+# --------------------------------------------------------------------------
+
+def summary_intersect(summary: jax.Array, cand_rows: jax.Array,
+                      frontier: jax.Array, active: jax.Array,
+                      chunk_words: int, w_pad: int
+                      ) -> tuple[jax.Array, jax.Array]:
+    """The first level of the hierarchical refinement, in plain jnp:
+    ``sacc[i] = cand_summary[i] ∧ ⋀_{p active} summary[frontier[i, p]]``
+    plus its expansion to a ``[F, w_pad]`` word mask.
+
+    Summaries are O(V/32C) words per row, so this stays cheap enough to
+    fold outside the kernel; a chunk dead in ``sacc`` is provably zero
+    in the dense result (the candidate chunk was empty, or some active
+    row misses it), which is what licenses the kernel to never read it.
+    Returns ``(sacc int32 [F, SW], mask int32 [F, w_pad])``.
+    """
+    f, np_ = frontier.shape
+    w = cand_rows.shape[1]
+    c = int(chunk_words)
+    sw = summary.shape[1]
+    ncp = sw * 32
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    cand = cand_rows.astype(jnp.uint32)
+    cpad = jnp.zeros((f, ncp * c), jnp.uint32).at[:, :w].set(cand)
+    nonzero = (cpad.reshape(f, ncp, c) != 0).any(axis=2)
+    cand_sum = (nonzero.reshape(f, sw, 32).astype(jnp.uint32)
+                << shifts).sum(axis=2, dtype=jnp.uint32)
+
+    def sbody(p, s):
+        act = (active[:, p] != 0) & (frontier[:, p] >= 0)
+        rows = summary.astype(jnp.uint32)[frontier[:, p].clip(0)]
+        return jnp.where(act[:, None], s & rows, s)
+
+    sacc = lax.fori_loop(0, np_, sbody, cand_sum)
+    livebit = ((sacc[:, :, None] >> shifts) & jnp.uint32(1))
+    mask = jnp.repeat(livebit.reshape(f, ncp), c, axis=1)
+    mask = jnp.zeros((f, w_pad), jnp.uint32).at[:, :min(ncp * c, w_pad)] \
+        .set(mask[:, :w_pad] * jnp.uint32(0xFFFFFFFF))
+    return sacc.astype(jnp.int32), mask.astype(jnp.int32)
+
+
+def _make_refine_hier_kernel(kmax: int, chunk_words: int, depth: int):
+    """Kernel body closure over the layout's static geometry: ``kmax``
+    (stored-chunk window per row), ``chunk_words`` (C) and the DMA
+    pipeline ``depth``."""
+    c = int(chunk_words)
+
+    def _kernel(frontier_ref, active_ref, seg_start_ref, seg_len_ref,
+                sacc_ref, chunk_id_ref, chunk_data_ref, cand_ref,
+                mask_ref, out_ref, ids_buf, data_buf, ring_ref,
+                ids_sem, data_sem):
+        r = pl.program_id(0)
+        np_ = frontier_ref.shape[1]
+        sw = sacc_ref.shape[1]
+        # dead chunks of the candidate row are pre-zeroed so skipping
+        # them below cannot leave stale bits
+        out_ref[...] = cand_ref[...] & mask_ref[...]
+        row_live = sacc_ref[r, 0]
+        for s in range(1, sw):              # static unroll, SW is tiny
+            row_live = row_live | sacc_ref[r, s]
+
+        def drain(slot):
+            """Wait the copy in ``slot`` and AND its chunk into the
+            output row (same-shape descriptor, same semaphore)."""
+            pltpu.make_async_copy(
+                chunk_data_ref.at[pl.ds(0, 1)],
+                data_buf.at[pl.ds(slot, 1)],
+                data_sem.at[slot]).wait()
+            cid = ring_ref[slot, 0]
+            cur = out_ref[0, pl.ds(cid * c, c)]
+            out_ref[0, pl.ds(cid * c, c)] = cur & data_buf[slot, :]
+
+        def pos_body(p, _):
+            vtx = frontier_ref[r, p]
+            act = (active_ref[r, p] != 0) & (vtx >= 0)
+            k0 = seg_start_ref[r, p]
+            nk = seg_len_ref[r, p]
+
+            @pl.when(act & (nk > 0))
+            def _():
+                # stage this row's stored-chunk ids (one contiguous
+                # copy; the store pads kmax rows so the fixed window
+                # never over-runs)
+                pltpu.make_async_copy(
+                    chunk_id_ref.at[pl.ds(k0, kmax)], ids_buf,
+                    ids_sem).start()
+                pltpu.make_async_copy(
+                    chunk_id_ref.at[pl.ds(k0, kmax)], ids_buf,
+                    ids_sem).wait()
+
+                def walk(j, lc):
+                    cid = ids_buf[j, 0]
+                    live = (j < nk) & (
+                        ((sacc_ref[r, cid // 32]
+                          >> lax.rem(cid, 32)) & 1) != 0)
+
+                    def issue(lc):
+                        slot = lax.rem(lc, depth)
+                        # free the slot first: its previous chunk is
+                        # consumed while this one's copy is in flight
+                        @pl.when(lc >= depth)
+                        def _():
+                            drain(slot)
+                        ring_ref[slot, 0] = cid
+                        pltpu.make_async_copy(
+                            chunk_data_ref.at[pl.ds(k0 + j, 1)],
+                            data_buf.at[pl.ds(slot, 1)],
+                            data_sem.at[slot]).start()
+                        return lc + 1
+
+                    return lax.cond(live, issue, lambda lc: lc, lc)
+
+                lc = lax.fori_loop(0, kmax, walk, 0)
+
+                def tail(s, _):
+                    @pl.when(s < jnp.minimum(lc, depth))
+                    def _():
+                        drain(s)
+                    return 0
+
+                lax.fori_loop(0, depth, tail, 0)
+            return 0
+
+        @pl.when(row_live != 0)
+        def _():
+            lax.fori_loop(0, np_, pos_body, 0)
+
+    return _kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "kmax", "depth"))
+def _refine_rows_hier_call(chunk_id, chunk_data, cand, mask, frontier,
+                           active, seg_start, seg_len, sacc,
+                           interpret: bool, kmax: int, depth: int):
+    f_pad, w_pad = cand.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(f_pad,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),     # chunk_id  (HBM)
+            pl.BlockSpec(memory_space=pltpu.ANY),     # chunk_data (HBM)
+            pl.BlockSpec((1, w_pad), lambda i, *_: (i, 0)),
+            pl.BlockSpec((1, w_pad), lambda i, *_: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, w_pad), lambda i, *_: (i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((kmax, 1), jnp.int32),         # staged chunk ids
+            pltpu.VMEM((depth, chunk_data.shape[1]), jnp.int32),
+            pltpu.SMEM((depth, 1), jnp.int32),        # in-flight ids ring
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA((depth,)),
+        ])
+    return pl.pallas_call(
+        _make_refine_hier_kernel(kmax, chunk_data.shape[1], depth),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((f_pad, w_pad), jnp.int32),
+        interpret=interpret,
+    )(frontier, active, seg_start, seg_len, sacc, chunk_id, chunk_data,
+      cand, mask)
+
+
+def refine_bitmap_rows_hier(summary: jax.Array, chunk_ptr: jax.Array,
+                            chunk_id: jax.Array, chunk_data: jax.Array,
+                            kmax: int, cand_rows: jax.Array,
+                            frontier: jax.Array, active: jax.Array,
+                            interpret: bool | None = None,
+                            dma_depth: int | None = None) -> jax.Array:
+    """HBM-paged Eq. 2 refinement over the two-level layout.
+
+    Args:
+      summary:    uint32/int32 [V, SW] per-row chunk summary bitmaps.
+      chunk_ptr:  int32 [V+1] CSR offsets into the chunk store.
+      chunk_id:   int32 [P] stored chunk index per entry (kmax-padded).
+      chunk_data: uint32/int32 [P, C] the stored chunks (kmax-padded).
+      kmax:       static max stored chunks on any row (>= 1).
+      cand_rows / frontier / active: as :func:`refine_bitmap_rows`.
+      dma_depth:  in-flight chunk copies. None resolves through the
+                  tuning layer (kernels.config, DESIGN.md §9).
+
+    The adjacency operands ride in ``pltpu.ANY`` — nothing O(V·W) is
+    staged into VMEM, so the only V-dependent device residency is the
+    O(E)-proportional chunk store itself. Returns int32 [F, W_pad]
+    (caller slices the first W words).
+    """
+    if interpret is None:
+        interpret = interpret_mode(None)
+    v = chunk_ptr.shape[0] - 1
+    if dma_depth is None:
+        dma_depth = kernel_dma_depth(n_vertices=v)
+    dma_depth = max(1, int(dma_depth))
+    kmax = max(1, int(kmax))
+    c = chunk_data.shape[1]
+    f, np_ = frontier.shape
+    w = cand_rows.shape[1]
+    w_pad = max(128, ((w + 127) // 128) * 128)
+    f_pad = max(f, 1)
+    sacc, mask = summary_intersect(summary, cand_rows, frontier, active,
+                                   c, w_pad)
+    fr = jnp.full((f_pad, np_), -1, jnp.int32).at[:f].set(
+        frontier.astype(jnp.int32))
+    act = jnp.zeros((f_pad, np_), jnp.int32).at[:f].set(
+        active.astype(jnp.int32))
+    seg_start = chunk_ptr[fr.clip(0)].astype(jnp.int32)
+    seg_len = (chunk_ptr[fr.clip(0) + 1] - chunk_ptr[fr.clip(0)]) \
+        .astype(jnp.int32)
+    cand = jnp.zeros((f_pad, w_pad), jnp.int32).at[:f, :w].set(
+        cand_rows.astype(jnp.int32))
+    maskp = jnp.zeros((f_pad, w_pad), jnp.int32).at[:f].set(mask)
+    saccp = jnp.zeros((f_pad, sacc.shape[1]), jnp.int32).at[:f].set(sacc)
+    return _refine_rows_hier_call(
+        chunk_id.astype(jnp.int32).reshape(-1, 1),
+        chunk_data.astype(jnp.int32), cand, maskp, fr, act,
+        seg_start, seg_len, saccp, bool(interpret), kmax, dma_depth)

@@ -37,6 +37,19 @@ BACKENDS = ("jnp", "pallas_interpret", "pallas")
 DEFAULT_BLOCK_F = 8     # refine kernel sublanes per grid step
                         # (int32 min tile height; see bitmap_refine.py)
 
+DEFAULT_CHUNK_WORDS = 8  # hierarchical layout: packed words per chunk
+                         # (C) — 256 vertices of coverage per summary bit
+DEFAULT_DMA_DEPTH = 2    # in-flight chunk copies in the HBM refine
+                         # kernel's double-buffered pipeline
+
+# Dense/hierarchical threshold: below this many data-graph vertices the
+# whole-VMEM dense kernel is the fast path (the padded adjacency block
+# fits comfortably — 8K vertices is 8 MB); at or above it the adjacency
+# stays in HBM and the hierarchical kernel pages live chunks into VMEM
+# scratch (DESIGN.md §2). A tuning record or kernel_param_scope override
+# ("hbm_adjacency") wins over the threshold.
+HBM_ADJACENCY_MIN_VERTICES = 16384
+
 # scope-local kernel parameter overrides (kernel_param_scope) — the
 # "explicit arg" level of the tuning resolution order
 _kernel_overrides: dict[str, int] = {}
@@ -93,23 +106,61 @@ def kernel_override(name: str) -> int | None:
     return _kernel_overrides.get(name)
 
 
+def _tuned_param(name: str, backend: str | None,
+                 n_vertices: int | None) -> int | None:
+    """Shared knob lookup: scope override > tuning-cache record for
+    (backend, device kind, |V| bucket) > None (caller's built-in)."""
+    v = _kernel_overrides.get(name)
+    if v is not None:
+        return int(v)
+    if n_vertices is not None \
+            and os.environ.get("REPRO_TUNING_DISABLE") != "1":
+        from ..tuning.cache import device_kind, load_default_cache
+        rec = load_default_cache().lookup(
+            resolve(backend), device_kind(), n_vertices)
+        if rec and name in rec.get("params", {}):
+            return int(rec["params"][name])
+    return None
+
+
 def kernel_block_f(backend: str | None = None,
                    n_vertices: int | None = None) -> int:
     """Resolved ``bitmap_refine`` row-block height: scope override >
     tuning-cache record (needs ``n_vertices`` for the shape bucket) >
     ``DEFAULT_BLOCK_F``. Called at trace time by the kernel wrapper
     when no explicit ``block_f`` argument was passed."""
-    bf = _kernel_overrides.get("block_f")
-    if bf is not None:
-        return int(bf)
-    if n_vertices is not None \
-            and os.environ.get("REPRO_TUNING_DISABLE") != "1":
-        from ..tuning.cache import device_kind, load_default_cache
-        rec = load_default_cache().lookup(
-            resolve(backend), device_kind(), n_vertices)
-        if rec and "block_f" in rec.get("params", {}):
-            return int(rec["params"]["block_f"])
-    return DEFAULT_BLOCK_F
+    v = _tuned_param("block_f", backend, n_vertices)
+    return DEFAULT_BLOCK_F if v is None else v
+
+
+def kernel_chunk_words(backend: str | None = None,
+                       n_vertices: int | None = None) -> int:
+    """Resolved hierarchical chunk width C (words per chunk), same
+    resolution order as :func:`kernel_block_f`."""
+    v = _tuned_param("chunk_words", backend, n_vertices)
+    return DEFAULT_CHUNK_WORDS if v is None else v
+
+
+def kernel_dma_depth(backend: str | None = None,
+                     n_vertices: int | None = None) -> int:
+    """Resolved DMA pipeline depth of the HBM-resident refine kernel
+    (in-flight chunk copies), same resolution order as
+    :func:`kernel_block_f`."""
+    v = _tuned_param("dma_depth", backend, n_vertices)
+    return DEFAULT_DMA_DEPTH if v is None else max(1, v)
+
+
+def use_hbm_adjacency(backend: str | None = None,
+                      n_vertices: int | None = None) -> bool:
+    """Whether refinement should use the hierarchical / HBM-resident
+    layout at this graph size: scope override ("hbm_adjacency", 0/1) >
+    tuning-cache record > the ``HBM_ADJACENCY_MIN_VERTICES``
+    threshold."""
+    v = _tuned_param("hbm_adjacency", backend, n_vertices)
+    if v is not None:
+        return bool(v)
+    return (n_vertices is not None
+            and int(n_vertices) >= HBM_ADJACENCY_MIN_VERTICES)
 
 
 def resolve(backend: str | None) -> str:

@@ -21,12 +21,15 @@ import jax.numpy as jnp
 from . import ref
 from .bitmap_refine import refine_bitmap as _refine_pallas
 from .bitmap_refine import refine_bitmap_rows as _refine_rows_pallas
+from .bitmap_refine import \
+    refine_bitmap_rows_hier as _refine_rows_hier_pallas
 from .bitmap_spmm import bitmap_spmm as _spmm_pallas
 from .config import (backend_scope, get_backend, interpret_mode, resolve,
                      set_backend)
 from .flash_attention import flash_attention as _flash_pallas
 
-__all__ = ["refine_bitmap_op", "refine_bitmap_rows_op", "bitmap_spmm_op",
+__all__ = ["refine_bitmap_op", "refine_bitmap_rows_op",
+           "refine_bitmap_rows_hier_op", "bitmap_spmm_op",
            "flash_attention_op", "get_backend", "set_backend",
            "backend_scope", "DEFAULT_BACKEND"]
 
@@ -52,6 +55,29 @@ def refine_bitmap_rows_op(adj_bitmap, cand_rows, frontier, active,
     out = _refine_rows_pallas(adj_bitmap, cand_rows, frontier, active,
                               interpret=interpret_mode(backend),
                               block_f=block_f)
+    return out[:, :w].astype(jnp.uint32)
+
+
+def refine_bitmap_rows_hier_op(summary, chunk_ptr, chunk_id, chunk_data,
+                               kmax, cand_rows, frontier, active,
+                               backend: str | None = None,
+                               dma_depth: int | None = None):
+    """Eq. 2 refinement over the two-level (hierarchical) adjacency
+    layout — the HBM-resident variant for graphs past the dense
+    kernel's VMEM ceiling (kernels.config.use_hbm_adjacency picks the
+    variant; core.graph.HierBitmap builds the operands). Bit-identical
+    to :func:`refine_bitmap_rows_op` on the same graph. Returns uint32
+    [F, W]."""
+    w = cand_rows.shape[1]
+    if resolve(backend) == "jnp":
+        return ref.refine_bitmap_rows_hier_ref(
+            summary, chunk_ptr, chunk_id, chunk_data, int(kmax),
+            cand_rows, frontier, active)
+    out = _refine_rows_hier_pallas(summary, chunk_ptr, chunk_id,
+                                   chunk_data, int(kmax), cand_rows,
+                                   frontier, active,
+                                   interpret=interpret_mode(backend),
+                                   dma_depth=dma_depth)
     return out[:, :w].astype(jnp.uint32)
 
 

@@ -429,6 +429,38 @@ def _din_cells(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
 
 
 # ================================================================= matcher
+def _hier_graph_structs(v: int, w: int, d: dict):
+    """Shape structs + sharding for the hierarchical adjacency layout
+    (DESIGN.md §2), gated on the cell's ``hier_adjacency`` dims flag.
+
+    The summary shards its vertex axis over the model axis exactly like
+    the dense ``adj_bitmap`` block did; ``chunk_ptr`` and the chunk
+    store are indexed by global offsets, so they replicate — they are
+    O(V) / O(E) words, which is the whole point of the layout next to
+    the O(V²/32) dense block. ``n_stored`` / ``kmax`` / ``chunk_words``
+    are dims knobs so the dry-run can describe a real graph's
+    footprint.
+    """
+    from ..core.engine_step import GraphArrays
+    cw = int(d.get("chunk_words", 8))
+    n_chunks = (w + cw - 1) // cw
+    swn = (n_chunks + 31) // 32
+    kmax = int(d.get("kmax", min(64, max(1, n_chunks))))
+    n_stored = int(d.get("n_stored", v * min(4, max(1, n_chunks)))) + kmax
+    g = GraphArrays(
+        adj_bitmap=None, n_vertices=sds((), jnp.int32),
+        adj_summary=sds((v, swn), jnp.uint32),
+        chunk_ptr=sds((v + 1,), jnp.int32),
+        chunk_id=sds((n_stored,), jnp.int32),
+        chunk_data=sds((n_stored, cw), jnp.uint32),
+        chunk_pad=sds((kmax,), jnp.int32))
+    gspec = GraphArrays(
+        adj_bitmap=None, n_vertices=P(),
+        adj_summary=P("model", None), chunk_ptr=P(None),
+        chunk_id=P(None), chunk_data=P(None, None), chunk_pad=P(None))
+    return g, gspec
+
+
 def _matcher_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
     """Lower the *real* multi-query wave program (``expand_wave_mq``)
     that the shared-wave scheduler dispatches — slot-stacked query banks
@@ -447,8 +479,13 @@ def _matcher_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
     s = d.get("n_slots", 16)
     cap = d.get("pattern_capacity", 65_536)
     dpa = dp(mesh)
-    g = GraphArrays(adj_bitmap=sds((v, w), jnp.uint32),
-                    n_vertices=sds((), jnp.int32))
+    if d.get("hier_adjacency"):
+        g, gspec = _hier_graph_structs(v, w, d)
+    else:
+        g = GraphArrays(adj_bitmap=sds((v, w), jnp.uint32),
+                        n_vertices=sds((), jnp.int32))
+        gspec = GraphArrays(adj_bitmap=P("model", None),
+                            n_vertices=P())
     qb = QueryBank(cand_bitmap=sds((s, N_PAD, w), jnp.uint32),
                    nbr_mask=sds((s, N_PAD, N_PAD), bool),
                    n_query=sds((s,), jnp.int32),
@@ -467,7 +504,6 @@ def _matcher_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
     query_slot = sds((f,), jnp.int32)
     depth = sds((f,), jnp.int32)
 
-    gspec = GraphArrays(adj_bitmap=P("model", None), n_vertices=P())
     # banks replicate the (small) slot axis; the hashed Δ store is
     # O(capacity) — data-graph independent and a few MB at web scale —
     # so it replicates too (the dense [S, N_PAD, V] bank it replaced had
@@ -538,8 +574,13 @@ def _matcher_stack_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
     t_max = d.get("megastep_depth", 6)
     emb_cap = d.get("emb_cap", max(512, f * kpr))
     dpa = dp(mesh)
-    g = GraphArrays(adj_bitmap=sds((v, w), jnp.uint32),
-                    n_vertices=sds((), jnp.int32))
+    if d.get("hier_adjacency"):
+        g, gspec = _hier_graph_structs(v, w, d)
+    else:
+        g = GraphArrays(adj_bitmap=sds((v, w), jnp.uint32),
+                        n_vertices=sds((), jnp.int32))
+        gspec = GraphArrays(adj_bitmap=P("model", None),
+                            n_vertices=P())
     qb = QueryBank(cand_bitmap=sds((s, N_PAD, w), jnp.uint32),
                    nbr_mask=sds((s, N_PAD, N_PAD), bool),
                    n_query=sds((s,), jnp.int32),
@@ -569,7 +610,6 @@ def _matcher_stack_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
     in_valid = sds((f,), bool)
     active = sds((s,), bool)
 
-    gspec = GraphArrays(adj_bitmap=P("model", None), n_vertices=P())
     # the stack is per-slot scheduler state — O(n_slots * depth_cap),
     # data-graph independent — so like the query/store banks it
     # replicates; only the (rare) root lanes are data-sharded

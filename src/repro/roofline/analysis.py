@@ -82,6 +82,11 @@ class Roofline:
     coll_counts: dict
     model_flops: float | None = None
     mem_per_device: float | None = None
+    # operand+result bytes of custom-call instructions (Pallas kernels —
+    # for the HBM-paged refine variant this is the kernel's bytes-moved
+    # attribution, an upper bound on its chunk DMA traffic)
+    custom_call_bytes: float = 0.0
+    custom_call_count: int = 0
 
     @property
     def t_compute(self) -> float:
@@ -115,6 +120,8 @@ class Roofline:
             "hlo_bytes_per_device": self.hlo_bytes,
             "coll_bytes_per_device": self.coll_bytes,
             "coll_counts": self.coll_counts,
+            "custom_call_bytes_per_device": self.custom_call_bytes,
+            "custom_call_count": self.custom_call_count,
             "t_compute_s": self.t_compute,
             "t_memory_s": self.t_memory,
             "t_collective_s": self.t_collective,
@@ -156,4 +163,6 @@ def analyze(arch: str, shape: str, mesh_name: str, chips: int,
     return Roofline(arch=arch, shape=shape, mesh=mesh_name, chips=chips,
                     hlo_flops=flops, hlo_bytes=byts,
                     coll_bytes=total_coll, coll_counts=coll,
-                    model_flops=model_flops, mem_per_device=mem)
+                    model_flops=model_flops, mem_per_device=mem,
+                    custom_call_bytes=float(hc.custom_call_bytes),
+                    custom_call_count=int(hc.custom_call_count))

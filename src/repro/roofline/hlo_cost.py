@@ -14,6 +14,16 @@ three roofline inputs by walking the HLO text:
                   roofline's HBM-traffic model.
   * collectives — result-shape bytes per all-gather/all-reduce/
                   reduce-scatter/all-to-all/collective-permute.
+  * custom-call — operand + result bytes of ``custom-call`` instructions,
+                  tracked both in the HBM total and separately as
+                  ``custom_call_bytes``. Pallas kernels (the bitmap-refine
+                  variants, including the HBM-paged hierarchical one)
+                  lower to ``custom-call``, so this term is the
+                  bytes-moved attribution for hand-written kernels. For
+                  the HBM-resident adjacency the operand bytes are an
+                  upper bound — the kernel DMAs only summary-live chunks —
+                  so the split lets the report say which side of the
+                  traffic XLA cannot see into.
 
 ``while`` instructions multiply their body cost by the trip count parsed
 from the condition computation (jax scans lower to ``iv < const``); when
@@ -34,10 +44,12 @@ _DTYPE_BYTES = {
 _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
-# ops that move no HBM bytes themselves
+# ops that move no HBM bytes themselves (custom-call is NOT free: Pallas
+# kernels lower to it and their operand/result traffic is real — counted
+# below into both `bytes` and the dedicated `custom_call_bytes` term)
 _FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
              "bitcast", "after-all", "partition-id", "replica-id",
-             "opt-barrier", "custom-call"}
+             "opt-barrier"}
 
 _SHAPE_TOKEN = re.compile(r"^(\w+)\[([0-9,]*)\]")
 _INSTR = re.compile(
@@ -155,6 +167,8 @@ class HloCost:
     flops: float = 0.0
     bytes: float = 0.0
     coll_bytes: float = 0.0
+    custom_call_bytes: float = 0.0
+    custom_call_count: int = 0
     coll_by_kind: dict = dataclasses.field(
         default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
     unresolved_loops: int = 0
@@ -163,6 +177,8 @@ class HloCost:
         self.flops += other.flops * mult
         self.bytes += other.bytes * mult
         self.coll_bytes += other.coll_bytes * mult
+        self.custom_call_bytes += other.custom_call_bytes * mult
+        self.custom_call_count += other.custom_call_count
         for k in _COLLECTIVES:
             self.coll_by_kind[k] += other.coll_by_kind[k] * mult
         self.unresolved_loops += other.unresolved_loops
@@ -238,6 +254,16 @@ def cost_of(comps: dict, name: str, memo: dict,
             c.coll_bytes += b
             c.coll_by_kind[kind] += b
             c.bytes += _instr_bytes(comp, ins)
+            continue
+        if ins.op == "custom-call":
+            # Pallas kernel launch: operand + result bytes is the HBM
+            # traffic XLA sees at the call boundary (for the HBM-paged
+            # hierarchical refine kernel this is an upper bound — the
+            # kernel itself DMAs only summary-live chunks)
+            b = _instr_bytes(comp, ins)
+            c.custom_call_bytes += b
+            c.custom_call_count += 1
+            c.bytes += b
             continue
         if ins.op in _FREE_OPS or ins.op.endswith("-done"):
             continue

@@ -46,6 +46,13 @@ SMOKE_DOMAINS = {
     "stack_capacity": [1024],
     "pattern_capacity": [512, 1024],
     "store_flush_min": [16],
+    # adjacency layout pinned dense at the smoke shape (512 vertices is
+    # far below the HBM threshold); chunk_words/dma_depth only matter
+    # when hbm_adjacency=1, so sweeping them here would only multiply
+    # identical measurements
+    "hbm_adjacency": [0],
+    "chunk_words": [8],
+    "dma_depth": [2],
 }
 
 # Full-mode domains: a bounded sweep around the serving defaults.
@@ -57,6 +64,9 @@ FULL_DOMAINS = {
     "stack_capacity": [1024],
     "pattern_capacity": [512, 1024, 4096],
     "store_flush_min": [8, 16],
+    "hbm_adjacency": [0],
+    "chunk_words": [8],
+    "dma_depth": [2],
 }
 
 

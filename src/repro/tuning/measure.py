@@ -144,7 +144,13 @@ def run_smoke_workload(params: dict, backend: str | None = None,
         state["store_load_factor"] = float(stats["store_load_factor"])
         state["prune_rate"] = float(stats["prune_rate"])
 
-    scope = {"block_f": params["block_f"]} if "block_f" in params else {}
+    # kernel-level knobs pin through kernel_param_scope (the engine
+    # knobs above went through MatchOptions): block_f plus the
+    # adjacency-layout knobs, so a measured point exercises exactly the
+    # variant its record would later resolve to
+    scope = {k: params[k] for k in ("block_f", "hbm_adjacency",
+                                    "chunk_words", "dma_depth")
+             if k in params}
     with kconfig.kernel_param_scope(**scope):
         if backend is None:
             timed_trials(one_run, warmup=warmup, trials=trials)

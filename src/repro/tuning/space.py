@@ -16,10 +16,18 @@ invalid points *before* anything compiles:
   backend (int32 min tile is (8, 128) sublanes x lanes); interpret /
   jnp runs accept any height >= 1 (the oracle-equality tests exploit
   this with a deliberately odd block height);
-* a VMEM budget at the given ``(V, W)`` shape: the refine kernel holds
-  the whole padded adjacency bitmap plus one candidate/output row block
-  in VMEM, so points whose working set exceeds the budget are rejected
-  with a reason instead of failing at compile time.
+* a VMEM budget at the given ``(V, W)`` shape: the dense refine kernel
+  (``hbm_adjacency=0``) holds the whole padded adjacency bitmap plus
+  one candidate/output row block in VMEM, so points whose working set
+  exceeds the budget are rejected with a reason instead of failing at
+  compile time. The hierarchical variant (``hbm_adjacency=1``) leaves
+  the adjacency in HBM and only budgets its VMEM scratch — the chunk-id
+  window plus ``dma_depth`` in-flight chunks — so large-V points stay
+  admissible there and the dense rejection explains *why* the layout
+  switches;
+* hierarchical layout knobs: ``chunk_words`` must be a power of two in
+  [1, 128] (the summary packs one bit per chunk into u32 words and the
+  kernel slices chunk-aligned word windows), ``dma_depth >= 1``.
 
 The schema hash over this definition is the staleness key for
 TUNING_CACHE.json: a record written under a different knob schema is
@@ -51,7 +59,7 @@ DEFAULT_VMEM_BUDGET_BYTES = 12 * 1024 * 1024
 # changes meaning — every cached record becomes stale at once.
 _SCHEMA = {
     "version": 1,
-    "constraints": 1,
+    "constraints": 2,
     "knobs": {
         "block_f": [4, 8, 16, 32],
         "megastep_depth": [1, 2, 4, 6, 8, 12],
@@ -60,6 +68,10 @@ _SCHEMA = {
         "stack_capacity": [256, 512, 1024, 2048, 4096],
         "pattern_capacity": [64, 128, 256, 512, 1024, 2048, 4096],
         "store_flush_min": [1, 8, 16, 32, 64],
+        # hierarchical / HBM-resident adjacency (DESIGN.md §2)
+        "hbm_adjacency": [0, 1],
+        "chunk_words": [1, 2, 4, 8, 16, 32],
+        "dma_depth": [1, 2, 4],
     },
 }
 
@@ -103,20 +115,38 @@ class CandidateConfig:
     stack_capacity: int = 1024
     pattern_capacity: int = 1024
     store_flush_min: int = 16
+    hbm_adjacency: int = 0
+    chunk_words: int = 8
+    dma_depth: int = 2
 
     def as_params(self) -> dict:
         return {k: int(getattr(self, k)) for k in KNOB_NAMES}
 
 
 def refine_vmem_bytes(shape: WorkloadShape, block_f: int) -> int:
-    """Resident VMEM bytes of the refine kernel at ``shape``: the whole
-    padded adjacency block plus the candidate and output row blocks
-    (int32 words), mirroring ``bitmap_refine``'s padding rules."""
+    """Resident VMEM bytes of the dense refine kernel at ``shape``: the
+    whole padded adjacency block plus the candidate and output row
+    blocks (int32 words), mirroring ``bitmap_refine``'s padding rules."""
     w_pad = max(128, ((shape.w + 127) // 128) * 128)
     v_pad = ((shape.v + 7) // 8) * 8
     adj = v_pad * w_pad * 4
     row_blocks = 2 * block_f * w_pad * 4        # cand block + out block
     return adj + row_blocks
+
+
+def refine_hier_vmem_bytes(shape: WorkloadShape, chunk_words: int,
+                           dma_depth: int) -> int:
+    """Resident VMEM bytes of the *hierarchical* refine kernel: the
+    adjacency stays in HBM; VMEM holds one candidate + mask + output row
+    (w_pad words each), the row's chunk-id window (worst case every
+    chunk stored: ceil(W/C) ids) and ``dma_depth`` in-flight C-word
+    chunk buffers — mirroring ``bitmap_refine``'s hier scratch shapes."""
+    w_pad = max(128, ((shape.w + 127) // 128) * 128)
+    n_chunks = (shape.w + chunk_words - 1) // chunk_words
+    rows = 3 * w_pad * 4                 # cand + mask + out row
+    ids = n_chunks * 4                   # chunk-id window (kmax ceiling)
+    bufs = dma_depth * chunk_words * 4   # in-flight chunk slots
+    return rows + ids + bufs
 
 
 class TunableSpace:
@@ -136,9 +166,15 @@ class TunableSpace:
         reason. Pure shape arithmetic — nothing here compiles."""
         for name in ("block_f", "megastep_depth", "wave_size", "n_slots",
                      "stack_capacity", "pattern_capacity",
-                     "store_flush_min"):
+                     "store_flush_min", "chunk_words", "dma_depth"):
             if getattr(cfg, name) < 1:
                 return f"{name} must be >= 1"
+        if cfg.hbm_adjacency not in (0, 1):
+            return f"hbm_adjacency={cfg.hbm_adjacency} must be 0 or 1"
+        if cfg.chunk_words > 128 or not _is_pow2(cfg.chunk_words):
+            return (f"chunk_words={cfg.chunk_words} must be a power of "
+                    "two in [1, 128] (summary packs one bit per chunk "
+                    "into u32 words)")
         for name in ("wave_size", "stack_capacity", "pattern_capacity"):
             if not _is_pow2(getattr(cfg, name)):
                 return f"{name}={getattr(cfg, name)} is not a power of two"
@@ -152,6 +188,14 @@ class TunableSpace:
             return (f"stack_capacity={cfg.stack_capacity} below "
                     f"wave_size={cfg.wave_size} (a full wave of fresh "
                     "roots must fit one stack bank)")
+        if cfg.hbm_adjacency:
+            need = refine_hier_vmem_bytes(self.shape, cfg.chunk_words,
+                                          cfg.dma_depth)
+            if need > self.vmem_budget_bytes:
+                return (f"hier refine scratch {need} B exceeds the VMEM "
+                        f"budget {self.vmem_budget_bytes} B at "
+                        f"V={self.shape.v}")
+            return None
         need = refine_vmem_bytes(self.shape, cfg.block_f)
         if need > self.vmem_budget_bytes:
             return (f"refine working set {need} B exceeds the VMEM "

@@ -6,10 +6,11 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.core.graph import pack_bitmap
+from repro.core.graph import build_hier_bitmap, pack_bitmap
 from repro.kernels import ref
 from repro.kernels.ops import (bitmap_spmm_op, flash_attention_op,
-                               refine_bitmap_op, refine_bitmap_rows_op)
+                               refine_bitmap_op, refine_bitmap_rows_op,
+                               refine_bitmap_rows_hier_op)
 
 
 # ---------------------------------------------------------------- refine
@@ -66,6 +67,75 @@ def test_refine_bitmap_no_active_positions():
                            backend="pallas_interpret")
     np.testing.assert_array_equal(
         np.asarray(got), np.broadcast_to(np.asarray(cand), got.shape))
+
+
+# -------------------------------------------------------- hier refine
+def _random_graph_csr(v, seed, density=0.2):
+    """(dense_bool, indptr, indices) of a random symmetric graph."""
+    rng = np.random.default_rng(seed)
+    dense = rng.random((v, v)) < density
+    dense |= dense.T
+    indptr = np.concatenate(
+        ([0], np.cumsum(dense.sum(axis=1)))).astype(np.int64)
+    indices = np.nonzero(dense)[1].astype(np.int64)
+    return dense, indptr, indices
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas_interpret"])
+@pytest.mark.parametrize("v,f,np_,cw,seed", [
+    (48, 6, 5, 1, 0),       # C=1: every chunk is a single word
+    (300, 16, 8, 8, 1),     # default chunk width, W=10 > C
+    (520, 24, 9, 4, 2),     # multi-word rows, F not a block multiple
+    (64, 1, 3, 16, 3),      # C > W: one chunk spans the whole row
+])
+def test_refine_hier_vs_dense_oracle(backend, v, f, np_, cw, seed):
+    """The two-level layout must be *bit-identical* to the dense rowwise
+    oracle on the same graph, for both kernel variants (jnp reference
+    and the HBM-paged Pallas kernel in interpret mode)."""
+    dense, indptr, indices = _random_graph_csr(v, seed)
+    hb = build_hier_bitmap(v, indptr, indices, chunk_words=cw)
+    adj = jnp.asarray(pack_bitmap(dense))
+    rng = np.random.default_rng(seed + 100)
+    cand_rows = jnp.asarray(pack_bitmap(rng.random((f, v)) < 0.5))
+    frontier = jnp.asarray(
+        rng.integers(-1, v, size=(f, np_)).astype(np.int32))
+    active = jnp.asarray((rng.random((f, np_)) < 0.6).astype(np.int32))
+    got = refine_bitmap_rows_hier_op(
+        jnp.asarray(hb.summary), jnp.asarray(hb.chunk_ptr),
+        jnp.asarray(hb.chunk_id), jnp.asarray(hb.chunk_data), hb.kmax,
+        cand_rows, frontier, active, backend=backend)
+    want = ref.refine_bitmap_rows_ref(adj, cand_rows, frontier, active)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("dma_depth", [1, 3])
+def test_refine_hier_dma_depth_moves_time_not_bits(dma_depth):
+    """The DMA pipeline depth is a schedule knob: any depth must return
+    the same words as the dense oracle."""
+    dense, indptr, indices = _random_graph_csr(200, 7)
+    hb = build_hier_bitmap(200, indptr, indices, chunk_words=8)
+    adj = jnp.asarray(pack_bitmap(dense))
+    rng = np.random.default_rng(8)
+    cand_rows = jnp.asarray(pack_bitmap(rng.random((12, 200)) < 0.5))
+    frontier = jnp.asarray(
+        rng.integers(-1, 200, size=(12, 6)).astype(np.int32))
+    active = jnp.asarray((rng.random((12, 6)) < 0.6).astype(np.int32))
+    got = refine_bitmap_rows_hier_op(
+        jnp.asarray(hb.summary), jnp.asarray(hb.chunk_ptr),
+        jnp.asarray(hb.chunk_id), jnp.asarray(hb.chunk_data), hb.kmax,
+        cand_rows, frontier, active, backend="pallas_interpret",
+        dma_depth=dma_depth)
+    want = ref.refine_bitmap_rows_ref(adj, cand_rows, frontier, active)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("cw", [0, 3, 6, 256])
+def test_build_hier_bitmap_rejects_bad_chunk_words(cw):
+    """Non-power-of-two or out-of-range chunk widths must fail at build
+    time (the same constraint tuning/space.py enforces pre-compile)."""
+    _, indptr, indices = _random_graph_csr(64, 0)
+    with pytest.raises(ValueError, match="power of two"):
+        build_hier_bitmap(64, indptr, indices, chunk_words=cw)
 
 
 # ---------------------------------------------------------------- spmm

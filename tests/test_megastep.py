@@ -12,8 +12,9 @@ import pytest
 
 from repro.core.backtrack import backtrack_deadend
 from repro.core.vectorized import WaveScheduler
-from repro.data.graph_gen import (er_labeled_graph, query_set,
-                                  random_walk_query, trap_graph)
+from repro.data.graph_gen import (corridor_graph, er_labeled_graph,
+                                  query_set, random_walk_query,
+                                  trap_graph)
 
 ALWAYS_DEEP = 2.0
 NEVER_DEEP = -1.0
@@ -216,3 +217,55 @@ def test_device_stacks_tiny_capacity_stays_exact():
         res = sched.finished.pop(qid)
         ref = backtrack_deadend(q, data, limit=None)
         assert embset(res.embeddings) == embset(ref.embeddings)
+
+
+# ------------------------------------------------- hierarchical layout
+@pytest.mark.parametrize("depth", [1, 6])
+@pytest.mark.parametrize("workload", ["uniform", "trap", "corridor"])
+def test_hier_adjacency_matches_oracle(workload, depth):
+    """The two-level HBM-paged adjacency layout, forced on via
+    MatchOptions.hier_adjacency, must enumerate exactly the sequential
+    oracle's embedding sets across all three workload archetypes and
+    both megastep depths — the layout is a footprint change, never a
+    result change."""
+    if workload == "uniform":
+        data = er_labeled_graph(35, 100, 3, seed=11)
+        queries = query_set(data, 4, 6, seed=5)
+    elif workload == "trap":
+        query, data = trap_graph(n_b=20, n_c=20, n_good=2, tail_len=2,
+                                 seed=0)
+        queries = [query, query]
+    else:
+        query, data = corridor_graph(n_bait=16, n_spines=2)
+        queries = [query]
+    sched = WaveScheduler(data, n_slots=2, wave_size=32, kpr=4,
+                          megastep_depth=depth,
+                          adaptive_prune_threshold=ALWAYS_DEEP,
+                          hier_adjacency=True)
+    assert sched.scheduler_stats()["adjacency_variant"] == "hier-hbm"
+    qids = [sched.submit(q, limit=None) for q in queries]
+    sched.run()
+    for qid, q in zip(qids, queries):
+        res = sched.finished.pop(qid)
+        want = backtrack_deadend(q, data, limit=None)
+        assert embset(res.embeddings) == embset(want.embeddings)
+
+
+def test_hier_adjacency_matches_dense_layout_bitwise():
+    """Dense-VMEM and hier-HBM schedulers on the same traffic: identical
+    embedding sets *and* identical per-query found counts (refinement is
+    bit-exact, so the whole schedule evolves identically)."""
+    data = er_labeled_graph(40, 120, 3, seed=2)
+    queries = query_set(data, 4, 8, seed=3)
+    legs = {}
+    for hier in (False, True):
+        sched = WaveScheduler(data, n_slots=4, wave_size=32, kpr=4,
+                              megastep_depth=4,
+                              adaptive_prune_threshold=ALWAYS_DEEP,
+                              hier_adjacency=hier, chunk_words=4)
+        qids = [sched.submit(q, limit=None) for q in queries]
+        sched.run()
+        legs[hier] = [sched.finished.pop(qid) for qid in qids]
+    for a, b in zip(legs[False], legs[True]):
+        assert embset(a.embeddings) == embset(b.embeddings)
+        assert a.stats.found == b.stats.found

@@ -51,6 +51,18 @@ def test_space_rejects_invalid_points_before_compile():
     r = space.validate(CandidateConfig(megastep_depth=0))
     assert r is not None and ">= 1" in r
 
+    # hierarchical layout knobs: C must be a power of two in [1, 128]
+    # (C=1 is the degenerate-but-legal one-word-chunk layout)
+    assert space.validate(CandidateConfig(chunk_words=1)) is None
+    r = space.validate(CandidateConfig(chunk_words=3))
+    assert r is not None and "chunk_words" in r and "power of two" in r
+    r = space.validate(CandidateConfig(chunk_words=256))
+    assert r is not None and "chunk_words" in r
+    r = space.validate(CandidateConfig(dma_depth=0))
+    assert r is not None and ">= 1" in r
+    r = space.validate(CandidateConfig(hbm_adjacency=2))
+    assert r is not None and "hbm_adjacency" in r
+
     # block_f tiling: only the compiled pallas backend demands the
     # sublane multiple — interpret and jnp accept odd heights
     odd = CandidateConfig(block_f=12)
@@ -66,6 +78,11 @@ def test_space_rejects_invalid_points_before_compile():
         "pallas", big).vmem_budget_bytes
     r = TunableSpace("pallas", big).validate(CandidateConfig())
     assert r is not None and "VMEM" in r
+    # ... which is exactly the regime the hierarchical layout exists
+    # for: the same shape passes when the adjacency stays in HBM and
+    # only the paging scratch must fit
+    assert TunableSpace("pallas", big).validate(
+        CandidateConfig(hbm_adjacency=1)) is None
 
 
 def test_space_enumeration_partitions_cross_product():
@@ -73,7 +90,8 @@ def test_space_enumeration_partitions_cross_product():
     domains = {"block_f": [4, 8], "megastep_depth": [2, 6],
                "wave_size": [64], "n_slots": [8],
                "stack_capacity": [1024], "pattern_capacity": [4, 1024],
-               "store_flush_min": [16]}
+               "store_flush_min": [16], "hbm_adjacency": [0],
+               "chunk_words": [8], "dma_depth": [2]}
     valid = space.candidates(overrides=domains)
     assert len(valid) + len(space.rejected) == 2 * 2 * 2
     # block_f=4 (sublane) and pattern_capacity=4 (probe floor) are out
