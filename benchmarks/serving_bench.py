@@ -115,6 +115,12 @@ def run(csv_rows: list | None = None, budget_s: float = 90.0,
         "timeouts": int(sum(r.timed_out for r in results)),
         "p50_ms": rep["p50_ms"],
         "p99_ms": rep["p99_ms"],
+        # live-load gauges + absorbed-backpressure tally (zero queued /
+        # resident after a drained batch; the serving tier's /slo
+        # endpoint exports the same keys mid-flight)
+        "queue_depth": rep["queue_depth"],
+        "resident_queries": rep["resident_queries"],
+        "backpressure_absorbed": rep["backpressure_absorbed"],
         # streaming SLO: time to first embedding (recorded per query by
         # the scheduler's incremental delivery, DESIGN.md §4) — always
         # strictly below the completion latency on this workload

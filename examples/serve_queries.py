@@ -11,6 +11,16 @@ before completion) and cancels a second submission mid-flight; a
 distributed trap match with full Δ sharing closes the demo.
 
     PYTHONPATH=src python examples/serve_queries.py [--n-queries 50]
+
+With ``--server host:port`` the same workload is driven through a live
+serving-tier process (DESIGN.md §10) instead of an in-process
+``QueryServer``: the client reads the resident graph's generator
+recipe from ``/healthz``, rebuilds the identical graph locally to
+craft valid queries, then streams them over the NDJSON wire:
+
+    PYTHONPATH=src python -m repro.server.launch --port 8421 &
+    PYTHONPATH=src python examples/serve_queries.py --server \\
+        127.0.0.1:8421 --n-queries 20
 """
 import argparse
 import json
@@ -45,12 +55,78 @@ from repro.data.graph_gen import query_set, yeast_like_graph, trap_graph
 from repro.serving import QueryServer
 
 
+def run_against_server(target: str, n_queries: int,
+                       query_size: int) -> None:
+    """Drive the workload through a live serving-tier process over
+    HTTP: rebuild the server's resident graph from the generator
+    recipe on ``/healthz``, stream one query (TTFE vs completion),
+    then run the rest through the blocking client and print the
+    server-side SLO gauges."""
+    import time
+
+    from repro.server.client import ServeClient
+    from repro.server.server_args import ServerArgs
+
+    host, _, port = target.rpartition(":")
+    cli = ServeClient(host or "127.0.0.1", int(port))
+    health = cli.health()
+    gi = health["graph"]
+    print(f"server {target}: graph={gi['kind']} |V|={gi['n_vertices']} "
+          f"|E|={gi['n_edges']} labels={gi['n_labels']} "
+          f"draining={health['draining']}")
+    data = ServerArgs(graph=gi["kind"], graph_n=gi["n"],
+                      graph_m=gi["m"], graph_labels=gi["labels"],
+                      graph_extra_edges=gi["extra_edges"],
+                      graph_seed=gi["seed"]).build_graph()
+    assert data.n == gi["n_vertices"], "graph recipe mismatch"
+    queries = query_set(data, query_size, max(n_queries, 2), seed=42)
+
+    # one streamed query: embeddings arrive while the search is still
+    # backtracking, exactly like MatchHandle.stream() in-process
+    n_rows = n_chunks = 0
+    ttfe = None
+    t0 = time.perf_counter()
+    for ev in cli.stream(queries[0], tenant="example"):
+        if ev["event"] == "chunk" and ev["rows"]:
+            if n_chunks == 0:
+                ttfe = time.perf_counter() - t0
+            n_chunks += 1
+            n_rows += len(ev["rows"])
+        elif ev["event"] == "done":
+            done = ev["result"]
+    wall = time.perf_counter() - t0
+    print(f"streamed query 0: {n_rows} embeddings over {n_chunks} "
+          f"chunks; TTFE {ttfe * 1e3:.0f}ms vs completion "
+          f"{wall * 1e3:.0f}ms ({done['status']})")
+
+    t0 = time.perf_counter()
+    statuses: dict[str, int] = {}
+    found = 0
+    for i, q in enumerate(queries[1:], start=1):
+        rows, res = cli.match(q, tenant="example", request_id=i)
+        statuses[res["status"]] = statuses.get(res["status"], 0) + 1
+        found += len(rows)
+    wall = time.perf_counter() - t0
+    n = len(queries) - 1
+    print(f"served {n} blocking queries over the wire: {found} "
+          f"embeddings, statuses={statuses} ({n / wall:.1f} qps)")
+    slo = cli.slo()
+    print(f"server SLO: queue_depth={slo['queue_depth']} "
+          f"resident={slo['resident_queries']} "
+          f"backpressure_absorbed={slo['backpressure_absorbed']}"
+          + (f" p50={slo['p50_ms']:.1f}ms p99={slo['p99_ms']:.1f}ms"
+             if "p50_ms" in slo else ""))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n-queries", type=int, default=50)
     ap.add_argument("--query-size", type=int, default=10)
     ap.add_argument("--backend", default="engine",
                     choices=["sequential", "engine"])
+    ap.add_argument("--server", default=None, metavar="HOST:PORT",
+                    help="drive a live repro.server.launch process "
+                         "over HTTP instead of the in-process engine")
     # default None, NOT a number: an always-explicit argparse default
     # used to pin every run to n_slots=32/wave_size=256, so the server
     # never resolved the tuned configuration the committed
@@ -64,6 +140,10 @@ def main():
                     help="rows per device wave; default: tuned/built-in "
                          "resolution")
     args = ap.parse_args()
+    if args.server is not None:
+        run_against_server(args.server, args.n_queries,
+                           args.query_size)
+        return
     knobs = {k: v for k, v in (("n_slots", args.n_slots),
                                ("wave_size", args.wave_size))
              if v is not None}

@@ -29,6 +29,9 @@ Environment knobs:
 * ``AB_SCALE_MIN_RATIO`` — failure threshold on the scale leg's
   hierarchical/dense qps ratio at 8K vertices (default ``0.9``)
 * ``AB_SCALE_SKIP=1`` — skip only the scale leg
+* ``AB_SERVER_MIN_RATIO`` — failure threshold on the serving tier's
+  through-the-wire/in-process goodput ratio (default ``0.6``)
+* ``AB_SERVER_SKIP=1`` — skip only the server-overhead leg
 
 Besides the old-vs-new smoke ratio, the gate runs a *same-tree* scale
 leg: one 8K-vertex power-law graph served under both adjacency layouts
@@ -36,6 +39,18 @@ leg: one 8K-vertex power-law graph served under both adjacency layouts
 least ``AB_SCALE_MIN_RATIO`` of the dense layout's qps at a size where
 both fit — the HBM-paged kernel buys footprint, and this pins how much
 throughput it is allowed to cost.
+
+A second same-tree leg pins the network serving tier's overhead
+(DESIGN.md §10): ``load_bench --smoke --launch --rate 0`` drives the
+real server process over HTTP with a closed-loop burst on the smoke
+shapes, and the through-the-wire goodput must hold at least
+``AB_SERVER_MIN_RATIO`` of the server's *own* in-process baseline
+(the warm full-batch qps it measures at the end of warmup and
+announces on its READY line — same engine instance, same compiled
+programs, same queries, so the ratio isolates the wire, not container
+noise). HTTP + JSON + tenant admission may tax throughput, and this
+bounds the tax. The ratio lands in the same ``ab_history`` record as
+``server_overhead``.
 
 The gate skips gracefully (exit 0, with a message) when the baseline ref
 does not resolve (shallow clone, first commit) or its bench fails to
@@ -119,6 +134,51 @@ def _scale_gate() -> int:
     return 0
 
 
+def _server_overhead() -> tuple[float | None, int]:
+    """Same-tree wire-vs-in-process goodput ratio: the serving tier's
+    end-to-end tax (HTTP parse, NDJSON streaming, tenant admission,
+    engine-thread handoff) measured as a closed burst through the real
+    server process. The denominator is the server's *own* in-process
+    baseline batch (same engine instance, same compiled programs, same
+    query set — measured during warmup and announced on the READY
+    line), so the ratio isolates the wire, not container noise.
+    Returns (ratio, exit_code)."""
+    if os.environ.get("AB_SERVER_SKIP") == "1":
+        print("ab_gate: server leg skipped (AB_SERVER_SKIP=1)")
+        return None, 0
+    min_ratio = float(os.environ.get("AB_SERVER_MIN_RATIO", "0.6"))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.load_bench", "--smoke",
+         "--launch", "--rate", "0", "--n-requests", "32",
+         "--repeats", "3"],
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=1800)
+    if out.returncode != 0:
+        print("ab_gate: server leg FAIL — load_bench errored:\n"
+              f"{out.stderr[-2000:]}", file=sys.stderr)
+        return None, 1
+    payload = json.loads(out.stdout)
+    if payload["errors"]:
+        print(f"ab_gate: server leg FAIL — {payload['errors']} wire "
+              "requests errored", file=sys.stderr)
+        return None, 1
+    ratio = payload.get("server_overhead")
+    if ratio is None:
+        print("ab_gate: server leg FAIL — payload carries no "
+              "server_overhead (no in-process baseline on the READY "
+              "line?)", file=sys.stderr)
+        return None, 1
+    print(f"ab_gate: server leg wire={payload['goodput_qps']:.1f} qps "
+          f"vs in-process={payload['inprocess_qps']:.1f} qps, "
+          f"server_overhead={ratio:.3f} (threshold {min_ratio})")
+    if ratio < min_ratio:
+        print(f"ab_gate: server leg FAIL — wire/in-process goodput "
+              f"ratio {ratio:.3f} < {min_ratio}", file=sys.stderr)
+        return ratio, 1
+    return ratio, 0
+
+
 def main() -> int:
     if os.environ.get("AB_SKIP") == "1":
         print("ab_gate: skipped (AB_SKIP=1)")
@@ -192,11 +252,18 @@ def main() -> int:
                 subprocess.TimeoutExpired) as e:
             print(f"ab_gate: tuned-vs-default leg skipped ({e})")
 
+    # serving-tier overhead leg (DESIGN.md §10): measured before the
+    # record is written so the wire/in-process ratio is versioned in
+    # ab_history even when it fails the gate below
+    server_ratio, server_rc = _server_overhead()
+
     head = _git("rev-parse", "--short", "HEAD").stdout.strip()
     record = {"commit": head, "qps_ratio": round(ratio, 4),
               "host_frac": round(new_payload.get("host_frac", 0.0), 4)}
     if tuned_ratio is not None:
         record["tuned_ratio"] = round(tuned_ratio, 4)
+    if server_ratio is not None:
+        record["server_overhead"] = round(server_ratio, 4)
     if retried:
         record["retried"] = True
     if BENCH.exists():
@@ -212,6 +279,8 @@ def main() -> int:
         print(f"ab_gate: FAIL — qps ratio {ratio:.3f} < {min_ratio}",
               file=sys.stderr)
         return 1
+    if server_rc:
+        return server_rc
     return _scale_gate()
 
 

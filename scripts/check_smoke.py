@@ -26,6 +26,14 @@ host fallback.
 variant per leg, both-layout sizes enumerated bit-identical embedding
 sets, and past-the-ceiling sizes ran hierarchical-only with a peak
 device footprint under 10% of the dense-equivalent adjacency block.
+
+``--server`` validates the ``load_bench --smoke`` payload from the
+network serving tier (DESIGN.md §10): every request reached a terminal
+status over the wire, zero unexplained errors, at least one streamed
+chunk arrived strictly before completion for every row-producing query
+(TTFE < latency — the wire genuinely streams), and the server's /slo
+endpoint exported the live gauges (queue_depth, resident_queries,
+backpressure_absorbed).
 """
 import argparse
 import json
@@ -52,6 +60,9 @@ REQUIRED = [
     # autotuning (DESIGN.md §9): the payload must name the tuning
     # record the server resolved
     "tuning",
+    # live-load gauges + absorbed-backpressure tally from slo_report
+    # (the serving tier's /slo endpoint re-exports these)
+    "queue_depth", "resident_queries", "backpressure_absorbed",
     "trap_workload", "distributed_workload", "repeated_template_workload",
 ]
 REQUIRED_TEMPLATE = [
@@ -86,6 +97,15 @@ SCALE_ENTRY_REQUIRED = [
 # hierarchical peak footprint must stay under this fraction of the
 # dense-equivalent adjacency block at past-the-ceiling sizes
 SCALE_PEAK_FRAC_MAX = 0.1
+SERVER_REQUIRED = [
+    "open_loop", "target_rate_qps", "n_requests", "wall_time_s",
+    "goodput_qps", "statuses", "shed", "errors", "p50_ms", "p99_ms",
+    "ttfe_p50_ms", "ttfe_p99_ms", "total_rows", "per_tenant",
+    "fairness_jain", "queries", "server", "server_slo",
+]
+# the satellite gauges must survive the wire to /slo
+SERVER_SLO_GAUGES = ("queue_depth", "resident_queries",
+                     "backpressure_absorbed")
 
 
 def _check_tuning(payload) -> str | None:
@@ -261,6 +281,74 @@ def check_scale(payload) -> int:
     return 0
 
 
+def check_server(payload) -> int:
+    missing = [k for k in SERVER_REQUIRED if k not in payload]
+    if missing:
+        print(f"server payload missing keys: {missing}", file=sys.stderr)
+        return 1
+    queries = payload["queries"]
+    if not isinstance(queries, list) or not queries:
+        print("server payload 'queries' must be a non-empty list",
+              file=sys.stderr)
+        return 1
+    streamed_before_done = 0
+    for r in queries:
+        if r.get("status") not in STATUSES:
+            print(f"server request {r.get('i')}: non-terminal or "
+                  f"unknown status {r.get('status')!r} — a wire "
+                  "request hung or died untyped", file=sys.stderr)
+            return 1
+        if r.get("n_rows", 0) > 0:
+            # the streaming SLO, measured through the wire: every
+            # row-producing query must have seen >= 1 chunk strictly
+            # before its terminal event
+            if r.get("n_chunks", 0) < 1 or r.get("ttfe_ms") is None \
+                    or not r["ttfe_ms"] < r["latency_ms"]:
+                print(f"server request {r.get('i')}: rows="
+                      f"{r['n_rows']} but chunks={r.get('n_chunks')} "
+                      f"ttfe={r.get('ttfe_ms')} !< latency="
+                      f"{r.get('latency_ms')} — the wire is not "
+                      "streaming mid-flight", file=sys.stderr)
+                return 1
+            streamed_before_done += 1
+    if streamed_before_done < 1:
+        print("server smoke produced zero row-producing queries — the "
+              "streaming assertion is vacuous", file=sys.stderr)
+        return 1
+    if payload["errors"] != 0:
+        bad = [r for r in queries if r["status"] == "error"]
+        print(f"server smoke: {payload['errors']} unexplained errors, "
+              f"e.g. {bad[0].get('error')!r}", file=sys.stderr)
+        return 1
+    if len(payload["per_tenant"]) < 2:
+        print("server smoke ran fewer than 2 tenants — multi-tenant "
+              "admission untested", file=sys.stderr)
+        return 1
+    fair = payload["fairness_jain"]
+    if not isinstance(fair, float) or not (0.0 < fair <= 1.0 + 1e-9):
+        print(f"server smoke: fairness_jain={fair!r} out of (0, 1]",
+              file=sys.stderr)
+        return 1
+    slo = payload["server_slo"]
+    for k in SERVER_SLO_GAUGES:
+        rep = slo.get("report", slo)
+        if not isinstance(rep.get(k), int) or rep[k] < 0:
+            print(f"server /slo missing live gauge {k!r} "
+                  f"(got {rep.get(k)!r})", file=sys.stderr)
+            return 1
+    print("load_bench --smoke: OK "
+          f"(n={payload['n_requests']}, "
+          f"rate={payload['target_rate_qps']:g}qps, "
+          f"goodput={payload['goodput_qps']:.1f}qps, "
+          f"statuses={payload['statuses']}, "
+          f"streamed_before_done={streamed_before_done}, "
+          f"ttfe_p50={payload['ttfe_p50_ms']:.0f}ms vs "
+          f"p50={payload['p50_ms']:.0f}ms, "
+          f"tenants={sorted(payload['per_tenant'])}, "
+          f"fairness={fair:.3f})")
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     mode = ap.add_mutually_exclusive_group()
@@ -268,12 +356,17 @@ def main() -> int:
                       help="validate the --chaos recovery payload instead")
     mode.add_argument("--scale", action="store_true",
                       help="validate the --scale sweep payload instead")
+    mode.add_argument("--server", action="store_true",
+                      help="validate the load_bench --smoke serving-tier "
+                           "payload instead")
     args = ap.parse_args()
     payload = json.load(sys.stdin)
     if args.chaos:
         return check_chaos(payload)
     if args.scale:
         return check_scale(payload)
+    if args.server:
+        return check_server(payload)
     missing = [k for k in REQUIRED if k not in payload]
     if missing:
         print(f"smoke payload missing keys: {missing}", file=sys.stderr)

@@ -44,6 +44,16 @@ python -m benchmarks.serving_bench --smoke --scale | python scripts/check_smoke.
 # the injected digest corruption must be caught by the validator, and
 # at least one query must recover through the host fallback.
 python -m benchmarks.serving_bench --smoke --chaos | python scripts/check_smoke.py --chaos
+# network serving tier smoke (DESIGN.md §10): load_bench --launch owns
+# the whole server lifecycle — spawn `python -m repro.server.launch` on
+# a free port, wait for the READY line, drive an open-loop Poisson
+# request stream over HTTP through two tenants, then SIGTERM (graceful
+# drain) and reap, teardown running even when the bench fails.
+# check_smoke --server asserts every request ended in a terminal typed
+# status over the wire, zero unexplained errors, >= 1 streamed chunk
+# strictly before completion for every row-producing query, and that
+# /slo exported the live gauges.
+python -m benchmarks.load_bench --smoke --launch | python scripts/check_smoke.py --server
 # normalized old-vs-new A/B perf gate: both trees benched back-to-back
 # in this container, only the qps *ratio* is thresholded (absolute
 # smoke qps has moved ~2x between containers). Appends a

@@ -69,6 +69,11 @@ class QueryServer:
         self.n_cancelled = 0
         self.n_errors = 0
         self.n_shed = 0
+        # QueueFull events absorbed by submit_batch's drain-and-retry
+        # loop. Backpressure is *not* shedding — the query still runs —
+        # but the serving tier needs the count to distinguish "dropped"
+        # from "retried later" when sizing admission queues.
+        self.n_backpressure = 0
         self.session.on_complete = self._record
 
     # convenience views of the resolved per-query defaults
@@ -165,24 +170,44 @@ class QueryServer:
                     break
                 except QueueFull:
                     # bounded-queue backpressure: drain one unit of
-                    # work, freeing queue space, then retry
+                    # work, freeing queue space, then retry — counted,
+                    # never silent (surfaced as slo_report's
+                    # backpressure_absorbed)
+                    self.n_backpressure += 1
                     if not self.step():
                         raise
         return [h.result() for h in handles]
 
     # ------------------------------------------------------------------
     def slo_report(self) -> dict:
+        # instantaneous-load gauges (always present, even before the
+        # first completion — the serving tier's /slo endpoint reports
+        # live state, not just terminal-state tallies): queue_depth =
+        # requests admitted but not yet resident, resident_queries =
+        # queries currently occupying engine slots (sequential: the
+        # in-flight worker count).
+        if self.scheduler is not None:
+            gauges = {"queue_depth": len(self.scheduler.queue),
+                      "resident_queries": int(self.scheduler.pool.n_active)}
+        else:
+            self.session._workers = {w for w in self.session._workers
+                                     if w.is_alive()}
+            gauges = {"queue_depth": len(self.session._pending),
+                      "resident_queries": len(self.session._workers)}
         lat = np.asarray(self.latencies)
         if len(lat) == 0:
-            return {}
+            return {"n": 0, **gauges,
+                    "backpressure_absorbed": int(self.n_backpressure)}
         rep = {"n": len(lat),
+               **gauges,
                "p50_ms": float(np.percentile(lat, 50) * 1e3),
                "p99_ms": float(np.percentile(lat, 99) * 1e3),
                "mean_ms": float(lat.mean() * 1e3),
                "timeouts": int(self.n_timeouts),
                "cancelled": int(self.n_cancelled),
                "errors": int(self.n_errors),
-               "shed": int(self.n_shed)}
+               "shed": int(self.n_shed),
+               "backpressure_absorbed": int(self.n_backpressure)}
         # time-to-first-embedding percentiles (queries that found >= 1
         # embedding): the streaming SLO — how long until a consumer of
         # MatchHandle.stream() sees its first batch
